@@ -1,0 +1,127 @@
+"""Fig. 5 reproduction: PUT/GET bandwidth vs transfer size × packet size.
+
+Sources, kept carefully separate (DESIGN §2):
+  model  — the analytic QSFP+ netmodel calibrated on the paper's constants;
+           the assertions below are the paper's own quantitative claims.
+  ici    — the same mechanism with TPU-v5e ICI constants (projection).
+  mesh   — measured wall-clock of the real ``fshmem_put`` collective on a
+           2-device CPU mesh (functional path only; CPU numbers are never
+           reported as TPU performance).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import netmodel as nm
+
+PACKETS = (128, 256, 512, 1024)
+SIZES = tuple(4 * 2 ** i for i in range(20))        # 4 B .. 2 MB
+
+
+def rows():
+    out = []
+    link = nm.FSHMEM_QSFP
+    for p in PACKETS:
+        for s in SIZES:
+            out.append({
+                "source": "model-qsfp", "packet": p, "size": s,
+                "put_MBps": nm.put_bandwidth(link, s, p) / 1e6,
+                "get_MBps": nm.get_bandwidth(link, s, p) / 1e6,
+            })
+    ici = nm.TPU_ICI
+    for s in SIZES:
+        out.append({
+            "source": "model-ici", "packet": 4096, "size": s,
+            "put_MBps": nm.put_bandwidth(ici, s, 4096) / 1e6,
+            "get_MBps": nm.get_bandwidth(ici, s, 4096) / 1e6,
+        })
+    return out
+
+
+def verify_paper_claims() -> dict:
+    """The quantitative claims of Fig. 5 / Sec. IV-C, asserted."""
+    link = nm.FSHMEM_QSFP
+    peak = {p: nm.put_bandwidth(link, 2 << 20, p) / 1e6 for p in PACKETS}
+    claims = {
+        "peak_512_1024_MBps": round(min(peak[512], peak[1024])),
+        "peak_over_95pct_of_max": min(peak[512], peak[1024]) > 0.95 * 4000,
+        "peak_128_MBps": round(peak[128]),
+        "peak_256_MBps": round(peak[256]),
+        "half_saturation_B": nm.half_saturation_size(link, 1024),
+        "saturation_95_B": nm.saturation_size(link, 1024),
+        "get_vs_put_2KB_pct": round(
+            100 * (1 - nm.get_bandwidth(link, 2048, 1024)
+                   / nm.put_bandwidth(link, 2048, 1024))),
+        "get_vs_put_8KB_pct": round(
+            100 * (1 - nm.get_bandwidth(link, 8192, 1024)
+                   / nm.put_bandwidth(link, 8192, 1024))),
+        "speedup_vs_prior_400MBps": round(peak[1024] / 400, 1),
+    }
+    # paper: 3813 MB/s peak (>95 %), 2621 @128B, 3419 @256B, half-sat ~2 KB,
+    # sat ~32 KB, GET −20 % @2 KB / −8 % @8 KB, 9.5× over 400 MB/s
+    assert abs(claims["peak_512_1024_MBps"] - 3813) <= 40, claims
+    assert claims["peak_over_95pct_of_max"]
+    assert abs(claims["peak_128_MBps"] - 2621) <= 60, claims
+    assert abs(claims["peak_256_MBps"] - 3419) <= 60, claims
+    assert 1024 <= claims["half_saturation_B"] <= 4096, claims
+    assert 16384 <= claims["saturation_95_B"] <= 65536, claims
+    assert 15 <= claims["get_vs_put_2KB_pct"] <= 25, claims
+    assert 5 <= claims["get_vs_put_8KB_pct"] <= 11, claims
+    assert 9.0 <= claims["speedup_vs_prior_400MBps"] <= 10.0, claims
+    return claims
+
+
+def measured_mesh_put(n_iters: int = 50) -> dict:
+    """Functional-path wall clock of fshmem_put on a host mesh (2 ranks)."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import pgas
+
+    if len(jax.devices()) < 2:
+        return {"source": "mesh-cpu", "note": "single device; skipped"}
+    mesh = jax.make_mesh((2,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    size = 1 << 16
+    heap = pgas.SymmetricHeap(size)
+    gas = pgas.GlobalAddressSpace(mesh, "x", heap)
+    g = gas.zeros_global()
+
+    def f(h):
+        payload = h[: size // 2]
+        return pgas.put(h, payload, size // 2, axis="x",
+                        perm=[(0, 1), (1, 0)])
+
+    fn = gas.run(f)
+    fn(g).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n_iters):
+        g = fn(g)
+    g.block_until_ready()
+    dt = (time.perf_counter() - t0) / n_iters
+    return {"source": "mesh-cpu", "bytes": size // 2 * 4,
+            "us_per_put": dt * 1e6,
+            "MBps_functional": size // 2 * 4 / dt / 1e6}
+
+
+def main(write_csv: bool = True):
+    claims = verify_paper_claims()
+    print("bandwidth: paper-claim verification PASS")
+    for k, v in claims.items():
+        print(f"  {k}: {v}")
+    m = measured_mesh_put()
+    print(f"  {m}")
+    if write_csv:
+        import csv, os
+        os.makedirs("results", exist_ok=True)
+        with open("results/bandwidth.csv", "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows()[0]))
+            w.writeheader()
+            w.writerows(rows())
+        print("  curves -> results/bandwidth.csv")
+    return claims
+
+
+if __name__ == "__main__":
+    main()

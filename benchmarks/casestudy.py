@@ -1,0 +1,154 @@
+"""Fig. 6/7 reproduction: 2-node parallel matmul (ART) + convolution.
+
+Two parts, kept separate per DESIGN §2:
+
+1. **Functional**: the exact Fig. 6 schedules — ART-chunked matmul with
+   partial-sum exchange and kernel-split convolution with end-sync — run on
+   a real 2-device mesh and are asserted allclose against single-node math.
+
+2. **Modeled speedup**: Fig. 7's trends from the analytic model.  Constants:
+   the paper reports 979.4 GOPS single-node at "95.6 % of the theoretical
+   maximum" ⇒ DLA peak = 1024 GOPS (the 16×8 PE array retires 8 MACs/PE/
+   cycle at 250 MHz); activations/results move as 8-bit (the DLA's
+   low-precision inference datapath), partial-sum exchange ART-chunked over
+   the 3.813 GB/s QSFP+ link; conv pays its exchange exposed at the end.
+   Reproduced: magnitudes (~1.9–2.0×), speedup growth with problem size,
+   and conv never reaching 2×.  NOT reproduced: the paper's conv-avg >
+   matmul-avg ordering — under uniform constants the conv end-sync costs
+   slightly more than the ART-hidden matmul exchange at these sizes; the
+   per-size Fig. 7 values are not published, so the ordering cannot be
+   calibrated further without guessing (recorded in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+from repro.configs.fshmem_case_study import config as CS
+from repro.core import netmodel as nm
+
+DLA_GOPS_PEAK = 1024.0      # 979.4 GOPS measured = 95.6 % of this (Sec. V)
+DLA_UTIL = 0.956            # paper Sec. V
+DATA_BYTES = 1              # low-precision DLA datapath
+
+
+def _matmul_times(size: int):
+    """(single-node s, two-node s) for size×size×size matmul."""
+    flops = 2.0 * size ** 3
+    t1 = flops / (DLA_GOPS_PEAK * 1e9 * DLA_UTIL)
+    # two nodes: half the FLOPs each; exchange this node's half of the
+    # partial sums (size × size/2), ART-chunked under the remaining compute
+    t_half = t1 / 2
+    comm = size * (size // 2) * DATA_BYTES / nm.FSHMEM_QSFP.peak_bandwidth
+    t_msg = nm.FSHMEM_QSFP.latency.put_long
+    t2 = nm.art_time(t_half, comm, t_msg, CS.art_chunks)
+    return t1, t2
+
+
+def _conv_times(n_k: int, ksz: int):
+    """Conv 64×64 fmaps, n_k kernels of ksz×ksz×n_k (paper's sets)."""
+    h = w = CS.conv_fmap
+    cin = n_k            # paper: e.g. 3×3×256 with 256 kernels
+    ho, wo = h - ksz + 1, w - ksz + 1
+    flops = 2.0 * ho * wo * ksz * ksz * cin * n_k
+    t1 = flops / (DLA_GOPS_PEAK * 1e9 * DLA_UTIL)
+    # kernel-split: each node computes half the output channels, then the
+    # halves are exchanged and concatenated at the END (not overlapped).
+    t_half = t1 / 2
+    out_bytes = ho * wo * (n_k // 2) * DATA_BYTES
+    comm = out_bytes / nm.FSHMEM_QSFP.peak_bandwidth
+    t_msg = nm.FSHMEM_QSFP.latency.put_long
+    t2 = t_half + comm + t_msg           # exposed end-sync (paper Sec. V)
+    return t1, t2
+
+
+def modeled_speedups():
+    mm = {}
+    for s in CS.matmul_sizes:
+        t1, t2 = _matmul_times(s)
+        mm[f"matmul_{s}"] = t1 / t2
+    cv = {}
+    for n_k, ksz in CS.conv_sets:
+        t1, t2 = _conv_times(n_k, ksz)
+        cv[f"conv_{n_k}x{ksz}x{ksz}"] = t1 / t2
+    return mm, cv
+
+
+def verify_paper_claims():
+    mm, cv = modeled_speedups()
+    mm_avg = sum(mm.values()) / len(mm)
+    cv_avg = sum(cv.values()) / len(cv)
+    # paper targets: 1.94× matmul avg, 1.98× conv avg, ~1.95× overall;
+    # qualitative: speedup grows with matmul size; conv never reaches 2×.
+    assert 1.85 <= mm_avg <= 2.0, (mm, mm_avg)
+    assert 1.90 <= cv_avg <= 2.0, (cv, cv_avg)
+    overall = (sum(mm.values()) + sum(cv.values())) / (len(mm) + len(cv))
+    assert 1.88 <= overall <= 2.0, overall
+    sizes = list(mm.values())
+    assert sizes == sorted(sizes), f"matmul speedup must grow with size {mm}"
+    assert all(v < 2.0 for v in cv.values()), cv
+    return {"matmul": mm, "matmul_avg": mm_avg,
+            "conv": cv, "conv_avg": cv_avg, "overall_avg": overall,
+            "paper": {"matmul_avg": 1.94, "conv_avg": 1.98,
+                      "overall": 1.95}}
+
+
+def functional_check():
+    """Run the actual Fig. 6 schedules on 2 CPU devices, assert allclose."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import art
+
+    if len(jax.devices()) < 2:
+        return {"note": "single device; functional check skipped"}
+    mesh = jax.make_mesh((2,), ("x",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(0)
+    size = 128
+    m = jax.random.normal(key, (size, size), jnp.float32)
+    n = jax.random.normal(jax.random.PRNGKey(1), (size, size), jnp.float32)
+    ms = jax.device_put(m, jax.sharding.NamedSharding(mesh, P(None, "x")))
+    ns = jax.device_put(n, jax.sharding.NamedSharding(mesh, P("x", None)))
+    f_art = jax.jit(jax.shard_map(
+        functools.partial(art.art_matmul_reducescatter, axis="x",
+                          n_chunks=CS.art_chunks),
+        mesh=mesh, in_specs=(P(None, "x"), P("x", None)),
+        out_specs=P(None, "x")))
+    got = np.asarray(f_art(ms, ns))
+    np.testing.assert_allclose(got, np.asarray(m) @ np.asarray(n),
+                               rtol=1e-4, atol=1e-4)
+
+    imgs = jax.random.normal(key, (2, 16, 16, 8), jnp.float32)
+    kern = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 8, 16), jnp.float32)
+    ks = jax.device_put(kern, jax.sharding.NamedSharding(
+        mesh, P(None, None, None, "x")))
+    # out_specs=P(): the all-gather makes the result replicated in *value*,
+    # which vma tracking cannot prove statically — disable just that check.
+    f_conv = jax.jit(jax.shard_map(
+        functools.partial(art.split_conv_allgather, axis="x"),
+        mesh=mesh, in_specs=(P(), P(None, None, None, "x")),
+        out_specs=P(), check_vma=False))
+    got = np.asarray(f_conv(imgs, ks))
+    want = jax.lax.conv_general_dilated(
+        imgs, kern, (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    np.testing.assert_allclose(got, np.asarray(want), rtol=1e-4, atol=1e-4)
+    return {"matmul_allclose": True, "conv_allclose": True}
+
+
+def main():
+    claims = verify_paper_claims()
+    print("casestudy: Fig. 7 modeled speedups "
+          f"(matmul avg {claims['matmul_avg']:.2f}x, "
+          f"conv avg {claims['conv_avg']:.2f}x) PASS")
+    for k, v in {**claims["matmul"], **claims["conv"]}.items():
+        print(f"  {k}: {v:.3f}x")
+    f = functional_check()
+    print(f"  functional (2-device mesh): {f}")
+    return claims
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""§Roofline table: aggregate the dry-run JSONs into the per-(arch × shape ×
+mesh) three-term roofline report (beyond-paper deliverable)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = "results/dryrun"
+
+
+def load(results_dir: str = RESULTS):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_row(r) -> str:
+    if r.get("status") == "skip":
+        return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:14s} "
+                f"SKIP  {r['reason'][:60]}")
+    if r.get("status") == "error":
+        return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:14s} "
+                f"ERROR {r['error'][:60]}")
+    dom = r["dominant"]
+    terms = (f"C {r['compute_s']*1e3:9.2f}  M {r['memory_s']*1e3:9.2f}  "
+             f"X {r['collective_s']*1e3:9.2f} ms")
+    return (f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:14s} {terms}  "
+            f"dom={dom:10s} useful={r['useful_ratio']:.2f}")
+
+
+def summarize(results_dir: str = RESULTS):
+    recs = load(results_dir)
+    base = [r for r in recs if r.get("variant", "baseline") == "baseline"]
+    ok = [r for r in base if r.get("status") == "ok"]
+    skip = [r for r in base if r.get("status") == "skip"]
+    err = [r for r in base if r.get("status") == "error"]
+    print(f"roofline: {len(ok)} ok / {len(skip)} skip / {len(err)} error "
+          f"({len(base)} baseline cells)")
+    for r in sorted(base, key=lambda x: (x["arch"], x["shape"],
+                                         str(x.get("mesh")))):
+        print("  " + fmt_row(r))
+    if ok:
+        worst = min(ok, key=lambda r: r["useful_ratio"])
+        collbound = [r for r in ok if r["dominant"] == "collective"]
+        print(f"  worst useful_ratio: {worst['arch']}/{worst['shape']}"
+              f"/{worst['mesh']} = {worst['useful_ratio']:.3f}")
+        print(f"  collective-bound cells: {len(collbound)}")
+    return recs
+
+
+def main():
+    if not os.path.isdir(RESULTS) or not glob.glob(RESULTS + "/*.json"):
+        print("roofline: no dry-run results found — run "
+              "`python -m repro.launch.dryrun --all --multi-pod both` first")
+        return None
+    return summarize()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark harness entry: one suite per paper table/figure.
+
+  bandwidth   — Fig. 5   (PUT/GET bandwidth vs transfer × packet size)
+  latency     — Table III (short/long PUT/GET latency + prior works)
+  resource    — Table II  (comm-layer share of the compiled module)
+  casestudy   — Fig. 6/7  (2-node ART matmul + kernel-split conv)
+  roofline    — §Roofline (aggregated dry-run terms; needs results/dryrun)
+
+``PYTHONPATH=src python -m benchmarks.run`` runs them all; each suite
+asserts the paper's quantitative claims internally (a failed claim is a
+failed run, not a printed warning).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _ensure_devices(n: int = 4):
+    # benches that build host meshes need >1 CPU device; set before jax init
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={n}")
+
+
+def main() -> None:
+    _ensure_devices()
+    from benchmarks import artlayer, bandwidth, casestudy, latency, resource
+    from benchmarks import roofline_bench
+
+    suites = [
+        ("bandwidth(Fig5)", bandwidth.main),
+        ("latency(TableIII)", latency.main),
+        ("resource(TableII)", resource.main),
+        ("casestudy(Fig6/7)", casestudy.main),
+        ("artlayer(§Perf ART-TP)", artlayer.main),
+        ("roofline(§Roofline)", roofline_bench.main),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"\n=== {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+            print(f"=== {name} PASS ({time.time()-t0:.1f}s) ===")
+        except AssertionError as e:
+            failed.append(name)
+            print(f"=== {name} FAIL: {e} ===")
+        except Exception as e:
+            failed.append(name)
+            print(f"=== {name} ERROR: {type(e).__name__}: {e} ===")
+    print()
+    if failed:
+        print(f"benchmarks: {len(failed)} suite(s) failed: {failed}")
+        sys.exit(1)
+    print("benchmarks: all suites passed")
+
+
+if __name__ == "__main__":
+    main()

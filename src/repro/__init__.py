@@ -1,0 +1,8 @@
+"""FSHMEM-JAX: PGAS communication substrate for TPU pods.
+
+Reproduction + extension of "FSHMEM: Supporting Partitioned Global Address
+Space on FPGAs for Large-Scale Hardware Acceleration Infrastructure"
+(Arthanto, Ojika, Kim — CS.DC 2022).  See DESIGN.md / EXPERIMENTS.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.analysis.roofline import (
+    HW,
+    TPU_V5E,
+    CollectiveStats,
+    RooflineReport,
+    parse_collectives,
+    roofline_from_compiled,
+)
+
+__all__ = ["HW", "TPU_V5E", "CollectiveStats", "RooflineReport",
+           "parse_collectives", "roofline_from_compiled"]

@@ -1,0 +1,71 @@
+"""Hillclimb profiling aid: rank individual collective/dot ops in a
+partitioned module by loop-multiplied cost, with source attribution from
+the op metadata (this is the dry-run's 'profiler')."""
+
+from __future__ import annotations
+
+import re
+from typing import List, Tuple
+
+from repro.analysis.hlo_cost import (
+    _collective_operand_bytes, _dot_flops, _trip_count, _COLLECTIVES,
+    parse_module)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def top_ops(text: str, kind: str = "collective", n: int = 20) -> List[dict]:
+    """kind: 'collective' (bytes) or 'dot' (flops)."""
+    comps, entry = parse_module(text)
+    out = []
+
+    def visit(cname, mult, depth=0):
+        comp = comps.get(cname)
+        if comp is None or depth > 64:
+            return
+        for op in comp.ops:
+            base = op.opcode.split("-start")[0]
+            if kind == "collective" and base in _COLLECTIVES:
+                b = _collective_operand_bytes(op, comp)
+                meta = _META_RE.search(op.line)
+                out.append({"op": base, "bytes": b, "mult": mult,
+                            "total": b * mult,
+                            "shape": op.result_type[:60],
+                            "path": (meta.group(1)[-120:] if meta else "")})
+            elif kind == "dot" and op.opcode == "dot":
+                f = _dot_flops(op, comp)
+                meta = _META_RE.search(op.line)
+                out.append({"op": "dot", "flops": f, "mult": mult,
+                            "total": f * mult,
+                            "shape": op.result_type[:60],
+                            "path": (meta.group(1)[-120:] if meta else "")})
+            if op.opcode == "while":
+                cm = re.search(r"condition=(%?[\w\.\-]+)", op.line)
+                bm = re.search(r"body=(%?[\w\.\-]+)", op.line)
+                if cm and bm:
+                    trips = _trip_count(op.line,
+                                        comps.get(cm.group(1).lstrip("%")))
+                    visit(bm.group(1).lstrip("%"), mult * trips, depth + 1)
+            elif op.opcode == "fusion":
+                m = re.search(r"calls=(%?[\w\.\-]+)", op.line)
+                if m:
+                    visit(m.group(1).lstrip("%"), mult, depth + 1)
+            elif op.opcode in ("call", "custom-call"):
+                m = re.search(r"to_apply=(%?[\w\.\-]+)", op.line)
+                if m:
+                    visit(m.group(1).lstrip("%"), mult, depth + 1)
+
+    if entry:
+        visit(entry, 1.0)
+    out.sort(key=lambda d: -d["total"])
+    return out[:n]
+
+
+def print_top(text: str, kind: str = "collective", n: int = 15):
+    for d in top_ops(text, kind, n):
+        val = d["total"]
+        unit = "B" if kind == "collective" else "F"
+        print(f"  {d['op']:20s} {val:.3e}{unit} (x{d['mult']:.0f})  "
+              f"{d['shape']}")
+        if d["path"]:
+            print(f"      {d['path']}")

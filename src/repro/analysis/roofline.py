@@ -1,0 +1,224 @@
+"""Three-term roofline from the compiled SPMD module (ROOFLINE ANALYSIS spec).
+
+    compute    = HLO_FLOPs   / (chips × peak_FLOP/s)
+    memory     = HLO_bytes   / (chips × HBM_bw)
+    collective = coll_bytes  / (chips × link_bw)
+
+``cost_analysis()`` supplies FLOPs/bytes; collective bytes are NOT in
+cost_analysis, so we parse ``compiled.as_text()`` (the *post-partitioning*
+module — per-device operand shapes) and sum operand sizes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+
+Scope note: the partitioned module is one device's program, so parsed sizes
+are per-device; the task formula's ``collective_bytes`` is the global sum,
+i.e. per-device × chips — the ``chips`` factors cancel and the term equals
+``per_device_coll_bytes / link_bw`` (same for FLOPs when cost_analysis
+reports the partitioned program).  ``calibrate_cost_scope()`` detects which
+scope cost_analysis reports on this backend and the loader normalizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g. bf16[256,4096]{1,0} or f32[] — dtype + dims
+_TYPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+(" + "|".join(_COLLECTIVES) + r")(?:-start)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * b
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_op: Dict[str, int]
+    count_by_op: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand bytes of every collective op in a (partitioned) module.
+
+    Works on the full-form HLO text where operand types are printed inline:
+    ``%ag = bf16[a,b] all-gather(bf16[c,d] %x), ...`` — we sum the operand
+    type tokens inside the call parens (not the result type).
+    """
+    bytes_by: Dict[str, int] = {}
+    count_by: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group(1)
+        # operand section: from the opening paren of the call to the
+        # matching close — approximate with "rest of line up to '), '".
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operands = line[start: i - 1]
+        total = sum(_shape_bytes(d, s) for d, s in _TYPE_RE.findall(operands))
+        if total == 0:
+            # fall back to the result type (some dumps omit operand types)
+            head = line[: m.start()]
+            tys = _TYPE_RE.findall(head)
+            total = sum(_shape_bytes(d, s) for d, s in tys)
+        bytes_by[op] = bytes_by.get(op, 0) + total
+        count_by[op] = count_by.get(op, 0) + 1
+    return CollectiveStats(bytes_by, count_by)
+
+
+# ---------------------------------------------------------------------------
+# hardware + report
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    name: str
+    peak_flops: float      # bf16 FLOP/s per chip
+    hbm_bw: float          # bytes/s per chip
+    link_bw: float         # bytes/s per ICI link direction
+    hbm_bytes: float       # capacity per chip
+
+
+TPU_V5E = HW(name="tpu-v5e", peak_flops=197e12, hbm_bw=819e9,
+             link_bw=50e9, hbm_bytes=16e9)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # per-device quantities (partitioned-module scope)
+    flops: float
+    hbm_bytes_accessed: float
+    coll_bytes: float
+    coll_by_op: Dict[str, int]
+    coll_count: int
+    # derived
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float          # 6·N·D global
+    useful_ratio: float         # model_flops / (flops × chips)
+    mem_per_device: Optional[Dict[str, float]] = None
+    note: str = ""
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def roofline_from_parts(
+    *, arch: str, shape: str, mesh: str, chips: int,
+    per_device_flops: float, per_device_bytes: float,
+    coll: CollectiveStats, model_flops: float,
+    hw: HW = TPU_V5E, mem: Optional[Dict[str, float]] = None,
+    note: str = "",
+) -> RooflineReport:
+    compute_s = per_device_flops / hw.peak_flops
+    memory_s = per_device_bytes / hw.hbm_bw
+    collective_s = coll.total_bytes / hw.link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = (model_flops / (per_device_flops * chips)
+              if per_device_flops else 0.0)
+    return RooflineReport(
+        arch=arch, shape=shape, mesh=mesh, chips=chips,
+        flops=per_device_flops, hbm_bytes_accessed=per_device_bytes,
+        coll_bytes=coll.total_bytes, coll_by_op=coll.bytes_by_op,
+        coll_count=coll.total_count,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        mem_per_device=mem, note=note,
+    )
+
+
+def roofline_from_compiled(compiled, *, arch: str, shape: str, mesh_desc: str,
+                           chips: int, model_flops: float,
+                           hw: HW = TPU_V5E, note: str = "") -> RooflineReport:
+    """Loop-aware terms from the partitioned module text (analysis.hlo_cost);
+    ``cost_analysis``/``memory_analysis`` retained for capacity checking.
+    (XLA's cost_analysis counts while bodies once — see hlo_cost docstring.)
+    """
+    from repro.analysis.hlo_cost import summarize
+
+    s = summarize(compiled.as_text())
+    flops = float(s.flops)
+    bytes_accessed = float(s.bytes)
+    coll = CollectiveStats(
+        {k: int(v) for k, v in s.coll_bytes.items()},
+        dict(s.coll_count))
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = {
+                "argument_bytes": float(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": float(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": float(getattr(ma, "temp_size_in_bytes", 0)),
+                "peak_bytes": float(
+                    getattr(ma, "peak_memory_in_bytes",
+                            getattr(ma, "temp_size_in_bytes", 0))),
+                "alias_bytes": float(getattr(ma, "alias_size_in_bytes", 0)),
+            }
+    except Exception:
+        pass
+    return roofline_from_parts(
+        arch=arch, shape=shape, mesh=mesh_desc, chips=chips,
+        per_device_flops=flops, per_device_bytes=bytes_accessed,
+        coll=coll, model_flops=model_flops, hw=hw, mem=mem, note=note)
+
+
+def model_flops_for(cfg, cell, n_tokens: Optional[int] = None) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D (MoE); D = tokens/step.
+
+    For decode cells D = global_batch (one token each); for train/prefill
+    D = global_batch × seq.  Prefill uses the 2·N·D forward-only count.
+    """
+    n_active = cfg.n_active_params()
+    if n_tokens is None:
+        if cell.kind == "decode":
+            n_tokens = cell.global_batch
+        else:
+            n_tokens = cell.global_batch * cell.seq_len
+    factor = 6.0 if cell.kind == "train" else 2.0
+    return factor * n_active * n_tokens

@@ -1,0 +1,189 @@
+"""Atomic, sharded, resumable checkpoints (no orbax dependency).
+
+Write protocol (crash-safe at every point):
+  1. serialize every leaf to ``<dir>/step_K.tmp/<leaf>.npy``
+  2. write a manifest (tree structure, shapes, dtypes, step, timestamp)
+  3. fsync all files, then fsync the directory
+  4. atomic ``rename(step_K.tmp -> step_K)`` — the commit point
+  5. update ``latest`` symlink (best-effort; recovery scans dirs anyway)
+
+A reader only ever sees fully-committed checkpoints: ``step_K`` either
+exists completely or not at all.  ``keep_last`` old checkpoints are GC'd
+after a successful commit, never before.
+
+Sharding: each leaf is saved from host RAM (fully-addressable arrays).  On a
+real multi-host pod each host writes only the shards it owns under
+``<dir>/step_K.tmp/shard_<proc>/`` with the same manifest/rename protocol;
+the layout here is the single-process specialization (proc 0 owns all).
+Restore targets are resharded by ``jax.device_put`` against the current
+mesh, which is what makes restore-after-remesh (elastic scaling) work: the
+checkpoint stores *logical* arrays, the mesh maps them physically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import ml_dtypes  # registers bfloat16 etc. with numpy
+import numpy as np
+
+# numpy's .npy format forgets extension dtypes (bf16 loads back as V2);
+# store them as a same-width integer view and record the logical dtype.
+_VIEW_AS = {np.dtype(ml_dtypes.bfloat16): np.uint16,
+            np.dtype(ml_dtypes.float8_e4m3fn): np.uint8,
+            np.dtype(ml_dtypes.float8_e5m2): np.uint8}
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return names, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree, *,
+                    extra: Optional[Dict[str, Any]] = None) -> str:
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    if os.path.exists(os.path.join(final, "manifest.json")):
+        # idempotent: a committed checkpoint for this step already exists
+        # (e.g. interval save followed by final save at the same step)
+        return final
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    names, leaves, _ = _flatten_with_paths(tree)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, (name, leaf) in enumerate(zip(names, leaves)):
+        arr = np.asarray(jax.device_get(leaf))
+        logical_dtype = str(arr.dtype)
+        if arr.dtype in _VIEW_AS:
+            arr = arr.view(_VIEW_AS[arr.dtype])
+        fname = f"leaf_{i:05d}.npy"
+        path = os.path.join(tmp, fname)
+        with open(path, "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+        manifest["leaves"].append({
+            "name": name, "file": fname,
+            "shape": list(arr.shape), "dtype": logical_dtype,
+        })
+    mpath = os.path.join(tmp, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+        f.flush()
+        os.fsync(f.fileno())
+    dfd = os.open(tmp, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+    os.rename(tmp, final)          # commit point
+    dfd = os.open(directory, os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
+    return final
+
+
+def list_checkpoints(directory: str):
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in sorted(os.listdir(directory)):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(directory, name, "manifest.json")):
+                out.append((int(name[5:]), os.path.join(directory, name)))
+    return sorted(out)
+
+
+def load_checkpoint(directory: str, template, *, step: Optional[int] = None,
+                    shardings=None):
+    """Restore into the structure of ``template`` (a pytree of arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings — this is the elastic-restore path: the stored logical
+    arrays are placed onto whatever mesh is current."""
+    ckpts = list_checkpoints(directory)
+    if not ckpts:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    if step is None:
+        step, path = ckpts[-1]
+    else:
+        match = [p for s, p in ckpts if s == step]
+        if not match:
+            raise FileNotFoundError(f"step {step} not in {directory}")
+        path = match[0]
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    names, leaves, treedef = _flatten_with_paths(template)
+    by_name = {e["name"]: e for e in manifest["leaves"]}
+    restored = []
+    flat_sh = (treedef.flatten_up_to(shardings) if shardings is not None
+               else [None] * len(leaves))
+    for name, leaf, sh in zip(names, leaves, flat_sh):
+        entry = by_name.get(name)
+        if entry is None:
+            raise KeyError(f"leaf {name!r} missing from checkpoint {path}")
+        arr = np.load(os.path.join(path, entry["file"]))
+        logical = np.dtype(entry["dtype"])
+        if arr.dtype != logical:
+            arr = arr.view(logical)
+        want_shape = tuple(leaf.shape)
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(
+                f"{name}: checkpoint shape {arr.shape} != template {want_shape}")
+        if sh is not None:
+            restored.append(jax.device_put(arr, sh))
+        else:
+            restored.append(jax.numpy.asarray(arr))
+    return treedef.unflatten(restored), manifest
+
+
+@dataclasses.dataclass
+class CheckpointManager:
+    """Periodic + preemption checkpointing with GC of old steps."""
+
+    directory: str
+    interval: int = 100
+    keep_last: int = 3
+
+    def should_save(self, step: int) -> bool:
+        return step > 0 and step % self.interval == 0
+
+    def save(self, step: int, tree, *, extra=None) -> str:
+        path = save_checkpoint(self.directory, step, tree, extra=extra)
+        self._gc()
+        return path
+
+    def restore_or_none(self, template, shardings=None):
+        try:
+            return load_checkpoint(self.directory, template,
+                                   shardings=shardings)
+        except FileNotFoundError:
+            return None
+
+    def latest_step(self) -> Optional[int]:
+        ckpts = list_checkpoints(self.directory)
+        return ckpts[-1][0] if ckpts else None
+
+    def _gc(self):
+        ckpts = list_checkpoints(self.directory)
+        for _, path in ckpts[: -self.keep_last]:
+            shutil.rmtree(path, ignore_errors=True)

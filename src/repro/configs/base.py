@@ -1,0 +1,187 @@
+"""ModelConfig — one dataclass describing every assigned architecture.
+
+Families: dense / moe / ssm / hybrid / encdec / vlm.  A config fully
+determines parameter shapes, the forward pass, cache layout, and the
+sharding rules; ``reduced()`` produces the small same-family variant used by
+the per-arch CPU smoke tests (the full configs are only ever lowered via the
+dry-run with ShapeDtypeStructs — no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    head_dim: Optional[int] = None  # default: d_model // n_heads
+
+    # -- attention variant ---------------------------------------------------
+    attn_type: str = "gqa"          # gqa | mla | none
+    window: Optional[int] = None    # sliding-window attention (h2o-danube)
+    # MLA (minicpm3)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # -- MLP -------------------------------------------------------------------
+    activation: str = "silu"        # silu | gelu | relu2
+    gated_mlp: bool = True
+
+    # -- MoE -------------------------------------------------------------------
+    n_experts: int = 0
+    experts_per_token: int = 0
+    n_shared_experts: int = 0
+    moe_layer_period: int = 1       # 1 => every layer is MoE
+    capacity_factor: float = 1.25
+
+    # -- SSM (mamba2 / zamba2) --------------------------------------------------
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_groups: int = 1
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 128
+    hybrid_period: int = 0          # zamba2: shared attn block every k ssm layers
+    n_shared_blocks: int = 0        # zamba2: number of alternating shared blocks
+
+    # -- encoder-decoder (whisper) ----------------------------------------------
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0            # whisper: 1500 frames
+    decoder_max_seq: int = 448
+
+    # -- modality frontend (stub per task spec) ---------------------------------
+    frontend: Optional[str] = None  # vit_stub | audio_stub
+    frontend_tokens: int = 0        # precomputed patch/frame embeddings count
+    frontend_dim: int = 0
+
+    # -- common ------------------------------------------------------------------
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # -- numerics / implementation ------------------------------------------------
+    param_dtype: str = "bfloat16"
+    compute_dtype: str = "bfloat16"
+    attn_impl: str = "auto"         # auto | pallas | jnp | ref
+    attn_q_chunk: int = 2048
+    attn_kv_chunk: int = 2048
+    causal_block_skip: bool = True  # skip fully-masked kv blocks (perf lever)
+    remat: str = "full"             # none | dots | full (activation ckpt policy)
+
+    # -- the paper's technique ------------------------------------------------------
+    use_art: bool = True            # ART-chunked/overlapped TP collectives
+    art_chunks: int = 4             # chunk count for overlapped schedules
+
+    # ---------------------------------------------------------------------------
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic sequence scaling: SSM/hybrid state or SWA window."""
+        return self.family in ("ssm", "hybrid") or self.window is not None
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def n_params(self) -> int:
+        """Total parameter count (exact, mirrors init_params)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self)
+
+    def n_active_params(self) -> int:
+        """Parameters touched per token (MoE: routed top-k + shared only)."""
+        from repro.models.model import count_params_analytic
+
+        return count_params_analytic(self, active_only=True)
+
+    def reduced(self) -> "ModelConfig":
+        """Same-family miniature for CPU smoke tests."""
+        r = {
+            "n_layers": min(self.n_layers, 2),
+            "d_model": 64,
+            "n_heads": 4,
+            "n_kv_heads": min(self.n_kv_heads, 2) if self.n_kv_heads else 0,
+            "d_ff": 128,
+            "vocab_size": 256,
+            "head_dim": 16,
+            "param_dtype": "float32",
+            "compute_dtype": "float32",
+            "attn_impl": "jnp",
+            "attn_q_chunk": 16,
+            "attn_kv_chunk": 16,
+            "remat": "none",
+        }
+        if self.attn_type == "mla":
+            r.update(q_lora_rank=32, kv_lora_rank=16, qk_rope_dim=8,
+                     qk_nope_dim=8, v_head_dim=16, head_dim=16)
+        if self.window is not None:
+            r["window"] = 8
+        if self.n_experts:
+            r.update(n_experts=4, experts_per_token=min(self.experts_per_token, 2))
+        if self.family in ("ssm", "hybrid"):
+            r.update(ssm_state=16, ssm_heads=4, ssm_head_dim=16, ssm_chunk=8,
+                     ssm_groups=1)
+            if self.family == "hybrid":
+                r.update(n_layers=5, hybrid_period=2,
+                         n_shared_blocks=min(self.n_shared_blocks, 2))
+        if self.family == "encdec":
+            r.update(n_encoder_layers=2, encoder_seq=16, decoder_max_seq=32)
+        if self.frontend:
+            r.update(frontend_tokens=8, frontend_dim=32)
+        return dataclasses.replace(self, **r)
+
+
+# Input-shape cells assigned to every LM arch (task spec).
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Tuple[ShapeCell, ...] = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+
+def shape_cell(name: str) -> ShapeCell:
+    for s in SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(name)
+
+
+def cell_applicable(cfg: ModelConfig, cell: ShapeCell) -> Tuple[bool, str]:
+    """Whether (arch × shape) runs, with the DESIGN.md skip reason if not."""
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return False, "full quadratic attention — long_500k skipped (DESIGN §5)"
+    if cell.name == "long_500k" and cfg.family == "encdec":
+        return False, "enc-dec decoder context 448 — long_500k skipped"
+    return True, ""

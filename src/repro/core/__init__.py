@@ -1,0 +1,39 @@
+"""FSHMEM core: the paper's contribution as a composable JAX module.
+
+Layers (bottom-up):
+  netmodel    — analytic QSFP+/ICI performance model (Fig. 5 / Table III)
+  pgas        — symmetric heap + one-sided put/get over a mesh axis
+  am          — GASNet Active Messages: opcode registry + lax.switch dispatch
+  art         — Automatic Result Transfer: chunked compute/comm overlap
+  collectives — extended API (barrier/bcast/AG/RS/AR/a2a) from PUT rings
+  overlap     — beyond-paper: ART applied to tensor-parallel matmuls
+"""
+
+from repro.core import am, art, collectives, netmodel, overlap, pgas
+from repro.core.am import (
+    HandlerRegistry,
+    am_request,
+    am_request_long,
+    am_request_medium,
+    am_request_short,
+    gasnet_get,
+    gasnet_put,
+    make_args,
+)
+from repro.core.art import (
+    art_matmul_reducescatter,
+    art_send,
+    bulk_matmul_reducescatter,
+    split_conv_allgather,
+)
+from repro.core.overlap import allgather_matmul, matmul_reducescatter
+from repro.core.pgas import GlobalAddressSpace, SymmetricHeap, get, put
+
+__all__ = [
+    "am", "art", "collectives", "netmodel", "overlap", "pgas",
+    "HandlerRegistry", "am_request", "am_request_long", "am_request_medium",
+    "am_request_short", "gasnet_get", "gasnet_put", "make_args",
+    "art_matmul_reducescatter", "art_send", "bulk_matmul_reducescatter",
+    "split_conv_allgather", "allgather_matmul", "matmul_reducescatter",
+    "GlobalAddressSpace", "SymmetricHeap", "get", "put",
+]

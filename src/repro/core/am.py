@@ -1,0 +1,280 @@
+"""GASNet Active Messages in JAX — the FSHMEM GASNet-core dispatch layer.
+
+GASNet's core API is the Active Message: every message head names a *handler*
+that runs on arrival, and the body carries the handler's arguments plus an
+optional data payload.  The paper implements this in hardware by replacing
+the handler *function pointer* with a handler *opcode* checked by the AM
+receive handler (Sec. III-A).  We do exactly the same thing in JAX:
+
+* a :class:`HandlerRegistry` assigns each registered handler a dense opcode;
+* delivery is a ``ppermute`` of ``(opcode, args, payload)``;
+* dispatch is ``jax.lax.switch(opcode, handlers, ...)`` on the receiving
+  shard — the traced analogue of the hardware opcode check.
+
+Message classes follow the spec (Table I):
+
+=========  ================================================================
+Short      header + args only, no payload (config updates, GET requests)
+Medium     payload delivered to the handler as *local scratch* (not heap)
+Long       payload deposited at a heap address **before** the handler runs
+=========  ================================================================
+
+``gasnet_put`` / ``gasnet_get`` are built on these exactly as in the paper:
+PUT = long AMRequest invoking the PUT handler; GET = short AMRequest whose
+handler issues a long PUT *reply*.  Replies may not themselves reply
+(GASNet rule), which is why the registry keeps separate request and reply
+tables.
+
+All functions run inside ``shard_map`` over the PGAS axis.  Sizes of args
+and payloads are static per call site — the software analogue of
+``gasnet_AMMaxMedium()``-style hardware limits.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.pgas import Perm, _recv_mask
+
+MAX_ARGS = 8  # i32 argument slots in an AM header (gasnet: 16 max; 8 suffices)
+
+# Handler signatures
+#   request handler: (heap, args i32[MAX_ARGS], payload f[payload_size])
+#       -> (heap, reply_opcode i32, reply_args i32[MAX_ARGS], reply_payload)
+#   reply handler:   (heap, args, payload) -> heap
+RequestHandler = Callable[
+    [jnp.ndarray, jnp.ndarray, jnp.ndarray],
+    Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray],
+]
+ReplyHandler = Callable[[jnp.ndarray, jnp.ndarray, jnp.ndarray], jnp.ndarray]
+
+
+from repro.core.vma import vary_tree as _vary_tree
+
+
+def make_args(*vals) -> jnp.ndarray:
+    """Pack up to MAX_ARGS integers into an AM header argument block."""
+    a = jnp.zeros((MAX_ARGS,), jnp.int32)
+    for i, v in enumerate(vals):
+        a = a.at[i].set(jnp.asarray(v, jnp.int32))
+    return a
+
+
+@dataclasses.dataclass
+class _Entry:
+    name: str
+    opcode: int
+    fn: Callable
+
+
+class HandlerRegistry:
+    """Opcode table for AM request and reply handlers.
+
+    Registration order defines opcodes — the same contract as the paper's
+    hardware opcode map.  Two built-ins mirror the GASNet core:
+
+    * ``PUT`` (request): write payload at ``args[0]``; no reply.
+    * ``PUT_REPLY`` (reply): write payload at ``args[0]`` (GET's second half).
+    * ``NOP_REPLY`` (reply): opcode 0, does nothing — "no reply requested".
+    """
+
+    def __init__(self) -> None:
+        self._requests: List[_Entry] = []
+        self._replies: List[_Entry] = []
+        # opcode 0 = nop reply so every request can return "no reply".
+        self.register_reply("NOP_REPLY", lambda heap, args, payload: heap)
+        self.register_reply("PUT_REPLY", _put_reply_handler)
+        self.register_request("PUT", _put_request_handler)
+        self.register_request("GET", _get_request_handler)
+
+    # -- registration -------------------------------------------------------
+
+    def register_request(self, name: str, fn: RequestHandler) -> int:
+        opcode = len(self._requests)
+        self._requests.append(_Entry(name, opcode, fn))
+        return opcode
+
+    def register_reply(self, name: str, fn: ReplyHandler) -> int:
+        opcode = len(self._replies)
+        self._replies.append(_Entry(name, opcode, fn))
+        return opcode
+
+    def request_opcode(self, name: str) -> int:
+        for e in self._requests:
+            if e.name == name:
+                return e.opcode
+        raise KeyError(name)
+
+    def reply_opcode(self, name: str) -> int:
+        for e in self._replies:
+            if e.name == name:
+                return e.opcode
+        raise KeyError(name)
+
+    # -- dispatch (the hardware "AM receive handler") -------------------------
+
+    def dispatch_request(self, opcode, heap, args, payload, *, axis: str | None = None):
+        branches = [
+            (lambda h, a, p, fn=e.fn: _vary_tree(fn(h, a, p), axis))
+            for e in self._requests
+        ]
+        return lax.switch(opcode, branches, heap, args, payload)
+
+    def dispatch_reply(self, opcode, heap, args, payload, *, axis: str | None = None):
+        branches = [
+            (lambda h, a, p, fn=e.fn: _vary_tree(fn(h, a, p), axis))
+            for e in self._replies
+        ]
+        return lax.switch(opcode, branches, heap, args, payload)
+
+
+# -- built-in handlers (the paper's PUT / GET flows) -------------------------
+
+
+def _put_request_handler(heap, args, payload):
+    dst = args[0]
+    heap = lax.dynamic_update_slice(heap, payload.astype(heap.dtype), (dst,))
+    reply_payload = jnp.zeros_like(payload)
+    return heap, jnp.int32(0), jnp.zeros((MAX_ARGS,), jnp.int32), reply_payload
+
+
+def _get_request_handler(heap, args, payload):
+    # args[0] = source offset on this rank; args[1] = dst offset at requester.
+    src, dst = args[0], args[1]
+    chunk = lax.dynamic_slice(heap, (src,), payload.shape)
+    return heap, jnp.int32(1), make_args(dst), chunk.astype(payload.dtype)
+
+
+def _put_reply_handler(heap, args, payload):
+    dst = args[0]
+    return lax.dynamic_update_slice(heap, payload.astype(heap.dtype), (dst,))
+
+
+# ---------------------------------------------------------------------------
+# Wire transfer + round trip
+# ---------------------------------------------------------------------------
+
+
+def _deliver(msg, axis: str, perm: Perm):
+    """ppermute a pytree of message fields (one wire transfer)."""
+    import jax
+
+    return jax.tree.map(lambda x: lax.ppermute(x, axis, list(perm)), msg)
+
+
+def am_request(
+    registry: HandlerRegistry,
+    heap: jnp.ndarray,
+    opcode,
+    args: jnp.ndarray,
+    payload: jnp.ndarray,
+    *,
+    axis: str,
+    perm: Perm,
+) -> jnp.ndarray:
+    """Send an AM request from each ``src`` to ``dst`` in ``perm``, run the
+    request handler at the destination, deliver its reply back, and run the
+    reply handler at the origin.  Returns the updated local heap.
+
+    Non-participating ranks dispatch opcode 0 with zero payloads, which the
+    mask then discards — the SPMD cost of the one-sided model (same trick a
+    hardware NIC uses: every port always clocks, idle ports carry null
+    frames).
+    """
+    perm = list(perm)
+    rev = [(d, s) for (s, d) in perm]
+    opcode = jnp.asarray(opcode, jnp.int32)
+
+    # --- request wire transfer (header + body) ---
+    op_r, args_r, body_r = _deliver((opcode, args, payload), axis, perm)
+    recv = _recv_mask(axis, perm)
+    op_safe = jnp.where(recv, op_r, 0)
+
+    new_heap, rep_op, rep_args, rep_payload = registry.dispatch_request(
+        op_safe, heap, args_r, body_r, axis=axis
+    )
+    heap = jnp.where(recv, new_heap, heap)
+    rep_op = jnp.where(recv, rep_op, 0)
+
+    # --- reply wire transfer (destination -> origin) ---
+    rop_b, rargs_b, rbody_b = _deliver((rep_op, rep_args, rep_payload), axis, rev)
+    recv_rep = _recv_mask(axis, rev)
+    rop_safe = jnp.where(recv_rep, rop_b, 0)
+    replied = registry.dispatch_reply(rop_safe, heap, rargs_b, rbody_b, axis=axis)
+    return jnp.where(recv_rep, replied, heap)
+
+
+# -- message-class wrappers (Table I) ----------------------------------------
+
+
+def am_request_short(registry, heap, opcode, args, *, axis, perm):
+    """Short AM: header + args, zero-length payload."""
+    payload = jnp.zeros((1,), heap.dtype)  # 1-word null frame (shape-static)
+    return am_request(registry, heap, opcode, args, payload, axis=axis, perm=perm)
+
+
+def am_request_medium(
+    registry, heap, opcode, args, payload, *, axis, perm
+):
+    """Medium AM: payload handed to the handler as scratch (not heap-addressed).
+
+    Returns ``(heap, scratch)`` where scratch is the delivered payload on
+    receiving ranks — the "local memory address" of the spec.
+    """
+    perm = list(perm)
+    op_r, args_r, body_r = _deliver((jnp.asarray(opcode, jnp.int32), args, payload), axis, perm)
+    recv = _recv_mask(axis, perm)
+    op_safe = jnp.where(recv, op_r, 0)
+    new_heap, _, _, _ = registry.dispatch_request(op_safe, heap, args_r, body_r, axis=axis)
+    heap = jnp.where(recv, new_heap, heap)
+    scratch = jnp.where(recv, body_r, jnp.zeros_like(body_r))
+    return heap, scratch
+
+
+def am_request_long(registry, heap, opcode, args, payload, dst_offset, *, axis, perm):
+    """Long AM: payload is deposited at ``dst_offset`` in the destination's
+    heap **before** the handler runs (the spec's ordering guarantee)."""
+    perm = list(perm)
+    body_r = lax.ppermute(payload, axis, perm)
+    off_r = lax.ppermute(jnp.asarray(dst_offset, jnp.int32), axis, perm)
+    recv = _recv_mask(axis, perm)
+    deposited = lax.dynamic_update_slice(heap, body_r.astype(heap.dtype), (off_r,))
+    heap = jnp.where(recv, deposited, heap)
+    # Handler then runs with the deposit address in args[0].
+    op_r, args_r = _deliver((jnp.asarray(opcode, jnp.int32), args), axis, perm)
+    op_safe = jnp.where(recv, op_r, 0)
+    new_heap, _, _, _ = registry.dispatch_request(
+        op_safe, heap, args_r.at[0].set(off_r), jnp.zeros((1,), heap.dtype), axis=axis
+    )
+    return jnp.where(recv, new_heap, heap)
+
+
+# -- extended API on top of AM (the paper's gasnet_put / gasnet_get) ---------
+
+
+def gasnet_put(registry, heap, payload, dst_offset, *, axis, perm):
+    """PUT = long AM request invoking the PUT handler (paper Sec. III-A)."""
+    args = make_args(dst_offset)
+    return am_request(
+        registry, heap, registry.request_opcode("PUT"), args, payload,
+        axis=axis, perm=perm,
+    )
+
+
+def gasnet_get(registry, heap, src_offset, dst_offset, size, *, axis, perm):
+    """GET = short AM request; its handler issues a long PUT reply.
+
+    ``perm`` lists ``(requester, source)`` pairs.  The requested chunk lands
+    at ``dst_offset`` in the requester's heap.
+    """
+    req = [(r, s) for (r, s) in perm]
+    args = make_args(src_offset, dst_offset)
+    payload = jnp.zeros((size,), heap.dtype)  # shape carrier for the reply
+    return am_request(
+        registry, heap, registry.request_opcode("GET"), args, payload,
+        axis=axis, perm=req,
+    )

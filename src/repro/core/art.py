@@ -1,0 +1,214 @@
+"""ART — Automatic Result Transfer (paper Sec. III-B), TPU-native.
+
+The paper's DLA produces results continuously; instead of one bulk PUT after
+the computation (host-driven, latency fully exposed), ART issues a PUT for
+every N valid results *during* the computation, hiding the wire time under
+remaining compute and removing host intervention.
+
+On TPU the identical mechanism is a software-pipelined loop in which
+iteration *k* computes chunk *k* while the collective-permute of chunk
+*k−1* is in flight.  XLA emits ``collective-permute-start`` /
+``collective-permute-done`` pairs and its latency-hiding scheduler moves the
+``done`` past the next chunk's compute — the AM sequencer's overlap, played
+by the compiler.  We express every loop so that the permute of chunk *k*
+never depends on compute *k+1* (and vice versa), which is the structural
+property the scheduler needs.
+
+Three entry points:
+
+* :func:`art_send` — generic producer→consumer chunk pipeline: compute a
+  chunk, put it to the peer, accumulate at the receiver.
+* :func:`art_matmul_reducescatter` — the paper's Fig. 6(a) parallel matmul,
+  generalized from 2 FPGAs to an n-rank ring: every rank holds a column
+  block of M and a row block of N; partial sums are exchanged chunk-by-chunk
+  while the next row-chunk is computed.  (With n=2 this is exactly the
+  paper's pseudo-code: compute with N_{0,0},N_{1,1}; exchange; compute with
+  N_{0,1},N_{1,0}; accumulate.)
+* :func:`split_conv_allgather` — Fig. 6(b): output channels split across
+  ranks, synchronize + concatenate at the end (the paper notes this end-sync
+  is why convolution never quite reaches 2×).
+
+All run inside ``shard_map`` over the PGAS axis.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.vma import vary
+
+
+def _ring_perm(n: int, shift: int = 1):
+    return [(i, (i + shift) % n) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Generic ART pipeline
+# ---------------------------------------------------------------------------
+
+
+def art_send(
+    compute_chunk: Callable[[jnp.ndarray], jnp.ndarray],
+    n_chunks: int,
+    *,
+    axis: str,
+    shift: int = 1,
+    accumulate: bool = True,
+):
+    """Build an ART producer/consumer: each rank computes ``n_chunks`` chunks
+    with ``compute_chunk(k)`` and PUTs each finished chunk to
+    ``rank+shift``; the receiver accumulates (or stacks) them.
+
+    Returns a function ``() -> received`` to call inside shard_map.  The loop
+    body keeps the permute of chunk *k−1* independent of compute of chunk
+    *k* so XLA can overlap them (see module docstring).
+    """
+
+    def run():
+        n = lax.axis_size(axis)
+        perm = _ring_perm(n, shift)
+        c0 = compute_chunk(jnp.int32(0))
+
+        def body(k, carry):
+            acc, prev = carry
+            # Issue the transfer of the *previous* chunk ...
+            arrived = lax.ppermute(prev, axis, perm)
+            # ... while computing the next one (no data dependence between
+            # these two lines — the ART overlap window).
+            nxt = compute_chunk(k)
+            if accumulate:
+                acc = acc + arrived
+            else:
+                acc = lax.dynamic_update_index_in_dim(acc, arrived, k - 1, 0)
+            return acc, nxt
+
+        if accumulate:
+            acc0 = jnp.zeros_like(c0)
+        else:
+            acc0 = jnp.zeros((n_chunks,) + c0.shape, c0.dtype)
+        acc0 = vary(acc0, axis)
+        acc, last = lax.fori_loop(1, n_chunks, body, (acc0, vary(c0, axis)))
+        arrived = lax.ppermute(last, axis, perm)
+        if accumulate:
+            return acc + arrived
+        return lax.dynamic_update_index_in_dim(acc, arrived, n_chunks - 1, 0)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Paper case study (a): parallel matmul with ART partial-sum exchange
+# ---------------------------------------------------------------------------
+
+
+def art_matmul_reducescatter(
+    m_cols: jnp.ndarray,
+    n_rows: jnp.ndarray,
+    *,
+    axis: str,
+    n_chunks: int,
+) -> jnp.ndarray:
+    """Fig. 6(a), n-rank generalization.
+
+    Inputs (per rank p of n):
+      ``m_cols``: (R, K/n)   — column block p of M
+      ``n_rows``: (K/n, C)   — row block p of N
+
+    Every rank computes the full-width partial product
+    ``M[:, p] @ N[p, :]`` row-chunk by row-chunk; while the ring
+    reduce-scatter of chunk *k−1* is in flight it computes chunk *k*
+    (the ART overlap).  After the ring, each rank holds its complete column
+    block of ``C = M @ N``: a *reduce-scatter fused into the matmul*.
+
+    Ring reduce-scatter invariant (blocks indexed by owner rank): block
+    ``b_q`` starts at rank ``q+1`` and moves +1 around the ring, gathering
+    each rank's partial contribution; after ``n−1`` hops it arrives, fully
+    accumulated, at its owner ``q``.
+
+    Returns (R, C/n): rank p's column block of C, fp32 accumulated.
+    """
+    n = lax.axis_size(axis)
+    rows, _ = m_cols.shape
+    cols = n_rows.shape[1]
+    assert rows % n_chunks == 0, (rows, n_chunks)
+    assert cols % n == 0, (cols, n)
+    rchunk = rows // n_chunks
+    ccols = cols // n
+    perm = _ring_perm(n, 1)
+    my = lax.axis_index(axis)
+
+    def col_block(full_chunk, owner_offset: int):
+        # columns owned by rank (my + owner_offset) mod n
+        start = ((my + owner_offset) % n) * ccols
+        return lax.dynamic_slice(full_chunk, (0, start), (rchunk, ccols))
+
+    def compute_chunk(k):
+        a = lax.dynamic_slice(m_cols, (k * rchunk, 0), (rchunk, m_cols.shape[1]))
+        return jnp.dot(a, n_rows, preferred_element_type=jnp.float32)
+
+    def ring_reduce_scatter(partial_chunk):
+        # send own partial of predecessor's block; after n−1 hops we hold b_my.
+        block = col_block(partial_chunk, -1)
+        for hop in range(1, n):
+            arrived = lax.ppermute(block, axis, perm)
+            block = arrived + col_block(partial_chunk, -(hop + 1))
+        return block
+
+    def body(k, carry):
+        acc, partial_prev = carry
+        # Compute chunk k (heavy matmul) — independent of the ring below, so
+        # XLA overlaps it with the in-flight transfer of chunk k−1: ART.
+        partial_cur = compute_chunk(k)
+        done = ring_reduce_scatter(partial_prev)
+        acc = lax.dynamic_update_slice(acc, done, ((k - 1) * rchunk, 0))
+        return acc, partial_cur
+
+    acc0 = vary(jnp.zeros((rows, ccols), jnp.float32), axis)
+    acc, partial_last = lax.fori_loop(
+        1, n_chunks, body, (acc0, vary(compute_chunk(0), axis))
+    )
+    done = ring_reduce_scatter(partial_last)
+    return lax.dynamic_update_slice(acc, done, ((n_chunks - 1) * rchunk, 0))
+
+
+def bulk_matmul_reducescatter(
+    m_cols: jnp.ndarray, n_rows: jnp.ndarray, *, axis: str
+) -> jnp.ndarray:
+    """Paper-faithful *baseline* (no ART): compute the whole partial product,
+    then one bulk synchronous exchange at the end ("a large-sized message at
+    the end of the computation")."""
+    partial_c = jnp.dot(m_cols, n_rows, preferred_element_type=jnp.float32)
+    return lax.psum_scatter(partial_c, axis, scatter_dimension=1, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# Paper case study (b): kernel-split convolution, end sync
+# ---------------------------------------------------------------------------
+
+
+def split_conv_allgather(
+    images: jnp.ndarray,
+    kernels_local: jnp.ndarray,
+    *,
+    axis: str,
+) -> jnp.ndarray:
+    """Fig. 6(b): weight kernels split across ranks; each rank convolves its
+    share of output channels, then results are synchronized and concatenated
+    so every rank holds the complete output (the paper's end-of-compute sync).
+
+    images:        (B, H, W, Cin)          replicated
+    kernels_local: (kh, kw, Cin, Cout/n)   rank's kernel group
+    returns:       (B, H', W', Cout)       complete on every rank
+    """
+    out_local = lax.conv_general_dilated(
+        images,
+        kernels_local,
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return lax.all_gather(out_local, axis, axis=3, tiled=True)

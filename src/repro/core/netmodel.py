@@ -1,0 +1,304 @@
+"""Analytic network performance model for FSHMEM-style PGAS transports.
+
+The paper measures PUT/GET bandwidth and latency of the GASNet core over a
+QSFP+ link between two Intel D5005 FPGAs (Fig. 5, Table III).  This container
+has no QSFP+ (and no ICI), so *performance* numbers come from this model,
+while *functional* semantics are exercised for real on CPU meshes
+(see ``repro.core.pgas`` / ``repro.core.am``).
+
+The model has three ingredients, each of which corresponds to a physical
+mechanism described in the paper:
+
+1. **Per-packet cost.**  A transfer of ``S`` bytes is segmented into packets
+   of ``packet_size`` bytes.  Every packet pays the wire time of its payload
+   plus a per-packet overhead (header + AM sequencer turnaround).  The paper's
+   own measurements define the calibration table ``packet_overhead_bytes``
+   (its four packet sizes are measured points; other sizes are interpolated
+   in log-space).
+
+2. **Per-message latency decomposition.**  Table III's four latency numbers
+   decompose consistently into five stages (values in ``LatencyParams``):
+
+   =====================  =====================================================
+   ``t_host_cmd``         host/PCIe command issue -> scheduler -> AM sequencer
+   ``t_dma``              read-DMA fetch startup for a payload (long msg only)
+   ``t_header``           header serialization + wire + remote opcode check
+   ``t_handler``          AM receive-handler turnaround (GET -> PUT reply)
+   ``t_sched``            reply path through scheduler/FIFO (no host)
+   =====================  =====================================================
+
+   short PUT = t_host_cmd + t_header                           = 0.21 us
+   long  PUT = t_host_cmd + t_dma + t_header                   = 0.35 us
+   short GET = short PUT + t_handler + (t_sched + t_header)    = 0.45 us
+   long  GET = short PUT + t_handler + (t_sched+t_dma+t_header)= 0.59 us
+
+3. **Two-message GET.**  ``gasnet_get`` is a short request plus a long PUT
+   reply, so it pays one extra fixed cost that is *independent of transfer
+   size* — which is exactly why the paper sees GET bandwidth 20 % below PUT
+   at 2 KB but only 8 % below at 8 KB.
+
+The model reproduces, and the tests assert, every quantitative claim of
+Fig. 5 / Table III:
+
+* peak bandwidth 3813 MB/s at packet size >= 512 B (> 95 % of the 4 GB/s max)
+* half of peak reached around ~2 KB transfers
+* 95 % of peak ("saturation") around ~32 KB
+* GET bandwidth ~20 % below PUT at 2 KB and ~8 % at 8 KB
+* the four Table III latencies exactly.
+
+A second parameter set (:data:`TPU_ICI`) instantiates the same mechanism with
+TPU v5e inter-chip-interconnect constants; it is what the ART overlap
+projections and the roofline collective term use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyParams:
+    """Fixed per-message latency stages (seconds)."""
+
+    t_host_cmd: float  # command issue -> scheduler -> sequencer
+    t_dma: float       # payload read-DMA startup (long messages only)
+    t_header: float    # header serialization + wire + remote check
+    t_handler: float   # AM receive-handler turnaround
+    t_sched: float     # reply-path scheduler/FIFO (no host involvement)
+
+    @property
+    def put_short(self) -> float:
+        return self.t_host_cmd + self.t_header
+
+    @property
+    def put_long(self) -> float:
+        return self.t_host_cmd + self.t_dma + self.t_header
+
+    @property
+    def get_short(self) -> float:
+        return self.put_short + self.t_handler + self.t_sched + self.t_header
+
+    @property
+    def get_long(self) -> float:
+        return (
+            self.put_short
+            + self.t_handler
+            + self.t_sched
+            + self.t_dma
+            + self.t_header
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkParams:
+    """A point-to-point link with packetized framing."""
+
+    name: str
+    line_rate: float                      # bytes/s raw
+    line_efficiency: float                # encoding/framing ceiling (64b/66b etc.)
+    packet_overhead_bytes: Dict[int, float]  # calibration: packet size -> overhead
+    latency: LatencyParams
+
+    @property
+    def peak_bandwidth(self) -> float:
+        """Ceiling imposed by line encoding, independent of packet size."""
+        return self.line_rate * self.line_efficiency
+
+    def overhead_bytes(self, packet_size: int) -> float:
+        """Per-packet overhead; measured points exact, log-interp between."""
+        table = self.packet_overhead_bytes
+        if packet_size in table:
+            return table[packet_size]
+        keys = sorted(table)
+        if packet_size <= keys[0]:
+            return table[keys[0]]
+        if packet_size >= keys[-1]:
+            return table[keys[-1]]
+        for lo, hi in zip(keys, keys[1:]):
+            if lo < packet_size < hi:
+                f = (math.log(packet_size) - math.log(lo)) / (
+                    math.log(hi) - math.log(lo)
+                )
+                return table[lo] * (1 - f) + table[hi] * f
+        raise AssertionError  # unreachable
+
+    # -- per-packet / steady-state -----------------------------------------
+
+    def packet_time(self, packet_size: int) -> float:
+        return (packet_size + self.overhead_bytes(packet_size)) / self.line_rate
+
+    def steady_bandwidth(self, packet_size: int) -> float:
+        """Bandwidth with per-message setup fully amortized (S -> inf)."""
+        return min(self.peak_bandwidth, packet_size / self.packet_time(packet_size))
+
+
+# ---------------------------------------------------------------------------
+# Presets
+# ---------------------------------------------------------------------------
+
+# The paper's QSFP+ link: 250 MHz x 128-bit datapath = 4 GB/s raw.
+# 3813 MB/s peak == 95.3 % of raw -> line_efficiency 0.9533.
+# Overhead table calibrated from Fig. 5 peak bandwidths:
+#   X(P) = P * (line_rate / measured_peak(P) - 1)
+#   P=128 -> 2621 MB/s -> 67.4 B      P=256 -> 3419 MB/s -> 43.5 B
+#   P>=512 saturate the 0.9533 ceiling; residual overhead <= ceiling slack.
+FSHMEM_QSFP = LinkParams(
+    name="fshmem-qsfp+",
+    line_rate=4.0e9,
+    line_efficiency=3813.0 / 4000.0,
+    packet_overhead_bytes={128: 67.4, 256: 43.5, 512: 25.1, 1024: 25.1},
+    latency=LatencyParams(
+        t_host_cmd=0.12e-6,
+        t_dma=0.14e-6,
+        t_header=0.09e-6,
+        t_handler=0.03e-6,
+        t_sched=0.12e-6,
+    ),
+)
+
+# TPU v5e ICI, one link direction.  ~50 GB/s/link (task constants).  ICI is
+# circuit-switched with tiny per-hop latency; "packets" here are the chunk
+# granularity of a software-pipelined collective (ART chunk size).  The
+# per-message latency stages model the collective-permute issue overhead.
+TPU_ICI = LinkParams(
+    name="tpu-v5e-ici",
+    line_rate=50.0e9,
+    line_efficiency=0.95,
+    packet_overhead_bytes={512: 64.0, 4096: 64.0, 65536: 64.0},
+    latency=LatencyParams(
+        t_host_cmd=0.0,      # no host on the critical path inside an XLA program
+        t_dma=0.5e-6,        # DMA engine program + launch
+        t_header=1.0e-6,     # per-hop ICI latency
+        t_handler=0.2e-6,
+        t_sched=0.3e-6,
+    ),
+)
+
+
+# ---------------------------------------------------------------------------
+# Transfer-time / bandwidth model
+# ---------------------------------------------------------------------------
+
+
+def n_packets(size_bytes: int, packet_size: int) -> int:
+    return max(1, -(-size_bytes // packet_size))
+
+
+def put_time(link: LinkParams, size_bytes: int, packet_size: int) -> float:
+    """Command-to-completion time of gasnet_put of ``size_bytes``."""
+    if size_bytes == 0:
+        return link.latency.put_short
+    wire = n_packets(size_bytes, packet_size) * link.packet_time(packet_size)
+    wire = max(wire, size_bytes / link.peak_bandwidth)  # encoding ceiling
+    return link.latency.put_long + wire
+
+
+def get_time(link: LinkParams, size_bytes: int, packet_size: int) -> float:
+    """gasnet_get = short request + handler + long PUT reply."""
+    if size_bytes == 0:
+        return link.latency.get_short
+    request = link.latency.put_short + link.latency.t_handler
+    reply_setup = link.latency.t_sched + link.latency.t_dma + link.latency.t_header
+    wire = n_packets(size_bytes, packet_size) * link.packet_time(packet_size)
+    wire = max(wire, size_bytes / link.peak_bandwidth)
+    return request + reply_setup + wire
+
+
+def put_bandwidth(link: LinkParams, size_bytes: int, packet_size: int) -> float:
+    return size_bytes / put_time(link, size_bytes, packet_size)
+
+
+def get_bandwidth(link: LinkParams, size_bytes: int, packet_size: int) -> float:
+    return size_bytes / get_time(link, size_bytes, packet_size)
+
+
+# ---------------------------------------------------------------------------
+# ART overlap model (paper Sec. III-B; used by the case-study benchmark)
+# ---------------------------------------------------------------------------
+
+
+def bulk_time(t_compute: float, t_comm: float, t_msg: float) -> float:
+    """Baseline: compute fully, then one bulk PUT of the whole result."""
+    return t_compute + t_msg + t_comm
+
+
+def art_time(
+    t_compute: float, t_comm: float, t_msg: float, n_chunks: int
+) -> float:
+    """ART: the result is sent in ``n_chunks`` PUTs issued as soon as each
+    chunk of results is valid, overlapping wire time with remaining compute.
+
+    Pipeline model: chunk k's transfer (t_msg + t_comm/n) overlaps compute of
+    chunks k+1..n.  Exposed communication is whatever of the per-chunk
+    transfers does not fit under the remaining compute, plus the final chunk's
+    transfer which can never be hidden.
+    """
+    if n_chunks <= 1:
+        return bulk_time(t_compute, t_comm, t_msg)
+    tc = t_compute / n_chunks
+    tx = t_comm / n_chunks + t_msg
+    # time at which chunk k (0-based) finishes computing: (k+1)*tc
+    # transfers serialize on the link: start_k = max(finish_k, link_free)
+    link_free = 0.0
+    for k in range(n_chunks):
+        start = max((k + 1) * tc, link_free)
+        link_free = start + tx
+    return link_free
+
+
+def art_speedup(
+    t_compute: float, t_comm: float, t_msg: float, n_chunks: int
+) -> float:
+    return bulk_time(t_compute, t_comm, t_msg) / art_time(
+        t_compute, t_comm, t_msg, n_chunks
+    )
+
+
+def best_chunk_count(
+    t_compute: float,
+    t_comm: float,
+    t_msg: float,
+    max_chunks: int = 4096,
+) -> int:
+    """Chunk count minimizing ART time: more chunks hide more wire time but
+    pay more per-message latency — the same U-curve as Fig. 5's packet sizes."""
+    best_n, best_t = 1, bulk_time(t_compute, t_comm, t_msg)
+    n = 1
+    while n <= max_chunks:
+        t = art_time(t_compute, t_comm, t_msg, n)
+        if t < best_t:
+            best_n, best_t = n, t
+        n *= 2
+    return best_n
+
+
+# ---------------------------------------------------------------------------
+# Curve helpers (used by benchmarks/bandwidth.py to reproduce Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+def half_saturation_size(link: LinkParams, packet_size: int) -> int:
+    """Smallest power-of-two transfer reaching half the steady bandwidth."""
+    target = 0.5 * link.steady_bandwidth(packet_size)
+    s = 4
+    while put_bandwidth(link, s, packet_size) < target:
+        s *= 2
+        if s > 1 << 30:
+            raise RuntimeError("no saturation")
+    return s
+
+
+def saturation_size(link: LinkParams, packet_size: int, frac: float = 0.95) -> int:
+    target = frac * link.steady_bandwidth(packet_size)
+    s = 4
+    while put_bandwidth(link, s, packet_size) < target:
+        s *= 2
+        if s > 1 << 30:
+            raise RuntimeError("no saturation")
+    return s

@@ -1,0 +1,246 @@
+"""Partitioned Global Address Space on a JAX mesh — the FSHMEM core.
+
+The paper gives every FPGA a *globally addressed* memory partition plus
+private local memory, and implements one-sided ``gasnet_put`` / ``gasnet_get``
+in hardware so a node can write/read a remote partition without interrupting
+the remote process.  On TPU the native equivalent of that one-sided RDMA is
+``jax.lax.ppermute`` (collective-permute): the sender's DMA engine deposits
+data directly into the receiver's HBM while the receiver keeps computing.
+
+This module provides:
+
+* :class:`SymmetricHeap` — a named bump allocator describing the layout of
+  each rank's partition, so applications address remote data by symbol +
+  offset exactly like SHMEM's symmetric heap.
+* :func:`put` / :func:`get` — one-sided remote write/read between ranks of a
+  mesh axis, usable inside any ``shard_map``-ed function.  ``get`` is
+  deliberately built as *request + reply* (two messages) to preserve the
+  paper's cost structure (GET latency > PUT latency; GET bandwidth below PUT
+  for small transfers).
+* :class:`GlobalAddressSpace` — the user-facing handle bundling a mesh axis
+  with a heap layout and providing jit-ready collective closures.
+
+Addressing model
+----------------
+All functions here run *inside* ``shard_map``: ``heap`` is the caller's local
+partition, a 1-D array of ``heap.size`` elements.  A global address is
+``(rank, offset)``.  Point-to-point routing is expressed with a static
+``perm`` list of ``(src_rank, dst_rank)`` pairs — the SPMD analogue of each
+node knowing its peer — while offsets and payloads are traced values carried
+in the message itself (the AM header of the paper).
+
+Atomicity note: the paper's GASNet core arbitrates handler atomicity in
+hardware.  Inside an XLA program there is no concurrent mutation — SPMD
+dataflow gives every ``put`` a deterministic position in the schedule — so
+handler atomicity is structural rather than arbitrated (see DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+Perm = Sequence[Tuple[int, int]]
+
+
+# ---------------------------------------------------------------------------
+# Symmetric heap layout
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Symbol:
+    name: str
+    offset: int
+    size: int
+
+
+class SymmetricHeap:
+    """Named bump allocator over each rank's partition (SHMEM symmetric heap).
+
+    Every rank has the same layout, so ``heap_addr("x")`` is a valid remote
+    offset on any peer — the defining property of a symmetric heap.
+    """
+
+    def __init__(self, size: int, dtype=jnp.float32):
+        self.size = int(size)
+        self.dtype = dtype
+        self._symbols: Dict[str, Symbol] = {}
+        self._top = 0
+
+    def alloc(self, name: str, size: int) -> Symbol:
+        if name in self._symbols:
+            raise ValueError(f"symbol {name!r} already allocated")
+        if self._top + size > self.size:
+            raise MemoryError(
+                f"symmetric heap overflow: {self._top}+{size} > {self.size}"
+            )
+        sym = Symbol(name, self._top, int(size))
+        self._symbols[name] = sym
+        self._top += int(size)
+        return sym
+
+    def addr(self, name: str) -> int:
+        return self._symbols[name].offset
+
+    def symbol(self, name: str) -> Symbol:
+        return self._symbols[name]
+
+    def zeros_local(self) -> jnp.ndarray:
+        return jnp.zeros((self.size,), self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# One-sided primitives (call inside shard_map)
+# ---------------------------------------------------------------------------
+
+
+def _recv_mask(axis: str, perm: Perm) -> jnp.ndarray:
+    """True on ranks that are a destination in ``perm``."""
+    ones = jnp.ones((), jnp.bool_)
+    return lax.ppermute(ones, axis, list(perm))
+
+
+def put(
+    heap: jnp.ndarray,
+    payload: jnp.ndarray,
+    offset: jnp.ndarray | int,
+    *,
+    axis: str,
+    perm: Perm,
+) -> jnp.ndarray:
+    """One-sided remote write: each ``src`` in ``perm`` deposits ``payload``
+    at ``offset`` words into ``dst``'s partition.  Returns the updated local
+    partition (unchanged on ranks that are not a destination).
+
+    This is the paper's ``gasnet_put``: a single *long* active message whose
+    header carries the destination offset and whose body is the payload.
+    """
+    payload = payload.reshape(-1).astype(heap.dtype)
+    hdr = jnp.asarray(offset, jnp.int32)
+    perm = list(perm)
+    body = lax.ppermute(payload, axis, perm)
+    hdr_r = lax.ppermute(hdr, axis, perm)
+    mask = _recv_mask(axis, perm)
+    written = lax.dynamic_update_slice(heap, body, (hdr_r,))
+    return jnp.where(mask, written, heap)
+
+
+def get(
+    heap: jnp.ndarray,
+    offset: jnp.ndarray | int,
+    size: int,
+    *,
+    axis: str,
+    perm: Perm,
+) -> jnp.ndarray:
+    """One-sided remote read: each ``(requester, source)`` pair in ``perm``
+    reads ``size`` words at ``source``'s ``offset``.  Returns the fetched
+    chunk on requester ranks (zeros elsewhere).
+
+    Faithful two-message structure (short request + long PUT reply): the
+    request carries only the header (offset); the source slices its partition
+    and replies with the payload — the reply handler of the paper's GET flow.
+    """
+    req_perm = [(r, s) for (r, s) in perm]   # requester -> source (short msg)
+    rep_perm = [(s, r) for (r, s) in perm]   # source -> requester (long msg)
+    hdr = jnp.asarray(offset, jnp.int32)
+    hdr_at_src = lax.ppermute(hdr, axis, req_perm)
+    chunk = lax.dynamic_slice(heap, (hdr_at_src,), (size,))
+    reply = lax.ppermute(chunk, axis, rep_perm)
+    mask = _recv_mask(axis, rep_perm)
+    return jnp.where(mask, reply, jnp.zeros_like(reply))
+
+
+def put_ring(
+    heap: jnp.ndarray,
+    payload: jnp.ndarray,
+    offset: jnp.ndarray | int,
+    *,
+    axis: str,
+    shift: int = 1,
+) -> jnp.ndarray:
+    """``put`` along a ring: every rank sends to ``(rank + shift) % n``."""
+    n = lax.axis_size(axis)
+    perm = [(i, (i + shift) % n) for i in range(n)]
+    return put(heap, payload, offset, axis=axis, perm=perm)
+
+
+# ---------------------------------------------------------------------------
+# User-facing handle
+# ---------------------------------------------------------------------------
+
+
+class GlobalAddressSpace:
+    """Bundles a mesh axis with a symmetric-heap layout.
+
+    ``run(fn)`` wraps ``fn(local_heap, *local_args)`` in ``shard_map`` over
+    the PGAS axis so applications write rank-local code with one-sided
+    communication, then call it on globally sharded arrays — the programming
+    model of the paper's Fig. 2.
+    """
+
+    def __init__(self, mesh: jax.sharding.Mesh, axis: str, heap: SymmetricHeap):
+        if axis not in mesh.axis_names:
+            raise ValueError(f"axis {axis!r} not in mesh {mesh.axis_names}")
+        self.mesh = mesh
+        self.axis = axis
+        self.heap = heap
+
+    @property
+    def n_ranks(self) -> int:
+        return self.mesh.shape[self.axis]
+
+    def zeros_global(self) -> jax.Array:
+        """Allocate the global heap: one partition per rank along the axis."""
+        shape = (self.n_ranks * self.heap.size,)
+        sharding = jax.sharding.NamedSharding(self.mesh, P(self.axis))
+        return jax.device_put(jnp.zeros(shape, self.heap.dtype), sharding)
+
+    def run(
+        self,
+        fn: Callable,
+        *,
+        extra_in_specs: Sequence[P] = (),
+        extra_out_specs: P | Sequence[P] | None = None,
+    ) -> Callable:
+        """shard_map ``fn(heap_local, *extras) -> (heap_local, *outs)``."""
+        in_specs = (P(self.axis),) + tuple(extra_in_specs)
+        if extra_out_specs is None:
+            out_specs: object = P(self.axis)
+        else:
+            out_specs = (P(self.axis),) + tuple(
+                extra_out_specs if isinstance(extra_out_specs, (list, tuple))
+                else (extra_out_specs,)
+            )
+        return jax.jit(
+            jax.shard_map(
+                fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs
+            )
+        )
+
+    # Convenience: symbol-level remote write/read closures ------------------
+
+    def write_symbol(self, name: str, *, perm: Perm) -> Callable:
+        sym = self.heap.symbol(name)
+
+        def _w(heap, payload):
+            return put(heap, payload, sym.offset, axis=self.axis, perm=perm)
+
+        return self.run(_w, extra_in_specs=(P(self.axis),))
+
+    def read_symbol(self, name: str, *, perm: Perm) -> Callable:
+        sym = self.heap.symbol(name)
+
+        def _r(heap, _dummy=None):
+            chunk = get(
+                heap, sym.offset, sym.size, axis=self.axis, perm=perm
+            )
+            return heap, chunk
+
+        return self.run(_r, extra_out_specs=P(self.axis))

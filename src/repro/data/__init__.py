@@ -1,0 +1,5 @@
+"""Deterministic, shard-aware, resumable synthetic data pipeline."""
+
+from repro.data.pipeline import DataConfig, SyntheticLM, batch_specs
+
+__all__ = ["DataConfig", "SyntheticLM", "batch_specs"]

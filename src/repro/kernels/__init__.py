@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the compute hot-spots (each: kernel + ops + ref).
+
+matmul           — DLA-analogue fused matmul+bias+activation (MXU tiling)
+flash_attention  — online-softmax attention, GQA/causal/sliding-window
+ssd              — Mamba-2 chunked state-space scan (state carried in VMEM)
+
+All validate against their pure-jnp ref oracles under interpret=True on CPU
+(the container has no TPU); ``ops.py`` wrappers auto-select interpret mode.
+"""
+
+from repro.kernels import flash_attention, matmul, ssd
+
+__all__ = ["flash_attention", "matmul", "ssd"]

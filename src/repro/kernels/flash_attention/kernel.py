@@ -1,0 +1,147 @@
+"""Pallas flash attention (online softmax) with GQA and sliding windows.
+
+The perf-critical compute of every assigned transformer arch.  TPU-native
+tiling: the grid walks (batch·q_heads, q_blocks, kv_blocks); each step stages
+a q tile and a kv tile in VMEM and maintains the running max / normalizer /
+accumulator in fp32 VMEM scratch — the memory hierarchy expressly replaces
+the HBM-resident (S×S) score matrix, which at the prefill_32k shape would be
+32768² × 4 B = 4 GB per head.
+
+GQA is handled in the *index map*: the kv block index is derived from the q
+head (``kvh = qh // group``), so kv tiles are fetched once per kv head and
+never replicated in HBM.  Sliding-window attention (h2o-danube) adds a lower
+bound to the visible column range; fully-masked tiles short-circuit.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _attn_kernel(
+    q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+    *, scale: float, causal: bool, window: int | None,
+    block_q: int, block_kv: int, n_kv_blocks: int,
+):
+    i = pl.program_id(1)  # q block
+    j = pl.program_id(2)  # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # visibility interval of this (i, j) tile pair
+    def tile_visible():
+        if not causal and window is None:
+            return True
+        vis = True
+        if causal:
+            # lowest q row is i*bq; highest kv col is j*bkv + bkv - 1
+            vis = vis & (j * block_kv <= i * block_q + block_q - 1)
+        if window is not None:
+            # highest kv col must be >= lowest visible col of highest q row
+            vis = vis & (j * block_kv + block_kv - 1 >= i * block_q - window + 1)
+        return vis
+
+    @pl.when(tile_visible())
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)   # (bq, d)
+        k = k_ref[0].astype(jnp.float32)   # (bkv, d)
+        v = v_ref[0].astype(jnp.float32)   # (bkv, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                           # (bq, bkv)
+
+        rows = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        cols = j * block_kv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= cols <= rows
+        if window is not None:
+            mask &= cols > rows - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[:, 0:1]                      # (bq, 1)
+        m_cur = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        # exp of masked entries must be exactly 0 (not exp(-inf - -inf)=1)
+        p = jnp.where(s <= NEG_INF / 2, 0.0, jnp.exp(s - m_cur))
+        alpha = jnp.exp(m_prev - m_cur)             # (bq, 1)
+        l_new = l_ref[:, 0:1] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = jnp.broadcast_to(m_cur, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == n_kv_blocks - 1)
+    def _finish():
+        l = l_ref[:, 0:1]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D); Hq % Hkv == 0.
+
+    Sq/Skv must be divisible by the block sizes (ops.flash_attention pads).
+    Returns (B, Hq, Sq, D) in q.dtype.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % block_q == 0 and skv % block_kv == 0, (sq, skv, block_q, block_kv)
+    scale = scale if scale is not None else d ** -0.5
+
+    qf = q.reshape(b * hq, sq, d)
+    kf = k.reshape(b * hkv, skv, d)
+    vf = v.reshape(b * hkv, skv, d)
+    n_kv_blocks = skv // block_kv
+
+    def kv_index(bh, i, j):
+        return ((bh // hq) * hkv + (bh % hq) // group, j, 0)
+
+    kernel = functools.partial(
+        _attn_kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_kv=block_kv, n_kv_blocks=n_kv_blocks,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * hq, sq // block_q, n_kv_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+            pl.BlockSpec((1, block_kv, d), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+            pltpu.VMEM((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, hq, sq, d)

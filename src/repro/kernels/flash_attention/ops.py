@@ -1,0 +1,57 @@
+"""jit'd wrapper for flash attention: padding + CPU interpret fallback."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+def _pad_seq(x: jnp.ndarray, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[2]) % mult
+    if pad == 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, 0), (0, pad), (0, 0)))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_kv", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_kv: int = 128,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """Flash attention over (B, H, S, D) tensors with GQA kv (B, Hkv, S, D).
+
+    Sequence lengths are padded to block multiples; because padding keys are
+    *future* positions under the causal mask (and windowed mask), they are
+    invisible to real queries, and padded query rows are cropped.
+    For non-causal use, padded kv would attend — so we require causal or
+    explicit full blocks there (asserted).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    sq, skv = q.shape[2], k.shape[2]
+    if not causal:
+        assert sq % block_q == 0 and skv % block_kv == 0, (
+            "non-causal attention requires block-aligned sequence lengths "
+            f"(got {sq=}, {skv=})")
+    qp, kp, vp = _pad_seq(q, block_q), _pad_seq(k, block_kv), _pad_seq(v, block_kv)
+    out = flash_attention_pallas(
+        qp, kp, vp,
+        causal=causal, window=window, scale=scale,
+        block_q=block_q, block_kv=block_kv, interpret=interpret,
+    )
+    return out[:, :, :sq, :]

@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (materializes the score matrix)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  GQA by kv-head repeat."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum(
+        "bhqd,bhkd->bhqk", q.astype(jnp.float32), kk.astype(jnp.float32)
+    ) * scale
+    rows = jnp.arange(sq)[:, None]
+    cols = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= cols <= rows
+    if window is not None:
+        mask &= cols > rows - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    denom = p.sum(axis=-1, keepdims=True)
+    denom = jnp.where(denom == 0.0, 1.0, denom)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p / denom, vv.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,5 @@
+from repro.kernels.matmul.kernel import matmul_pallas
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+
+__all__ = ["matmul", "matmul_pallas", "matmul_ref"]

@@ -1,0 +1,71 @@
+"""jit'd public wrapper around the Pallas matmul: padding, dtype policy,
+interpret-mode fallback on CPU, and batched (3-D) inputs."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul.kernel import matmul_pallas
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "activation", "block_m", "block_n", "block_k", "out_dtype", "interpret"
+    ),
+)
+def matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    activation: str = "none",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    """DLA-style fused ``activation(x @ w + bias)``.
+
+    Accepts (M, K) or batched (..., M, K) ``x``; arbitrary (unaligned) shapes
+    are zero-padded to block multiples and cropped after — zero rows/cols of
+    a matmul are exact, and all supported activations map 0 -> 0, so padding
+    does not perturb results.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    out_dtype = out_dtype or x.dtype
+
+    batch_shape = x.shape[:-2]
+    m, k = x.shape[-2], x.shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape((-1, k)) if batch_shape else x
+    # fold batch into M (weights shared across batch)
+    xp = _pad_to(_pad_to(x2, 0, block_m), 1, block_k)
+    wp = _pad_to(_pad_to(w, 0, block_k), 1, block_n)
+    bp = _pad_to(bias, 0, block_n) if bias is not None else None
+    y = matmul_pallas(
+        xp, wp, bp,
+        activation=activation,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype, interpret=interpret,
+    )
+    y = y[: x2.shape[0], :n]
+    return y.reshape(batch_shape + (m, n)) if batch_shape else y

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Pallas matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: jnp.ndarray | None = None,
+    *,
+    activation: str = "none",
+    out_dtype=None,
+) -> jnp.ndarray:
+    out_dtype = out_dtype or x.dtype
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif activation == "relu2":
+        r = jnp.maximum(y, 0.0)
+        y = r * r
+    elif activation == "silu":
+        y = y * jax.nn.sigmoid(y)
+    elif activation == "gelu":
+        y = jax.nn.gelu(y)
+    elif activation != "none":
+        raise ValueError(activation)
+    return y.astype(out_dtype)

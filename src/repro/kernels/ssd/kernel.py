@@ -1,0 +1,137 @@
+"""Pallas SSD (state-space duality) kernel — Mamba-2's chunked scan.
+
+Implements the SSD decomposition (Dao & Gu, arXiv:2405.21060): the sequence
+is split into chunks of length L; within a chunk the recurrence is computed
+as a (masked, decay-weighted) attention-like matmul (MXU work), and across
+chunks only the (N×P) state is carried — giving O(S·L) work with O(N·P)
+carried state instead of the O(S²) of attention.  This is what makes the
+``long_500k`` shape feasible for mamba2/zamba2.
+
+Recurrence (per batch b, head h, with group g = h // (H//G)):
+    state_t = exp(A_h·dt_t)·state_{t-1} + dt_t · B_t ⊗ x_t        (N×P)
+    y_t     = C_tᵀ·state_t + D_h·x_t
+
+Chunked form computed by the kernel per chunk (cum = inclusive cumsum of
+a_t = A_h·dt_t within the chunk; total = cum[L−1]):
+    Y_intra = ((C Bᵀ) ⊙ exp(cum_i − cum_j) ⊙ dt_j ⊙ [i ≥ j]) @ X
+    Y_inter = exp(cum) ⊙ (C @ state_prev)
+    state   = exp(total)·state_prev + (B ⊙ dt·exp(total − cum))ᵀ @ X
+
+TPU mapping: grid = (B, H, S/L); the chunk axis is innermost, so the fp32
+(N×P) state lives in VMEM scratch across the sequential chunk walk — the
+carried state never touches HBM (the same locality the paper gets from
+keeping data in each FPGA's partition).  All decays are ≤ 1 (A < 0, dt > 0),
+so exp() is numerically safe in fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_out_ref, state_ref,
+    *, n_chunks: int, chunk: int,
+):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (L, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (L,)
+    a_log = a_ref[0].astype(jnp.float32) * dt       # (L,)  A_h * dt_t  (< 0)
+    bmat = b_ref[0, :, 0, :].astype(jnp.float32)    # (L, N)
+    cmat = c_ref[0, :, 0, :].astype(jnp.float32)    # (L, N)
+    d_skip = d_ref[0].astype(jnp.float32)
+
+    cum = jnp.cumsum(a_log)                         # (L,)
+    total = cum[chunk - 1]
+
+    # --- intra-chunk: masked decay-weighted "attention" ---
+    seg = cum[:, None] - cum[None, :]               # (L, L) ; i>=j => <= 0
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    seg = jnp.where(ii >= jj, seg, NEG_INF)
+    scores = jax.lax.dot_general(
+        cmat, bmat, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (L, L) C_i · B_j
+    weights = scores * jnp.exp(seg) * dt[None, :]
+    y = jax.lax.dot_general(
+        weights, x, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )                                               # (L, P)
+
+    # --- inter-chunk: contribution of the carried state ---
+    state = state_ref[...]                          # (N, P)
+    y += jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cmat, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    # --- D skip connection ---
+    y += d_skip * x
+
+    # --- state update (overlappable with next chunk's intra work) ---
+    decay_to_end = jnp.exp(total - cum) * dt        # (L,)
+    state_ref[...] = jnp.exp(total) * state + jax.lax.dot_general(
+        bmat * decay_to_end[:, None], x,
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_pallas(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)   positive
+    a: jnp.ndarray,      # (H,)        negative
+    b: jnp.ndarray,      # (B, S, G, N)
+    c: jnp.ndarray,      # (B, S, G, N)
+    d: jnp.ndarray,      # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+):
+    """Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32)."""
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    assert h % g == 0, (h, g)
+    assert s % chunk == 0, (s, chunk)
+    hpg = h // g
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d)
+    return y, state

@@ -1,0 +1,72 @@
+"""Pure-jnp oracle for the SSD kernel: the exact sequential recurrence."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(
+    x: jnp.ndarray,      # (B, S, H, P)
+    dt: jnp.ndarray,     # (B, S, H)
+    a: jnp.ndarray,      # (H,)
+    b: jnp.ndarray,      # (B, S, G, N)
+    c: jnp.ndarray,      # (B, S, G, N)
+    d: jnp.ndarray,      # (H,)
+):
+    """Step-by-step recurrence (the definition the chunked kernel must match).
+
+    Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32).
+    """
+    bsz, s, h, p = x.shape
+    _, _, g, n = b.shape
+    hpg = h // g
+    bh = jnp.repeat(b, hpg, axis=2).astype(jnp.float32)  # (B,S,H,N)
+    ch = jnp.repeat(c, hpg, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    af = a.astype(jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,H,N), (B,H,N)
+        decay = jnp.exp(af[None, :] * dtt)                       # (B,H)
+        state = decay[..., None, None] * state + (
+            dtt[..., None, None] * bt[..., :, None] * xt[..., None, :]
+        )                                                        # (B,H,N,P)
+        yt = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, yt
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    inputs = (
+        jnp.moveaxis(xf, 1, 0),
+        jnp.moveaxis(dtf, 1, 0),
+        jnp.moveaxis(bh, 1, 0),
+        jnp.moveaxis(ch, 1, 0),
+    )
+    final_state, ys = jax.lax.scan(step, state0, inputs)
+    y = jnp.moveaxis(ys, 0, 1) + d.astype(jnp.float32) [None, None, :, None] * xf
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(
+    state: jnp.ndarray,  # (B, H, N, P) fp32
+    xt: jnp.ndarray,     # (B, H, P)
+    dtt: jnp.ndarray,    # (B, H)
+    a: jnp.ndarray,      # (H,)
+    bt: jnp.ndarray,     # (B, G, N)
+    ct: jnp.ndarray,     # (B, G, N)
+    d: jnp.ndarray,      # (H,)
+):
+    """Single-token recurrence for serving (O(1) per token — why the SSM
+    archs run the long_500k decode shape).  Returns (state, y_t)."""
+    bsz, h, n, p = state.shape
+    g = bt.shape[1]
+    hpg = h // g
+    bh = jnp.repeat(bt, hpg, axis=1).astype(jnp.float32)  # (B,H,N)
+    ch = jnp.repeat(ct, hpg, axis=1).astype(jnp.float32)
+    decay = jnp.exp(a.astype(jnp.float32)[None, :] * dtt)  # (B,H)
+    state = decay[..., None, None] * state + (
+        dtt[..., None, None] * bh[..., :, None] * xt.astype(jnp.float32)[..., None, :]
+    )
+    y = jnp.einsum("bhn,bhnp->bhp", ch, state) + d[None, :, None] * xt
+    return state, y.astype(xt.dtype)

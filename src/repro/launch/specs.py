@@ -1,0 +1,102 @@
+"""Per-(arch × shape) input specs + step configs for the dry-run.
+
+``input_specs(cfg, cell)`` returns ShapeDtypeStruct stand-ins for every
+model input — weak-type-correct, shardable, zero allocation.  ``[vlm]`` and
+``[audio]`` archs get precomputed patch/frame embeddings per the task spec
+(the frontend is a stub).
+
+Adaptations (recorded in EXPERIMENTS §Dry-run notes):
+  * whisper-tiny sequence dims clamp to its decoder capacity (4096 learned
+    positions; official 448) — a 32k decoder context does not exist for
+    this architecture.
+  * vlm text length = seq_len − frontend_tokens so the total backbone
+    sequence equals the cell's seq_len exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeCell
+from repro.dist.steps import StepConfig
+
+
+WHISPER_MAX_SEQ = 4096   # learned decoder position table
+
+
+def effective_seq(cfg: ModelConfig, cell: ShapeCell) -> int:
+    if cfg.family == "encdec":
+        return min(cell.seq_len, WHISPER_MAX_SEQ)
+    return cell.seq_len
+
+
+def text_len(cfg: ModelConfig, cell: ShapeCell) -> int:
+    s = effective_seq(cfg, cell)
+    if cfg.family == "vlm" and cell.kind in ("train", "prefill"):
+        return s - cfg.frontend_tokens
+    return s
+
+
+def frontend_spec(cfg: ModelConfig, batch: int):
+    if not cfg.frontend:
+        return None
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.frontend_tokens, cfg.frontend_dim), jnp.float32)
+
+
+def train_input_specs(cfg: ModelConfig, cell: ShapeCell) -> Dict:
+    s = text_len(cfg, cell)
+    b = cell.global_batch
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    fe = frontend_spec(cfg, b)
+    if fe is not None:
+        specs["frontend_embeds"] = fe
+    return specs
+
+
+def prefill_input_specs(cfg: ModelConfig, cell: ShapeCell) -> Tuple:
+    s = text_len(cfg, cell)
+    b = cell.global_batch
+    toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    fe = frontend_spec(cfg, b)
+    return (toks,) if fe is None else (toks, fe)
+
+
+def decode_token_specs(cell: ShapeCell):
+    return jax.ShapeDtypeStruct((cell.global_batch,), jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# per-arch step presets (numerics + microbatching chosen to fit 16 GB HBM;
+# the resulting per-device bytes are *reported* by the dry-run)
+# ---------------------------------------------------------------------------
+
+
+def step_config(cfg: ModelConfig, cell: ShapeCell) -> StepConfig:
+    n = cfg.n_params()
+    big = n >= 100e9          # grok-1, nemotron, llama4-scout
+    if cell.kind == "train":
+        if big:
+            micro = 16
+        elif n >= 2e9:
+            micro = 4
+        else:
+            micro = 2
+        # keep per-microbatch row count >= 1
+        micro = min(micro, cell.global_batch)
+        return StepConfig(
+            microbatches=micro,
+            seq_chunk=min(2048, cell.seq_len),
+            moment_dtype="bfloat16" if big else "float32",
+            master_fp32=not big,
+            sequence_parallel=True,
+        )
+    return StepConfig(sequence_parallel=False)

@@ -1,0 +1,16 @@
+"""Pure-JAX model zoo (no flax): layers, family assembly, decode path."""
+
+from repro.models import decode, layers, model
+from repro.models.decode import decode_step, init_cache
+from repro.models.model import (
+    count_params_analytic,
+    forward,
+    init_params,
+    loss_fn,
+)
+
+__all__ = [
+    "decode", "layers", "model",
+    "decode_step", "init_cache",
+    "count_params_analytic", "forward", "init_params", "loss_fn",
+]

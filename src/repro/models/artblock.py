@@ -1,0 +1,123 @@
+"""ART-on-tensor-parallel transformer block (the paper's technique applied
+to training, beyond-paper §Perf lever).
+
+Runs *manually* over the "model" axis (partial-manual ``jax.shard_map``:
+data axes stay GSPMD).  Every TP collective of the dense block is replaced
+by a hand-scheduled ring from ``core.overlap`` — the gasnet_put chunk
+pipeline of Sec. III-B:
+
+  column-parallel QKV/up:  ``allgather_matmul``  (gather hidden under the
+                           sub-matmuls, bidirectional ring)
+  row-parallel O/down:     ``matmul_reducescatter`` (partial sums ride the
+                           ring while the next sub-matmul runs — literally
+                           Fig. 6(a) per layer)
+  K/V broadcast:           ``ring_all_gather`` of the (small) S-sharded
+                           K/V projections (GQA: n_kv < tp, so K/V are
+                           computed outside and ring-gathered whole)
+
+Structure note: norms and the K/V projections run OUTSIDE the manual
+region (GSPMD), so every tensor the manual region differentiates is
+tp-SHARDED — gradients w.r.t. *replicated* shard_map inputs trip an
+XLA-CPU crash at 512 devices (minimal repro in EXPERIMENTS.md §Perf
+notes), and replicated-input wgrads would psum over tp anyway.
+
+Constraints: n_heads % tp == 0, d_ff % tp == 0, d_model % tp == 0,
+S % tp == 0 (sequence-sharded residual).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core.collectives import ring_all_gather
+from repro.core.overlap import allgather_matmul, matmul_reducescatter
+from repro.models import layers as L
+
+Params = Dict[str, Any]
+
+BIDIR = True
+
+
+def supports_art_tp(cfg: ModelConfig, tp: int) -> bool:
+    if cfg.family not in ("dense", "vlm") or cfg.attn_type == "mla":
+        return False
+    if cfg.n_heads % tp != 0:
+        return False
+    if cfg.d_ff % tp != 0 or cfg.d_model % tp != 0:
+        return False
+    return True
+
+
+def _vmap_ag(x, w, axis):
+    return jax.vmap(
+        lambda xb: allgather_matmul(xb, w, axis=axis, bidirectional=BIDIR)
+    )(x)
+
+
+def _vmap_rs(x, w, axis):
+    return jax.vmap(
+        lambda xb: matmul_reducescatter(xb, w, axis=axis, bidirectional=BIDIR)
+    )(x)
+
+
+def art_attention_part(cfg: ModelConfig, x, a_in, k_shard, v_shard,
+                       wq, wo, positions, *, axis: str = "model"):
+    """Manual region 1: QKV via ART rings + local-head attention + O ring.
+
+    x, a_in: (B, S/tp, D) local; k_shard/v_shard: (B, S/tp, n_kv·hd);
+    wq: (D, hq_loc·hd) column-local; wo: (hq_loc·hd, D) row-local.
+    """
+    tp = lax.axis_size(axis)
+    my = lax.axis_index(axis)
+    cd = jnp.dtype(cfg.compute_dtype)
+    hd = cfg.resolved_head_dim
+    hq_loc = cfg.n_heads // tp
+    b = x.shape[0]
+
+    q = _vmap_ag(a_in.astype(cd), wq.astype(cd), axis)     # (B, S, nq)
+    s_full = q.shape[1]
+    q = q.reshape(b, s_full, hq_loc, hd).transpose(0, 2, 1, 3)
+
+    # gasnet-style K/V broadcast: ring-gather the sequence-sharded K/V
+    k = jax.vmap(lambda t: ring_all_gather(t, axis=axis))(k_shard.astype(cd))
+    v = jax.vmap(lambda t: ring_all_gather(t, axis=axis))(v_shard.astype(cd))
+    n_kv = k.shape[-1] // hd
+    k = k.reshape(b, s_full, n_kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s_full, n_kv, hd).transpose(0, 2, 1, 3)
+
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+
+    group = cfg.n_heads // cfg.n_kv_heads
+    q_global = my * hq_loc + jnp.arange(hq_loc)
+    kv_idx = q_global // group
+    k_sel = jnp.take(k, kv_idx, axis=1)        # (B, hq_loc, S, hd)
+    v_sel = jnp.take(v, kv_idx, axis=1)
+
+    out = L.blockwise_attention(
+        q, k_sel, v_sel, causal=True, window=cfg.window,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        causal_skip=cfg.causal_block_skip)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s_full, hq_loc * hd)
+    return x + _vmap_rs(out, wo.astype(cd), axis).astype(x.dtype)
+
+
+def art_mlp_part(cfg: ModelConfig, h, m_in, w_up, w_gate, w_down,
+                 *, axis: str = "model"):
+    """Manual region 2: gated MLP with AG/RS rings.  h, m_in local."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    m_in = m_in.astype(cd)
+    w_up = w_up.astype(cd)
+    if w_gate is not None:
+        up_cat = _vmap_ag(m_in, jnp.concatenate(
+            [w_up, w_gate.astype(cd)], axis=1), axis)
+        f_loc = w_up.shape[1]
+        act = L._act(cfg.activation, up_cat[..., f_loc:]) * up_cat[..., :f_loc]
+    else:
+        act = L._act(cfg.activation, _vmap_ag(m_in, w_up, axis))
+    return h + _vmap_rs(act, w_down.astype(cd), axis).astype(h.dtype)

@@ -1,0 +1,409 @@
+"""Serving path: per-family caches + single-token decode step.
+
+``decode_*`` shapes in the dry-run lower exactly this ``decode_step`` (one
+new token against a populated cache), never ``train_step``.
+
+Cache design notes (these drive the decode-shape roofline memory term):
+
+* GQA: ring-buffer K/V — ``S_buf = min(max_seq, window)``; for h2o-danube's
+  4096-token sliding window the long_500k cache is 4096 slots, not 500k
+  (the reason the arch runs that shape at all).  A shared ``slot_pos``
+  array maps buffer slots to absolute positions; masking validates
+  ``pos - window < slot_pos <= pos``.
+* MLA (minicpm3): caches the 256-d latent + 32-d shared rope key instead of
+  per-head K/V, and uses the *absorbed* formulation (W_uk folded into the
+  query, W_uv into the output) so per-token work is O(S_buf · r).
+* SSD: O(1) state — (H, N, P) fp32 per layer + a (conv−1)-deep conv ring.
+* hybrid: SSM states for all 81 layers + one K/V cache per *application*
+  of the shared attention block (weights are shared; caches are not).
+* encdec: decoder self-attention ring + precomputed cross K/V per layer.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.model import _lm_logits
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _cd(cfg):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _kv_buf(cfg: ModelConfig, max_seq: int) -> int:
+    return min(max_seq, cfg.window) if cfg.window else max_seq
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               enc_out: Optional[jnp.ndarray] = None,
+               params: Optional[Params] = None) -> Cache:
+    dt = jnp.dtype(cfg.param_dtype)
+    hd = cfg.resolved_head_dim if cfg.n_heads else 0
+    sb = _kv_buf(cfg, max_seq)
+    cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
+
+    if cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla":
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sb, hd), dt)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sb, hd), dt)
+        cache["slot_pos"] = jnp.full((sb,), -1, jnp.int32)
+    elif cfg.attn_type == "mla":
+        cache["ckv"] = jnp.zeros((cfg.n_layers, batch, sb, cfg.kv_lora_rank), dt)
+        cache["krope"] = jnp.zeros((cfg.n_layers, batch, sb, cfg.qk_rope_dim), dt)
+        cache["slot_pos"] = jnp.full((sb,), -1, jnp.int32)
+    elif cfg.family == "ssm":
+        cache.update(_ssm_cache(cfg, cfg.n_layers, batch, dt))
+    elif cfg.family == "hybrid":
+        cache.update(_ssm_cache(cfg, cfg.n_layers, batch, dt))
+        n_apps = cfg.n_layers // cfg.hybrid_period
+        cache["attn_k"] = jnp.zeros((n_apps, batch, cfg.n_kv_heads, sb, hd), dt)
+        cache["attn_v"] = jnp.zeros((n_apps, batch, cfg.n_kv_heads, sb, hd), dt)
+        cache["slot_pos"] = jnp.full((sb,), -1, jnp.int32)
+    elif cfg.family == "encdec":
+        sdec = min(max_seq, 4096)
+        cache["k"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sdec, hd), dt)
+        cache["v"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sdec, hd), dt)
+        cache["slot_pos"] = jnp.full((sdec,), -1, jnp.int32)
+        if enc_out is not None:
+            assert params is not None
+            def xkv(lp):
+                k, v, _ = L.cross_kv(cfg, lp["xattn"], enc_out)
+                return k.astype(dt), v.astype(dt)
+            ks, vs = jax.vmap(xkv)(params["dec_layers"])
+            cache["cross_k"], cache["cross_v"] = ks, vs
+        else:
+            cache["cross_k"] = jnp.zeros(
+                (cfg.n_layers, batch, cfg.n_kv_heads, cfg.encoder_seq, hd), dt)
+            cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
+    return cache
+
+
+def _ssm_cache(cfg: ModelConfig, n_layers: int, batch: int, dt) -> Cache:
+    d_in = cfg.ssm_heads * cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "ssm_state": jnp.zeros(
+            (n_layers, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32),
+        "conv_state": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_ch), dt),
+    }
+
+
+def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
+    """Analytic cache footprint (roofline memory term for decode shapes)."""
+    c = init_cache(cfg, 1, 8)  # layout probe, tiny
+    del c
+    leaves = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(leaves))
+
+
+# ---------------------------------------------------------------------------
+# per-layer decode primitives
+# ---------------------------------------------------------------------------
+
+
+def _masked_softmax_attend(scores, vcache, slot_pos, pos, window):
+    """scores: (B, Hkv, G, S_buf) fp32; vcache: (B, Hkv, S_buf, hd)."""
+    valid = slot_pos >= 0
+    valid &= slot_pos <= pos
+    if window is not None:
+        valid &= slot_pos > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    m = scores.max(-1, keepdims=True)
+    p = jnp.where(scores <= -1e29, 0.0, jnp.exp(scores - m))
+    denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    p = p / denom
+    return jnp.einsum("bkgs,bksd->bkgd", p, vcache.astype(jnp.float32))
+
+
+def attention_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     kc: jnp.ndarray, vc: jnp.ndarray,
+                     slot_pos_new: jnp.ndarray, pos: jnp.ndarray,
+                     rope: bool = True, window: Optional[int] = None):
+    """x: (B, D) single token.  Returns (out (B, D), kc, vc)."""
+    b, _ = x.shape
+    hd = cfg.resolved_head_dim
+    hkv, hq = cfg.n_kv_heads, cfg.n_heads
+    g = hq // hkv
+    sb = kc.shape[2]
+    cd = _cd(cfg)
+    xc = x.astype(cd)
+
+    q = (xc @ p["wq"].astype(cd)).reshape(b, hq, hd)
+    k = (xc @ p["wk"].astype(cd)).reshape(b, hkv, hd)
+    v = (xc @ p["wv"].astype(cd)).reshape(b, hkv, hd)
+    if rope:
+        posv = pos[None]
+        q = L.apply_rope(q[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
+        k = L.apply_rope(k[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
+
+    slot = pos % sb
+    kc = lax.dynamic_update_slice(kc, k[:, :, None, :].astype(kc.dtype),
+                                  (0, 0, slot, 0))
+    vc = lax.dynamic_update_slice(vc, v[:, :, None, :].astype(vc.dtype),
+                                  (0, 0, slot, 0))
+    qg = q.reshape(b, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
+    scores = jnp.einsum("bkgd,bksd->bkgs", qg, kc.astype(jnp.float32))
+    out = _masked_softmax_attend(scores, vc, slot_pos_new, pos, window)
+    out = out.reshape(b, hq * hd).astype(cd)
+    return (out @ p["wo"].astype(cd)).astype(x.dtype), kc, vc
+
+
+def cross_attention_decode(cfg, p, x, kc, vc, n_valid: int):
+    """Cross-attention against static (precomputed) encoder K/V."""
+    b, _ = x.shape
+    hd = cfg.resolved_head_dim
+    hkv, hq = cfg.n_kv_heads, cfg.n_heads
+    g = hq // hkv
+    cd = _cd(cfg)
+    q = (x.astype(cd) @ p["wq"].astype(cd)).reshape(b, hkv, g, hd)
+    scores = jnp.einsum("bkgd,bksd->bkgs", q.astype(jnp.float32) * hd ** -0.5,
+                        kc.astype(jnp.float32))
+    m = scores.max(-1, keepdims=True)
+    pr = jnp.exp(scores - m)
+    pr = pr / jnp.maximum(pr.sum(-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bkgs,bksd->bkgd", pr, vc.astype(jnp.float32))
+    out = out.reshape(b, hq * hd).astype(cd)
+    return (out @ p["wo"].astype(cd)).astype(x.dtype)
+
+
+def mla_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+               ckv: jnp.ndarray, krope: jnp.ndarray,
+               slot_pos_new: jnp.ndarray, pos: jnp.ndarray):
+    """Absorbed MLA decode.  x: (B, D); ckv: (B, S_buf, r); krope: (B, S_buf, dr)."""
+    b, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    sb = ckv.shape[1]
+    cd = _cd(cfg)
+    xc = x.astype(cd)
+
+    q_lat = L.rms_norm(p["q_norm"], xc @ p["w_dq"].astype(cd), cfg.norm_eps)
+    q = (q_lat @ p["w_uq"].astype(cd)).reshape(b, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope[:, :, None, :], pos[None], cfg.rope_theta)[:, :, 0]
+    w_uk = p["w_uk"].astype(cd).reshape(r, h, dn)
+    q_eff = jnp.einsum("bhd,rhd->bhr", q_nope, w_uk)      # absorb W_uk
+
+    dkv = xc @ p["w_dkv"].astype(cd)
+    c_new = L.rms_norm(p["kv_norm"], dkv[:, :r], cfg.norm_eps)
+    kr_new = L.apply_rope(dkv[:, None, None, r:], pos[None],
+                          cfg.rope_theta)[:, 0, 0]
+    slot = pos % sb
+    ckv = lax.dynamic_update_slice(ckv, c_new[:, None, :].astype(ckv.dtype),
+                                   (0, slot, 0))
+    krope = lax.dynamic_update_slice(krope, kr_new[:, None, :].astype(krope.dtype),
+                                     (0, slot, 0))
+    scale = (dn + dr) ** -0.5
+    scores = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
+                         ckv.astype(jnp.float32))
+              + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
+                           krope.astype(jnp.float32))) * scale
+    valid = (slot_pos_new >= 0) & (slot_pos_new <= pos)
+    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    m = scores.max(-1, keepdims=True)
+    pr = jnp.where(scores <= -1e29, 0.0, jnp.exp(scores - m))
+    pr = pr / jnp.maximum(pr.sum(-1, keepdims=True), 1e-30)
+    out_lat = jnp.einsum("bhs,bsr->bhr", pr, ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].astype(cd).reshape(r, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(cd), w_uv)  # absorb W_uv
+    out = out.reshape(b, h * dv)
+    return (out @ p["wo"].astype(cd)).astype(x.dtype), ckv, krope
+
+
+def mamba2_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  ssm_state: jnp.ndarray, conv_state: jnp.ndarray):
+    """Single-token Mamba-2 step.  x: (B, D); ssm_state: (B, H, N, P) fp32;
+    conv_state: (B, conv-1, conv_ch)."""
+    from repro.kernels.ssd.ref import ssd_decode_step
+
+    b, _ = x.shape
+    h, pdim, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    d_in = h * pdim
+    cd = _cd(cfg)
+    xc = x.astype(cd)
+
+    zxbcdt = xc @ p["in_proj"].astype(cd)
+    z = zxbcdt[:, :d_in]
+    xbc_new = zxbcdt[:, d_in: 2 * d_in + 2 * g * n]
+    dt_raw = zxbcdt[:, 2 * d_in + 2 * g * n:]
+
+    # conv ring: full window = [conv_state ; xbc_new]
+    win = jnp.concatenate([conv_state, xbc_new[:, None, :]], axis=1)  # (B,K,C)
+    conv_out = jnp.einsum("bkc,kc->bc", win.astype(cd), p["conv_w"].astype(cd))
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(cd))
+    conv_state = win[:, 1:, :]
+
+    xs = conv_out[:, :d_in].reshape(b, h, pdim)
+    bmat = conv_out[:, d_in: d_in + g * n].reshape(b, g, n)
+    cmat = conv_out[:, d_in + g * n:].reshape(b, g, n)
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"][None, :])
+    a = -jnp.exp(p["a_log"])
+
+    ssm_state, y = ssd_decode_step(ssm_state, xs, dtv, a, bmat, cmat, p["d_skip"])
+    y = y.reshape(b, d_in).astype(cd)
+    y = L.rms_norm(p["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(cd)).astype(x.dtype)
+    return out, ssm_state, conv_state
+
+
+# ---------------------------------------------------------------------------
+# family-level decode step
+# ---------------------------------------------------------------------------
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
+                tokens: jnp.ndarray) -> Tuple[Cache, jnp.ndarray]:
+    """tokens: (B,) int32 — returns (cache', logits (B, V))."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)  # (B, D)
+
+    if "slot_pos" in cache:
+        sb = cache["slot_pos"].shape[0]
+        slot_pos_new = cache["slot_pos"].at[pos % sb].set(pos)
+    else:
+        slot_pos_new = None
+
+    if cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla":
+        def body(h, layer):
+            lp, kc, vc = layer
+            normed = L.apply_norm(cfg, lp["ln1"], h)
+            a, kc, vc = attention_decode(cfg, lp["attn"], normed, kc, vc,
+                                         slot_pos_new, pos, window=cfg.window)
+            h = h + a
+            normed2 = L.apply_norm(cfg, lp["ln2"], h)
+            if cfg.family == "moe":
+                f = L.moe(cfg, lp["moe"], normed2[:, None, :],
+                          dense_combine=True)[:, 0]
+            else:
+                f = L.mlp(cfg, lp["mlp"], normed2)
+            return h + f, (kc, vc)
+
+        x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        cache = dict(cache, k=ks, v=vs, slot_pos=slot_pos_new, pos=pos + 1)
+
+    elif cfg.attn_type == "mla":
+        def body(h, layer):
+            lp, ck, kr = layer
+            normed = L.apply_norm(cfg, lp["ln1"], h)
+            a, ck, kr = mla_decode(cfg, lp["attn"], normed, ck, kr,
+                                   slot_pos_new, pos)
+            h = h + a
+            f = L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], h))
+            return h + f, (ck, kr)
+
+        x, (cks, krs) = lax.scan(
+            body, x, (params["layers"], cache["ckv"], cache["krope"]))
+        cache = dict(cache, ckv=cks, krope=krs, slot_pos=slot_pos_new,
+                     pos=pos + 1)
+
+    elif cfg.family == "ssm":
+        def body(h, layer):
+            lp, st, cv = layer
+            normed = L.apply_norm(cfg, lp["ln"], h)
+            o, st, cv = mamba2_decode(cfg, lp["mamba"], normed, st, cv)
+            return h + o, (st, cv)
+
+        x, (sts, cvs) = lax.scan(
+            body, x, (params["layers"], cache["ssm_state"], cache["conv_state"]))
+        cache = dict(cache, ssm_state=sts, conv_state=cvs, pos=pos + 1)
+
+    elif cfg.family == "hybrid":
+        x, cache = _decode_hybrid(cfg, params, cache, x, slot_pos_new, pos)
+
+    elif cfg.family == "encdec":
+        def body(h, layer):
+            lp, kc, vc, xk, xv = layer
+            normed = L.apply_norm(cfg, lp["ln1"], h)
+            a, kc, vc = attention_decode(cfg, lp["attn"], normed, kc, vc,
+                                         slot_pos_new, pos, rope=False)
+            h = h + a
+            xa = cross_attention_decode(
+                cfg, lp["xattn"], L.apply_norm(cfg, lp["ln_x"], h), xk, xv,
+                cfg.encoder_seq)
+            h = h + xa
+            f = L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], h))
+            return h + f, (kc, vc)
+
+        pos_emb = jnp.take(params["dec_pos"],
+                           jnp.minimum(pos, params["dec_pos"].shape[0] - 1),
+                           axis=0)
+        x = x + pos_emb.astype(x.dtype)
+        x, (ks, vs) = lax.scan(
+            body, x,
+            (params["dec_layers"], cache["k"], cache["v"],
+             cache["cross_k"], cache["cross_v"]))
+        cache = dict(cache, k=ks, v=vs, slot_pos=slot_pos_new, pos=pos + 1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = _lm_logits(cfg, params, x[:, None, :])[:, 0]
+    return cache, logits
+
+
+def _decode_hybrid(cfg: ModelConfig, params: Params, cache: Cache,
+                   x: jnp.ndarray, slot_pos_new, pos):
+    period = cfg.hybrid_period
+    n_groups = cfg.n_layers // period
+    n_rem = cfg.n_layers - n_groups * period
+    n_shared = max(cfg.n_shared_blocks, 1)
+
+    def regroup(t):
+        return jax.tree.map(
+            lambda a: a[: n_groups * period].reshape(
+                (n_groups, period) + a.shape[1:]), t)
+
+    grouped_lp = regroup(params["layers"])
+    grouped_st = regroup(cache["ssm_state"])
+    grouped_cv = regroup(cache["conv_state"])
+    rest_lp = jax.tree.map(lambda a: a[n_groups * period:], params["layers"])
+    rest_st = cache["ssm_state"][n_groups * period:]
+    rest_cv = cache["conv_state"][n_groups * period:]
+    shared = params["shared_blocks"]
+
+    def ssm_one(h, layer):
+        lp, st, cv = layer
+        normed = L.apply_norm(cfg, lp["ln"], h)
+        o, st, cv = mamba2_decode(cfg, lp["mamba"], normed, st, cv)
+        return h + o, (st, cv)
+
+    def group_body(carry, inp):
+        h, g = carry
+        glp, gst, gcv, kc, vc = inp
+        h, (gst, gcv) = lax.scan(ssm_one, h, (glp, gst, gcv))
+        sel = jax.tree.map(lambda a: a[g % n_shared], shared)
+        normed = L.apply_norm(cfg, sel["ln1"], h)
+        a, kc, vc = attention_decode(cfg, sel["attn"], normed, kc, vc,
+                                     slot_pos_new, pos)
+        h = h + a
+        h = h + L.mlp(cfg, sel["mlp"], L.apply_norm(cfg, sel["ln2"], h))
+        return (h, g + 1), (gst, gcv, kc, vc)
+
+    (x, _), (sts, cvs, ks, vs) = lax.scan(
+        group_body, (x, jnp.int32(0)),
+        (grouped_lp, grouped_st, grouped_cv, cache["attn_k"], cache["attn_v"]))
+
+    new_st = sts.reshape((n_groups * period,) + sts.shape[2:])
+    new_cv = cvs.reshape((n_groups * period,) + cvs.shape[2:])
+    if n_rem:
+        x, (rst, rcv) = lax.scan(ssm_one, x, (rest_lp, rest_st, rest_cv))
+        new_st = jnp.concatenate([new_st, rst], axis=0)
+        new_cv = jnp.concatenate([new_cv, rcv], axis=0)
+
+    cache = dict(cache, ssm_state=new_st, conv_state=new_cv,
+                 attn_k=ks, attn_v=vs, slot_pos=slot_pos_new, pos=pos + 1)
+    return x, cache

@@ -1,0 +1,678 @@
+"""Composable pure-JAX model layers for every assigned architecture family.
+
+No flax — parameters are plain pytrees (dicts of arrays), every layer is an
+``init_*(cfg, key) -> params`` / ``apply(params, x, ...) -> y`` pair, and
+layer stacks are ``lax.scan`` over stacked parameter pytrees so compile time
+is O(1) in depth (96-layer nemotron compiles as fast as 4-layer whisper).
+
+Attention/SSD have three interchangeable implementations selected by
+``cfg.attn_impl``:
+
+* ``pallas`` — the TPU kernels from ``repro.kernels`` (target hardware);
+* ``jnp``    — blockwise flash-style scans in pure jnp: same asymptotic
+  FLOPs/bytes, bounded memory, compiles on any backend — this is what the
+  512-device dry-run lowers so ``cost_analysis`` reflects the real
+  algorithm, not an interpreter;
+* ``ref``    — the materialized oracle (tests only).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+def _cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.compute_dtype)
+
+
+def _init(key, shape, dtype, scale: float = 0.02):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def resolve_attn_impl(cfg: ModelConfig) -> str:
+    if cfg.attn_impl != "auto":
+        return cfg.attn_impl
+    return "pallas" if jax.default_backend() == "tpu" else "jnp"
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(cfg: ModelConfig, key, dim: Optional[int] = None) -> Params:
+    del key
+    return {"scale": jnp.ones((dim or cfg.d_model,), _dtype(cfg))}
+
+
+def rms_norm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * params["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_layernorm(cfg: ModelConfig, key, dim: Optional[int] = None) -> Params:
+    del key
+    d = dim or cfg.d_model
+    return {"scale": jnp.ones((d,), _dtype(cfg)),
+            "bias": jnp.zeros((d,), _dtype(cfg))}
+
+
+def layer_norm(params: Params, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def init_norm(cfg: ModelConfig, key, dim: Optional[int] = None) -> Params:
+    if cfg.family == "encdec":
+        return init_layernorm(cfg, key, dim)
+    return init_rmsnorm(cfg, key, dim)
+
+
+def apply_norm(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if "bias" in params:
+        return layer_norm(params, x, cfg.norm_eps)
+    return rms_norm(params, x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, D) with D even; positions: (S,) or broadcastable."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, D/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = pos * inv
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Attention core — blockwise jnp flash (dry-run / CPU path) + dispatch
+# ---------------------------------------------------------------------------
+
+
+def _block_ranges(sq: int, skv: int, q_chunk: int, kv_chunk: int,
+                  causal: bool, window: Optional[int], skip: bool):
+    """Static kv-block range visible to each q block."""
+    n_q = -(-sq // q_chunk)
+    n_kv = -(-skv // kv_chunk)
+    offset = skv - sq  # decode/prefill alignment: q row i is abs pos offset+i
+    out = []
+    for i in range(n_q):
+        lo, hi = 0, n_kv
+        if skip:
+            row_hi = offset + min((i + 1) * q_chunk, sq) - 1
+            row_lo = offset + i * q_chunk
+            if causal:
+                hi = min(hi, row_hi // kv_chunk + 1)
+            if window is not None:
+                lo = max(lo, (row_lo - window + 1) // kv_chunk)
+        out.append((i, lo, max(lo + 1, hi)))
+    return out
+
+
+def blockwise_attention(
+    q: jnp.ndarray,       # (B, Hq, Sq, Dk)
+    k: jnp.ndarray,       # (B, Hkv, Skv, Dk)
+    v: jnp.ndarray,       # (B, Hkv, Skv, Dv)
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+    q_chunk: int = 2048,
+    kv_chunk: int = 2048,
+    causal_skip: bool = True,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure jnp.
+
+    Outer loop over q chunks is a static python loop so each q chunk scans
+    only its *visible* kv range (``causal_skip``: drops the ~2× wasted FLOPs
+    a dense causal mask pays — a measured lever in EXPERIMENTS §Perf); inner
+    loop is ``lax.scan`` over kv chunks with running (m, l, acc).
+    """
+    b, hq, sq, dk = q.shape
+    _, hkv, skv, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hkv
+    scale = scale if scale is not None else dk ** -0.5
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    offset = skv - sq
+
+    qg = q.reshape(b, hkv, group, sq, dk).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    pad_q = (-sq) % q_chunk
+    if pad_q:
+        qg = jnp.pad(qg, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    pad_kv = (-skv) % kv_chunk
+    if pad_kv:
+        kf = jnp.pad(kf, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+    n_kv = kf.shape[2] // kv_chunk
+    kb = kf.reshape(b, hkv, n_kv, kv_chunk, dk)
+    vb = vf.reshape(b, hkv, n_kv, kv_chunk, dv)
+
+    outs = []
+    for (i, lo, hi) in _block_ranges(sq, skv, q_chunk, kv_chunk, causal,
+                                     window, causal_skip):
+        qi = lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=3)
+        rows = offset + i * q_chunk + jnp.arange(q_chunk)
+
+        def step(carry, inp):
+            m, l, acc = carry
+            kj, vj, jidx = inp
+            cols = jidx * kv_chunk + jnp.arange(kv_chunk)
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", qi, kj)
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            mask &= (cols < skv)[None, :]                     # kv padding
+            if causal:
+                mask &= cols[None, :] <= rows[:, None]
+            if window is not None:
+                mask &= cols[None, :] > rows[:, None] - window
+            s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.where(s <= -1e29, 0.0, jnp.exp(s - m_new))
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(-1, keepdims=True)
+            acc_new = acc * alpha + jnp.einsum("bkgqc,bkcd->bkgqd", p, vj)
+            return (m_new, l_new, acc_new), None
+
+        # Carry inits derived arithmetically from qi so their varying-axes
+        # type matches the scan body under shard_map manual axes (an
+        # explicit lax.pcast would do the same but its transpose lowers to
+        # an all-reduce variant that crashes XLA-CPU's AllReducePromotion
+        # pass at 512 devices — see EXPERIMENTS.md §Perf notes).
+        zero_col = jax.lax.stop_gradient(qi[..., :1]) * 0.0
+        m0 = zero_col - 1e30
+        l0 = zero_col
+        a0 = zero_col * jnp.zeros((dv,), jnp.float32)
+        span = hi - lo
+        ks = lax.dynamic_slice_in_dim(kb, lo, span, axis=2)
+        vs = lax.dynamic_slice_in_dim(vb, lo, span, axis=2)
+        (m, l, acc), _ = lax.scan(
+            step, (m0, l0, a0),
+            (jnp.moveaxis(ks, 2, 0), jnp.moveaxis(vs, 2, 0),
+             lo + jnp.arange(span)),
+        )
+        l = jnp.where(l == 0.0, 1.0, l)
+        outs.append(acc / l)
+    out = jnp.concatenate(outs, axis=3)[..., :sq, :]
+    return out.reshape(b, hq, sq, dv).astype(q.dtype)
+
+
+def attention_core(
+    cfg: ModelConfig,
+    q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+    *, causal: bool = True, window: Optional[int] = None,
+    scale: Optional[float] = None,
+) -> jnp.ndarray:
+    impl = resolve_attn_impl(cfg)
+    if impl == "pallas" and q.shape[-1] == v.shape[-1]:
+        from repro.kernels.flash_attention import flash_attention
+
+        return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
+    if impl == "ref":
+        from repro.kernels.flash_attention.ref import attention_ref
+
+        return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    return blockwise_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        causal_skip=cfg.causal_block_skip,
+    )
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ModelConfig, key) -> Params:
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "wq": _init(ks[0], (cfg.d_model, cfg.n_heads * hd), dt),
+        "wk": _init(ks[1], (cfg.d_model, cfg.n_kv_heads * hd), dt),
+        "wv": _init(ks[2], (cfg.d_model, cfg.n_kv_heads * hd), dt),
+        "wo": _init(ks[3], (cfg.n_heads * hd, cfg.d_model), dt, depth_scale),
+    }
+
+
+def attention(
+    cfg: ModelConfig, params: Params, x: jnp.ndarray,
+    positions: jnp.ndarray, *, causal: bool = True,
+    kv_override: Optional[tuple] = None,
+    return_kv: bool = False,
+):
+    """x: (B, S, D) -> (B, S, D).  ``kv_override`` supplies precomputed
+    (k, v, kv_positions) for cross-attention (whisper decoder).
+    ``return_kv`` additionally returns the (roped) K/V — the prefill path's
+    cache source."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    xc = x.astype(_cdtype(cfg))
+    q = jnp.einsum("bsd,dh->bsh", xc, params["wq"].astype(_cdtype(cfg)))
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dh->bsh", xc, params["wk"].astype(_cdtype(cfg)))
+        v = jnp.einsum("bsd,dh->bsh", xc, params["wv"].astype(_cdtype(cfg)))
+        k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+        if cfg.family != "encdec":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+    else:
+        k, v, _ = kv_override
+    out = attention_core(cfg, q, k, v, causal=causal, window=cfg.window)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", out,
+                   params["wo"].astype(_cdtype(cfg))).astype(x.dtype)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_kv(cfg: ModelConfig, params: Params, enc_out: jnp.ndarray):
+    """Precompute encoder K/V for the whisper decoder's cross-attention."""
+    b, s, _ = enc_out.shape
+    hd = cfg.resolved_head_dim
+    ec = enc_out.astype(_cdtype(cfg))
+    k = jnp.einsum("bsd,dh->bsh", ec, params["wk"].astype(_cdtype(cfg)))
+    v = jnp.einsum("bsd,dh->bsh", ec, params["wv"].astype(_cdtype(cfg)))
+    k = k.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    return k, v, jnp.arange(s)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (minicpm3)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "w_dq": _init(ks[0], (cfg.d_model, cfg.q_lora_rank), dt),
+        "q_norm": {"scale": jnp.ones((cfg.q_lora_rank,), dt)},
+        "w_uq": _init(ks[1], (cfg.q_lora_rank, h * (dn + dr)), dt),
+        "w_dkv": _init(ks[2], (cfg.d_model, cfg.kv_lora_rank + dr), dt),
+        "kv_norm": {"scale": jnp.ones((cfg.kv_lora_rank,), dt)},
+        "w_uk": _init(ks[3], (cfg.kv_lora_rank, h * dn), dt),
+        "w_uv": _init(ks[4], (cfg.kv_lora_rank, h * dv), dt),
+        "wo": _init(ks[5], (h * dv, cfg.d_model), dt, depth_scale),
+    }
+
+
+def mla_attention(
+    cfg: ModelConfig, params: Params, x: jnp.ndarray, positions: jnp.ndarray,
+    return_cache: bool = False,
+):
+    """Train/prefill path: expand the latent to per-head K/V (compute-rich),
+    attend with the shared rope key appended.  ``return_cache`` also returns
+    (c_kv latent (B,S,r), k_rope (B,S,dr)) — the MLA cache contents."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    cd = _cdtype(cfg)
+    xc = x.astype(cd)
+
+    q_lat = rms_norm(params["q_norm"], xc @ params["w_dq"].astype(cd), cfg.norm_eps)
+    q = (q_lat @ params["w_uq"].astype(cd)).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope.transpose(0, 2, 1, 3), positions, cfg.rope_theta)
+
+    dkv = xc @ params["w_dkv"].astype(cd)                 # (B, S, r + dr)
+    c_kv = rms_norm(params["kv_norm"], dkv[..., :r], cfg.norm_eps)
+    k_rope = apply_rope(
+        dkv[..., r:][:, None], positions, cfg.rope_theta
+    )                                                     # (B, 1, S, dr) shared
+    k_nope = (c_kv @ params["w_uk"].astype(cd)).reshape(b, s, h, dn)
+    vfull = (c_kv @ params["w_uv"].astype(cd)).reshape(b, s, h, dv)
+
+    qh = jnp.concatenate(
+        [q_nope.transpose(0, 2, 1, 3), q_rope], axis=-1
+    )                                                     # (B, H, S, dn+dr)
+    kh = jnp.concatenate(
+        [k_nope.transpose(0, 2, 1, 3),
+         jnp.broadcast_to(k_rope, (b, h, s, dr))], axis=-1
+    )
+    vh = vfull.transpose(0, 2, 1, 3)
+    out = attention_core(cfg, qh, kh, vh, causal=True,
+                         scale=(dn + dr) ** -0.5)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * dv)
+    y = (out @ params["wo"].astype(cd)).astype(x.dtype)
+    if return_cache:
+        return y, (c_kv, k_rope[:, 0])   # (B,S,r), (B,S,dr)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def _act(name: str, x: jnp.ndarray) -> jnp.ndarray:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jnp.maximum(x, 0.0)
+        return r * r
+    raise ValueError(name)
+
+
+def init_mlp(cfg: ModelConfig, key, d_ff: Optional[int] = None) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 3)
+    f = d_ff or cfg.d_ff
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    p = {
+        "w_up": _init(ks[0], (cfg.d_model, f), dt),
+        "w_down": _init(ks[1], (f, cfg.d_model), dt, depth_scale),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _init(ks[2], (cfg.d_model, f), dt)
+    return p
+
+
+def mlp(cfg: ModelConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    cd = _cdtype(cfg)
+    xc = x.astype(cd)
+    up = xc @ params["w_up"].astype(cd)
+    if cfg.gated_mlp:
+        up = _act(cfg.activation, xc @ params["w_gate"].astype(cd)) * up
+    else:
+        up = _act(cfg.activation, up)
+    return (up @ params["w_down"].astype(cd)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE (capacity-based scatter dispatch, per batch row ⇒ data-partitionable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    p = {
+        "router": _init(ks[0], (d, e), jnp.float32),
+        "w_up": _init(ks[1], (e, d, f), dt),
+        "w_down": _init(ks[2], (e, f, d), dt, depth_scale),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _init(ks[3], (e, d, f), dt)
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _expert_ffn(cfg: ModelConfig, params: Params, xe: jnp.ndarray) -> jnp.ndarray:
+    """xe: (..., E, C, D) -> (..., E, C, D), batched over experts."""
+    cd = _cdtype(cfg)
+    up = jnp.einsum("...ecd,edf->...ecf", xe, params["w_up"].astype(cd))
+    if cfg.gated_mlp:
+        gate = jnp.einsum("...ecd,edf->...ecf", xe, params["w_gate"].astype(cd))
+        up = _act(cfg.activation, gate) * up
+    else:
+        up = _act(cfg.activation, up)
+    return jnp.einsum("...ecf,efd->...ecd", up, params["w_down"].astype(cd))
+
+
+def moe(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+        dense_combine: bool = False) -> jnp.ndarray:
+    """x: (B, S, D).  Routing/capacity are computed *per batch row*, so the
+    whole layer partitions cleanly over the data axis (capacity per row ==
+    per-device capacity with row-aligned sharding).  Dropped tokens (over
+    capacity) fall through on the residual path, as in standard top-k MoE.
+
+    ``dense_combine=True`` computes every expert on every token and mixes by
+    router weights — used for decode, where S is 1 and the layer is bound by
+    reading the expert *weights* anyway, so the extra FLOPs are free and the
+    gather/scatter (and its collectives) disappear.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    cd = _cdtype(cfg)
+    xc = x.astype(cd)
+
+    logits = jnp.einsum("bsd,de->bse", xc.astype(jnp.float32),
+                        params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = lax.top_k(probs, k)                   # (B, S, K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    if dense_combine:
+        combine = jnp.zeros((b, s, e), jnp.float32).at[
+            jnp.arange(b)[:, None, None], jnp.arange(s)[None, :, None], idx
+        ].add(weights)
+        dense = _expert_ffn(cfg, params, jnp.broadcast_to(xc[:, None], (b, e, s, d)))
+        y = jnp.einsum("besd,bse->bsd", dense, combine.astype(cd))
+    else:
+        cap = max(1, int(s * k / e * cfg.capacity_factor))
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)      # (B, S, K, E)
+        flat_choice = onehot.reshape(b, s * k, e)
+        pos_in_e = jnp.cumsum(flat_choice, axis=1) - flat_choice  # (B, S*K, E)
+        slot = jnp.take_along_axis(
+            pos_in_e.reshape(b, s, k, e), idx[..., None], axis=-1
+        )[..., 0]                                              # (B, S, K)
+        keep = (slot < cap)
+        dst = jnp.where(keep, idx * cap + slot, e * cap)       # overflow bin
+        xin = jnp.zeros((b, e * cap + 1, d), cd)
+        src = jnp.broadcast_to(xc[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
+        xin = xin.at[jnp.arange(b)[:, None], dst.reshape(b, s * k)].add(
+            src * keep.reshape(b, s * k, 1))
+        xe = xin[:, : e * cap].reshape(b, e, cap, d)
+        ye = _expert_ffn(cfg, params, xe).reshape(b, e * cap, d)
+        ye = jnp.concatenate([ye, jnp.zeros((b, 1, d), ye.dtype)], axis=1)
+        gathered = jnp.take_along_axis(
+            ye, dst.reshape(b, s * k, 1), axis=1
+        ).reshape(b, s, k, d)
+        y = (gathered * (weights * keep).astype(cd)[..., None]).sum(axis=2)
+
+    if cfg.n_shared_experts:
+        y = y + mlp(cfg, params["shared"], xc)
+    return y.astype(x.dtype)
+
+
+def moe_aux_loss(cfg: ModelConfig, x: jnp.ndarray, params: Params) -> jnp.ndarray:
+    """Load-balancing auxiliary loss (Switch-style): E[f_e · p_e] · E."""
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, idx = lax.top_k(probs, cfg.experts_per_token)
+    hard = jax.nn.one_hot(idx, cfg.n_experts).sum(axis=2)  # (B, S, E)
+    f = hard.mean(axis=(0, 1))
+    p = probs.mean(axis=(0, 1))
+    return cfg.n_experts * jnp.sum(f * p)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD) block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    d_in = cfg.ssm_heads * cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_in + 2 * cfg.ssm_groups * cfg.ssm_state + cfg.ssm_heads
+    depth_scale = 0.02 / math.sqrt(2 * max(cfg.n_layers, 1))
+    return {
+        "in_proj": _init(ks[0], (cfg.d_model, proj_out), dt),
+        "conv_w": _init(ks[1], (cfg.ssm_conv, conv_ch), dt, 0.1),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "dt_bias": jnp.zeros((cfg.ssm_heads,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.ssm_heads, dtype=jnp.float32)),
+        "d_skip": jnp.ones((cfg.ssm_heads,), jnp.float32),
+        "gate_norm": {"scale": jnp.ones((d_in,), dt)},
+        "out_proj": _init(ks[2], (d_in, cfg.d_model), dt, depth_scale),
+    }
+
+
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv over seq.  x: (B, S, C); w: (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp, w[:, None, :],          # (K, 1, C) HIO with feature groups
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=x.shape[-1],
+    )
+    return out + b
+
+
+def ssd_jnp(x, dtv, a, bmat, cmat, d_skip, chunk: int):
+    """Chunked SSD in pure jnp (same math as the Pallas kernel): scan over
+    chunks carrying the (H, N, P) state; intra-chunk work is batched matmuls.
+
+    x: (B, S, H, P); dtv: (B, S, H); a: (H,); bmat/cmat: (B, S, G, N).
+    Returns (y, final_state (B, H, N, P) fp32).
+    """
+    bsz, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hpg = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+
+    def reshape_c(t):
+        return jnp.moveaxis(
+            t.reshape((bsz, nc, chunk) + t.shape[2:]), 1, 0
+        )  # (nc, B, L, ...)
+
+    xs, dts, bs, cs = map(reshape_c, (x, dtv, bmat, cmat))
+
+    def step(state, inp):
+        xc_, dt_, b_, c_ = inp                     # (B,L,H,P),(B,L,H),(B,L,G,N)
+        xf = xc_.astype(jnp.float32)
+        dtf = dt_.astype(jnp.float32)
+        alog = dtf * a[None, None, :]              # (B, L, H)
+        cum = jnp.cumsum(alog, axis=1)
+        total = cum[:, -1]                         # (B, H)
+        bh = jnp.repeat(b_, hpg, axis=2).astype(jnp.float32)   # (B,L,H,N)
+        ch = jnp.repeat(c_, hpg, axis=2).astype(jnp.float32)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]          # (B,L,L,H)
+        ii = jnp.arange(chunk)
+        causal = ii[:, None] >= ii[None, :]
+        seg = jnp.where(causal[None, :, :, None], seg, -1e30)
+        scores = jnp.einsum("blhn,bmhn->blmh", ch, bh)
+        w = scores * jnp.exp(seg) * dtf[:, None, :, :]
+        y = jnp.einsum("blmh,bmhp->blhp", w, xf)
+        y += jnp.exp(cum)[..., None] * jnp.einsum("blhn,bhnp->blhp", ch, state)
+        decay_end = jnp.exp(total[:, None] - cum) * dtf        # (B,L,H)
+        state = jnp.exp(total)[..., None, None] * state + jnp.einsum(
+            "blhn,blhp->bhnp", bh * decay_end[..., None], xf)
+        return state, y
+
+    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    final, ys = lax.scan(step, state0, (xs, dts, bs, cs))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, h, p)[:, :s]
+    y = y + d_skip[None, None, :, None] * x[:, :s].astype(jnp.float32)
+    return y, final
+
+
+def mamba2_block(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                 return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D).  Mamba-2 block: in_proj → causal conv →
+    SSD (Pallas kernel on TPU, chunked jnp elsewhere) → gated RMSNorm →
+    out_proj.  ``return_state`` also returns the decode cache contents:
+    (final ssm state (B,H,N,P) fp32, conv tail (B, conv−1, C) raw pre-conv)."""
+    b, s, _ = x.shape
+    h, p, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
+    d_in = h * p
+    cd = _cdtype(cfg)
+    xc = x.astype(cd)
+
+    zxbcdt = xc @ params["in_proj"].astype(cd)
+    z = zxbcdt[..., :d_in]
+    xbc = zxbcdt[..., d_in: 2 * d_in + 2 * g * n]
+    dt_raw = zxbcdt[..., 2 * d_in + 2 * g * n:]
+
+    if return_state:
+        # decode resumes the depthwise conv from the last (conv−1) raw inputs
+        tail_len = cfg.ssm_conv - 1
+        pad = max(0, tail_len - s)
+        tail_src = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0))) if pad else xbc
+        conv_tail = tail_src[:, -tail_len:, :]
+
+    xbc = _causal_conv1d(xbc, params["conv_w"].astype(cd),
+                         params["conv_b"].astype(cd))
+    xbc = jax.nn.silu(xbc)
+    xs = xbc[..., :d_in].reshape(b, s, h, p)
+    bmat = xbc[..., d_in: d_in + g * n].reshape(b, s, g, n)
+    cmat = xbc[..., d_in + g * n:].reshape(b, s, g, n)
+    dtv = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"][None, None, :]
+    )
+    a = -jnp.exp(params["a_log"])
+
+    impl = resolve_attn_impl(cfg)
+    if impl == "pallas":
+        from repro.kernels.ssd import ssd as ssd_kernel
+
+        y, state = ssd_kernel(xs, dtv, a, bmat, cmat, params["d_skip"],
+                              chunk=cfg.ssm_chunk)
+        y = y.astype(jnp.float32)
+    else:
+        y, state = ssd_jnp(xs, dtv, a, bmat, cmat, params["d_skip"],
+                           chunk=cfg.ssm_chunk)
+
+    y = y.reshape(b, s, d_in).astype(cd)
+    y = rms_norm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(cd)).astype(x.dtype)
+    if return_state:
+        return out, (state, conv_tail)
+    return out

@@ -1,0 +1,236 @@
+"""Prefill: forward over a prompt that also materializes the decode cache.
+
+``prefill_32k`` cells lower exactly this — a forward pass that returns
+(populated cache, next-token logits).  The cache layouts match
+``decode.init_cache`` exactly, so ``decode_step`` continues from a prefill
+without reshaping (asserted by tests/test_serving.py).
+
+Ring-buffer fill: the cache keeps the last ``sb`` positions.  Position
+``p`` lives at slot ``p % sb``; for ``S >= sb`` the slots hold positions
+``[S−sb, S)`` as the permutation ``slot j ← pos S−sb+((j−S) mod sb)``, and
+for ``S < sb`` slots ``[S, sb)`` stay empty (``slot_pos = −1`` masks them).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.model import (
+    _lm_logits,
+    _maybe_remat,
+    encode,
+)
+from repro.models.shardctx import constrain
+
+Params = Dict[str, Any]
+Cache = Dict[str, Any]
+
+
+def _slot_map(s: int, sb: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (pos_for_slot (sb,) int32 with −1 empty, gather_idx (sb,))."""
+    j = jnp.arange(sb)
+    if s >= sb:
+        pos = s - sb + ((j - s) % sb)
+        return pos.astype(jnp.int32), pos.astype(jnp.int32)
+    pos = jnp.where(j < s, j, -1)
+    return pos.astype(jnp.int32), jnp.maximum(pos, 0).astype(jnp.int32)
+
+
+def _ring_fill(seq_t: jnp.ndarray, sb: int, seq_axis: int):
+    """Scatter a (..., S, ...) sequence tensor into its ring-buffer layout."""
+    s = seq_t.shape[seq_axis]
+    slot_pos, idx = _slot_map(s, sb)
+    filled = jnp.take(seq_t, idx, axis=seq_axis)
+    if s < sb:
+        # zero the empty tail so the cache has no garbage (masked anyway)
+        shape = [1] * seq_t.ndim
+        shape[seq_axis] = sb
+        mask = (slot_pos >= 0).reshape(shape)
+        filled = jnp.where(mask, filled, jnp.zeros_like(filled))
+    return filled, slot_pos
+
+
+# ---------------------------------------------------------------------------
+# family prefills
+# ---------------------------------------------------------------------------
+
+
+def _prefill_gqa(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray, sb: int):
+    def body(h, lp):
+        normed = L.apply_norm(cfg, lp["ln1"], h)
+        a, (k, v) = L.attention(cfg, lp["attn"], normed, positions,
+                                return_kv=True)
+        h = h + a
+        normed2 = L.apply_norm(cfg, lp["ln2"], h)
+        if cfg.family == "moe":
+            h = h + L.moe(cfg, lp["moe"], normed2)
+        else:
+            h = h + L.mlp(cfg, lp["mlp"], normed2)
+        kc, _ = _ring_fill(k, sb, seq_axis=2)
+        vc, _ = _ring_fill(v, sb, seq_axis=2)
+        return constrain(h, "residual"), (kc.astype(jnp.dtype(cfg.param_dtype)),
+                                          vc.astype(jnp.dtype(cfg.param_dtype)))
+
+    x, (ks, vs) = lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+    slot_pos, _ = _slot_map(x.shape[1], sb)
+    return x, {"k": ks, "v": vs, "slot_pos": slot_pos}
+
+
+def _prefill_mla(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray, sb: int):
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def body(h, lp):
+        normed = L.apply_norm(cfg, lp["ln1"], h)
+        a, (ckv, krope) = L.mla_attention(cfg, lp["attn"], normed, positions,
+                                          return_cache=True)
+        h = h + a
+        h = h + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], h))
+        cc, _ = _ring_fill(ckv, sb, seq_axis=1)
+        kr, _ = _ring_fill(krope, sb, seq_axis=1)
+        return constrain(h, "residual"), (cc.astype(dt), kr.astype(dt))
+
+    x, (cks, krs) = lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+    slot_pos, _ = _slot_map(x.shape[1], sb)
+    return x, {"ckv": cks, "krope": krs, "slot_pos": slot_pos}
+
+
+def _prefill_ssm_stack(cfg: ModelConfig, stack: Params, x: jnp.ndarray):
+    dt = jnp.dtype(cfg.param_dtype)
+
+    def body(h, lp):
+        normed = L.apply_norm(cfg, lp["ln"], h)
+        o, (state, conv_tail) = L.mamba2_block(cfg, lp["mamba"], normed,
+                                               return_state=True)
+        return constrain(h + o, "residual"), (state, conv_tail.astype(dt))
+
+    return lax.scan(_maybe_remat(cfg, body), x, stack)
+
+
+def _prefill_hybrid(cfg: ModelConfig, params: Params, x: jnp.ndarray,
+                    positions: jnp.ndarray, sb: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    period = cfg.hybrid_period
+    n_groups = cfg.n_layers // period
+    n_rem = cfg.n_layers - n_groups * period
+    n_shared = max(cfg.n_shared_blocks, 1)
+    grouped = jax.tree.map(
+        lambda a: a[: n_groups * period].reshape(
+            (n_groups, period) + a.shape[1:]), params["layers"])
+    rest = jax.tree.map(lambda a: a[n_groups * period:], params["layers"])
+    shared = params["shared_blocks"]
+
+    def group_body(carry, glayers):
+        h, g = carry
+        h, (st, cv) = _prefill_ssm_stack(cfg, glayers, h)
+        sel = jax.tree.map(lambda a: a[g % n_shared], shared)
+        normed = L.apply_norm(cfg, sel["ln1"], h)
+        a, (k, v) = L.attention(cfg, sel["attn"], normed, positions,
+                                return_kv=True)
+        h = h + a
+        h = h + L.mlp(cfg, sel["mlp"], L.apply_norm(cfg, sel["ln2"], h))
+        kc, _ = _ring_fill(k, sb, seq_axis=2)
+        vc, _ = _ring_fill(v, sb, seq_axis=2)
+        return (constrain(h, "residual"), g + 1), (
+            st, cv, kc.astype(dt), vc.astype(dt))
+
+    (x, _), (sts, cvs, ks, vs) = lax.scan(
+        _maybe_remat(cfg, group_body), (x, jnp.int32(0)), grouped)
+    ssm_state = sts.reshape((n_groups * period,) + sts.shape[2:])
+    conv_state = cvs.reshape((n_groups * period,) + cvs.shape[2:])
+    if n_rem:
+        x, (rst, rcv) = _prefill_ssm_stack(cfg, rest, x)
+        ssm_state = jnp.concatenate([ssm_state, rst], axis=0)
+        conv_state = jnp.concatenate([conv_state, rcv], axis=0)
+    slot_pos, _ = _slot_map(x.shape[1], sb)
+    return x, {"ssm_state": ssm_state, "conv_state": conv_state,
+               "attn_k": ks, "attn_v": vs, "slot_pos": slot_pos}
+
+
+def _prefill_encdec(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                    frontend_embeds: jnp.ndarray, sb: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    enc = encode(cfg, params, frontend_embeds)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    s = x.shape[1]
+    x = x + lax.dynamic_slice_in_dim(params["dec_pos"], 0, s, 0).astype(x.dtype)
+    dpos = jnp.arange(s)
+
+    def body(h, lp):
+        normed = L.apply_norm(cfg, lp["ln1"], h)
+        a, (k, v) = L.attention(cfg, lp["attn"], normed, dpos,
+                                return_kv=True)
+        h = h + a
+        kv = L.cross_kv(cfg, lp["xattn"], enc)
+        h = h + L.attention(cfg, lp["xattn"],
+                            L.apply_norm(cfg, lp["ln_x"], h),
+                            dpos, causal=False, kv_override=kv)
+        h = h + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], h))
+        kc, _ = _ring_fill(k, sb, seq_axis=2)
+        vc, _ = _ring_fill(v, sb, seq_axis=2)
+        return constrain(h, "residual"), (
+            kc.astype(dt), vc.astype(dt),
+            kv[0].astype(dt), kv[1].astype(dt))
+
+    x, (ks, vs, xks, xvs) = lax.scan(_maybe_remat(cfg, body), x,
+                                     params["dec_layers"])
+    slot_pos, _ = _slot_map(s, sb)
+    return x, {"k": ks, "v": vs, "cross_k": xks, "cross_v": xvs,
+               "slot_pos": slot_pos}
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+
+def prefill(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,                       # (B, S)
+    frontend_embeds: Optional[jnp.ndarray] = None,
+    *,
+    cache_len: Optional[int] = None,
+) -> Tuple[Cache, jnp.ndarray]:
+    """Run the prompt, build the decode cache, return next-token logits.
+
+    ``cache_len``: ring-buffer capacity (default: prompt length); the SWA
+    window caps it (h2o-danube long contexts keep a 4096-slot cache).
+    """
+    from repro.models.model import _embed
+
+    if cfg.family == "encdec":
+        s = tokens.shape[1]
+        sb = min(cache_len or s, 4096)
+        x, cache = _prefill_encdec(cfg, params, tokens, frontend_embeds, sb)
+        s_total = s
+    else:
+        x = constrain(_embed(cfg, params, tokens, frontend_embeds), "residual")
+        s_total = x.shape[1]
+        cap = cache_len or s_total
+        sb = min(cap, cfg.window) if cfg.window else cap
+        positions = jnp.arange(s_total)
+        if cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla":
+            x, cache = _prefill_gqa(cfg, params, x, positions, sb)
+        elif cfg.attn_type == "mla":
+            x, cache = _prefill_mla(cfg, params, x, positions, sb)
+        elif cfg.family == "ssm":
+            x, (st, cv) = _prefill_ssm_stack(cfg, params["layers"], x)
+            cache = {"ssm_state": st, "conv_state": cv}
+        elif cfg.family == "hybrid":
+            x, cache = _prefill_hybrid(cfg, params, x, positions, sb)
+        else:
+            raise ValueError(cfg.family)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    last = constrain(x[:, -1:, :], "logit_hidden")
+    logits = _lm_logits(cfg, params, last)[:, 0]
+    cache["pos"] = jnp.asarray(s_total, jnp.int32)
+    return cache, logits

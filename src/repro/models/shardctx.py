@@ -1,0 +1,46 @@
+"""Activation-sharding context: the step builder injects sharding
+constraints into the (mesh-agnostic) model code.
+
+``dist/steps.py`` installs a tag→constraint function for the duration of a
+trace; model code calls ``constrain(x, "residual")`` at block boundaries.
+Outside any context this is the identity, so model code runs unchanged in
+unit tests / single-device smoke tests.
+
+Tags used by the model zoo:
+  residual   — the (B, S, D) stream at layer boundaries (SP shards S on tp)
+  logit_hidden — final hidden entering the LM head
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Optional
+
+_ACTIVE: Optional[Callable] = None
+_TP_BLOCK: Optional[Callable] = None
+
+
+@contextlib.contextmanager
+def activation_sharding(fn: Callable, tp_block: Optional[Callable] = None):
+    """``fn(x, tag)`` applies sharding constraints; ``tp_block`` (optional)
+    is the ART-TP dense-block runner installed by the step builder when
+    ``StepConfig.art_tp`` is on: ``tp_block(cfg, layer_params, x,
+    positions) -> x`` executes the block with hand-scheduled ring
+    collectives (models/artblock.py)."""
+    global _ACTIVE, _TP_BLOCK
+    old, old_tp = _ACTIVE, _TP_BLOCK
+    _ACTIVE, _TP_BLOCK = fn, tp_block
+    try:
+        yield
+    finally:
+        _ACTIVE, _TP_BLOCK = old, old_tp
+
+
+def constrain(x, tag: str):
+    if _ACTIVE is None:
+        return x
+    return _ACTIVE(x, tag)
+
+
+def tp_block_runner() -> Optional[Callable]:
+    return _TP_BLOCK

@@ -1,0 +1,18 @@
+"""Optimizer substrate (built here, no optax): AdamW + schedules + clipping
++ gradient compression for the cross-pod hop."""
+
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+from repro.optim.schedule import warmup_cosine
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compress import (
+    compress_8bit,
+    decompress_8bit,
+    ef_compress_update,
+    ef_init,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_init", "adamw_update", "warmup_cosine",
+    "clip_by_global_norm", "global_norm",
+    "compress_8bit", "decompress_8bit", "ef_compress_update", "ef_init",
+]

@@ -1,0 +1,98 @@
+"""AdamW as pure pytree functions (no optax dependency).
+
+Numerics policy is explicit and per-size (DESIGN §6): bf16 params keep an
+fp32 *master* copy; moments are fp32 by default and can be bf16 for ≥100 B
+archs where optimizer-state HBM dominates.  Optimizer state is sharded
+exactly like the parameters (ZeRO): every leaf here is elementwise, so the
+update inherits whatever sharding pjit assigns the params — no extra
+collectives are introduced by the optimizer itself.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4                 # peak LR; scheduled value passed per-step
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"    # "bfloat16" for ≥100B archs
+    master_fp32: bool = True         # keep fp32 master when params are bf16
+
+
+def adamw_init(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(
+    grads,
+    state: Dict[str, Any],
+    params,
+    cfg: AdamWConfig,
+    lr: jnp.ndarray | float,
+) -> Tuple[Any, Dict[str, Any]]:
+    """Returns (new_params, new_state).  ``lr`` is the scheduled value."""
+    step = state["step"] + 1
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def leaf(g, mu, nu, p, master):
+        gf = g.astype(jnp.float32)
+        mu32 = mu.astype(jnp.float32) * b1 + gf * (1 - b1)
+        nu32 = nu.astype(jnp.float32) * b2 + gf * gf * (1 - b2)
+        mhat = mu32 / c1
+        nhat = nu32 / c2
+        base = master if master is not None else p.astype(jnp.float32)
+        upd = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * base
+        new_master = base - lr * upd
+        return new_master.astype(p.dtype), mu32.astype(mdt), nu32.astype(mdt), new_master
+
+    masters = state.get("master")
+    if masters is None:
+        masters = jax.tree.map(lambda _: None, params,
+                               is_leaf=lambda x: x is None)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state["mu"])
+    flat_nu = treedef.flatten_up_to(state["nu"])
+    flat_m = (treedef.flatten_up_to(state["master"])
+              if "master" in state else [None] * len(flat_p))
+
+    outs = [leaf(g, mu, nu, p, m)
+            for g, mu, nu, p, m in zip(flat_g, flat_mu, flat_nu, flat_p, flat_m)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_state = {
+        "step": step,
+        "mu": treedef.unflatten([o[1] for o in outs]),
+        "nu": treedef.unflatten([o[2] for o in outs]),
+    }
+    if "master" in state:
+        new_state["master"] = treedef.unflatten([o[3] for o in outs])
+    return new_p, new_state
+
+
+def optimizer_state_bytes(params, cfg: AdamWConfig) -> int:
+    """Analytic HBM footprint of the optimizer state (dry-run memory table)."""
+    mdt = jnp.dtype(cfg.moment_dtype)
+    per = 2 * mdt.itemsize + (4 if cfg.master_fp32 else 0)
+    return sum(x.size * per for x in jax.tree.leaves(params)) + 4

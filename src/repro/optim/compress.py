@@ -1,0 +1,79 @@
+"""8-bit gradient compression with error feedback — the distributed-
+optimization trick for the cross-pod DCN hop (DESIGN §6).
+
+The pod axis crosses data-center network, ~25× slower than ICI; the only
+traffic that crosses it is the data-parallel gradient all-reduce, once per
+step.  Quantizing that traffic to int8 with per-block scales cuts cross-pod
+bytes 4× (bf16→int8 with a small scale overhead); the *error-feedback*
+accumulator re-injects each step's quantization residual into the next
+step's gradient, which keeps SGD/Adam convergence unbiased in practice
+(Karimireddy et al., 2019).
+
+Block layout: flatten the leaf, pad to ``block``, per-block max-abs scale.
+``compress → all-reduce in int8-sum-space`` is not associative across scales,
+so the intended wire pattern (runtime/train loop) is
+reduce-scatter(fp) **within** the pod → compress → cross-pod all-reduce of
+the compressed shard → decompress → all-gather(fp) within the pod; this
+module provides the (de)compress + EF pieces and the step-level wrapper.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_8bit(x: jnp.ndarray, block: int = 256) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (q: int8 (padded_n,), scale: f32 (n_blocks,))."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % block
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe[:, None]), -127, 127).astype(jnp.int8)
+    return q.reshape(-1), scale
+
+
+def decompress_8bit(q: jnp.ndarray, scale: jnp.ndarray, shape, block: int = 256):
+    blocks = q.reshape(-1, block).astype(jnp.float32) * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def ef_init(params):
+    """Error-feedback residual accumulator, shaped like the gradients."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def ef_compress_update(grads, ef_state, block: int = 256):
+    """Apply error feedback: g' = Q(g + e);  e' = (g + e) − g'.
+
+    Returns (quantized-then-dequantized grads, new ef_state).  The caller
+    all-reduces the returned grads across the compressed axis (the cross-pod
+    hop); within-pod reduction should happen *before* this call so the
+    residual tracks exactly what the wire carried.
+    """
+
+    def leaf(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = compress_8bit(corrected, block)
+        deq = decompress_8bit(q, s, g.shape, block)
+        return deq.astype(g.dtype), corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef_state)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))
+
+
+def compressed_bytes(n_elements: int, block: int = 256) -> int:
+    """Wire bytes for a compressed tensor (int8 payload + fp32 scales)."""
+    n_blocks = -(-n_elements // block)
+    return n_blocks * block + 4 * n_blocks

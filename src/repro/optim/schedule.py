@@ -1,0 +1,22 @@
+"""LR schedules as pure jnp functions of the step index."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def warmup_cosine(
+    step: jnp.ndarray | int,
+    *,
+    peak_lr: float,
+    warmup_steps: int,
+    total_steps: int,
+    final_frac: float = 0.1,
+) -> jnp.ndarray:
+    """Linear warmup to ``peak_lr`` then cosine decay to ``final_frac·peak``."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+    t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup_steps, warm, peak_lr * cos)

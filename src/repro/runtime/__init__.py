@@ -1,0 +1,8 @@
+"""Fault-tolerant runtime: training loop, elastic re-meshing, serving."""
+
+from repro.runtime.trainer import Trainer, TrainerConfig
+from repro.runtime.elastic import ElasticMesh, remesh
+from repro.runtime.server import Server, ServerConfig
+
+__all__ = ["Trainer", "TrainerConfig", "ElasticMesh", "remesh",
+           "Server", "ServerConfig"]

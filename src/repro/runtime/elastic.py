@@ -1,0 +1,72 @@
+"""Elastic re-meshing: rebuild the device mesh after failures and reshard.
+
+On a real multi-host deployment a device/host failure surfaces as an XLA
+error (or a missed heartbeat in the coordination service); recovery is:
+
+  1. drop the failed hosts from the device set,
+  2. rebuild the largest mesh of the same *shape family* that fits,
+  3. restore the last checkpoint **resharded** onto the new mesh
+     (``checkpoint.load_checkpoint`` takes the new NamedShardings —
+     checkpoints store logical arrays, the mesh maps them physically),
+  4. resume from the checkpointed step; the data pipeline is stateless
+     (step-indexed PRNG) so no data is lost or repeated.
+
+The mesh-shape policy keeps the "model" (TP) extent fixed — param shards
+must keep dividing — and shrinks the data axes, which only changes the
+gradient all-reduce span and per-shard batch (grad accumulation grows to
+hold the global batch constant).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def viable_mesh_shapes(n_devices: int, model: int) -> List[Tuple[int, int]]:
+    """(data, model) shapes with fixed TP extent, largest data first."""
+    shapes = []
+    d = n_devices // model
+    while d >= 1:
+        shapes.append((d, model))
+        d -= 1
+    return shapes
+
+
+def remesh(devices: Sequence, model: int,
+           axis_names=("data", "model")) -> Mesh:
+    """Largest (data, model) mesh over the surviving devices."""
+    usable = (len(devices) // model) * model
+    if usable == 0:
+        raise RuntimeError(
+            f"cannot keep TP={model} with {len(devices)} devices")
+    data = usable // model
+    import numpy as np
+    arr = np.array(devices[:usable]).reshape(data, model)
+    return Mesh(arr, axis_names)
+
+
+@dataclasses.dataclass
+class ElasticMesh:
+    """Tracks the live device set; ``fail(i)`` simulates a device loss and
+    returns the rebuilt mesh (tests drive this; production wires it to the
+    runtime error path)."""
+
+    model: int
+    axis_names: Tuple[str, ...] = ("data", "model")
+    devices: Optional[List] = None
+
+    def __post_init__(self):
+        if self.devices is None:
+            self.devices = list(jax.devices())
+
+    def mesh(self) -> Mesh:
+        return remesh(self.devices, self.model, self.axis_names)
+
+    def fail(self, *indices: int) -> Mesh:
+        dead = {self.devices[i].id for i in indices}
+        self.devices = [d for d in self.devices if d.id not in dead]
+        return self.mesh()

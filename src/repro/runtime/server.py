@@ -1,0 +1,139 @@
+"""Serving runtime: continuous-batching decode loop over a prefilled cache.
+
+The serving analogue of the paper's case study: requests arrive, are
+prefilled (one-sided bulk transfer of the prompt into the cache — the
+gasnet_put), then decode steps stream tokens with the batched ``serve_step``
+(the ART pattern: many small result transfers instead of one big one).
+
+Batching model: a fixed-size slot table (``max_batch``).  Requests occupy a
+slot until EOS/len-limit; new requests fill free slots between decode steps
+(continuous batching).  Each slot has its own ring cache region because the
+cache is batched on axis 1 of every leaf — slot admission just writes that
+row (a per-slot prefill into a batch-row is itself a PUT).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.dist.steps import StepConfig, build_serve_step
+from repro.models.decode import init_cache
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    eos_id: int = -1               # -1: disabled (synthetic workloads)
+    greedy: bool = True
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray             # (S,) int32
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    submitted: float = 0.0
+    first_token: Optional[float] = None
+    finished: Optional[float] = None
+
+
+class Server:
+    def __init__(self, cfg: ModelConfig, params, mesh, scfg=None,
+                 srv: ServerConfig = ServerConfig()):
+        self.cfg, self.params, self.srv = cfg, params, srv
+        scfg = scfg or StepConfig()
+        self.bundle = build_serve_step(cfg, mesh, scfg,
+                                       batch=srv.max_batch,
+                                       max_seq=srv.max_seq)
+        from repro.dist.sharding import to_shardings
+        csh = to_shardings(mesh, self.bundle.in_specs[1])
+        self.cache = jax.jit(
+            lambda: init_cache(cfg, srv.max_batch, srv.max_seq),
+            out_shardings=csh)()
+        self.slots: List[Optional[Request]] = [None] * srv.max_batch
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._next_tok = np.zeros((srv.max_batch,), np.int32)
+
+    # -- request intake --------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray) -> int:
+        rid = len(self.queue) + len(self.done) + sum(s is not None
+                                                     for s in self.slots)
+        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+                      submitted=time.perf_counter())
+        self.queue.append(req)
+        return rid
+
+    def _admit(self):
+        """Fill free slots (continuous batching).  The shared ``pos`` counter
+        makes this a synchronous-batch simplification: slots admitted
+        together decode together; production would keep per-slot positions
+        (noted in DESIGN §6)."""
+        for i, slot in enumerate(self.slots):
+            if slot is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                # teacher-forced prompt: feed prompt tokens step by step
+                req._prompt_cursor = 0
+                self._next_tok[i] = req.prompt[0]
+
+    # -- decode loop ------------------------------------------------------------
+
+    def step(self):
+        self._admit()
+        toks = jnp.asarray(self._next_tok)
+        self.cache, logits = self.bundle.fn(self.params, self.cache, toks)
+        choice = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        now = time.perf_counter()
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            cur = getattr(req, "_prompt_cursor", 0)
+            if cur + 1 < len(req.prompt):       # still consuming the prompt
+                req._prompt_cursor = cur + 1
+                self._next_tok[i] = req.prompt[cur + 1]
+                continue
+            tok = int(choice[i])
+            if req.first_token is None:
+                req.first_token = now
+            req.out_tokens.append(tok)
+            self._next_tok[i] = tok
+            if (len(req.out_tokens) >= self.srv.max_new_tokens
+                    or tok == self.srv.eos_id):
+                req.finished = now
+                self.done.append(req)
+                self.slots[i] = None
+
+    def run(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps
+
+    # -- metrics -----------------------------------------------------------------
+
+    def stats(self) -> Dict[str, float]:
+        lat = [r.finished - r.submitted for r in self.done if r.finished]
+        ttft = [r.first_token - r.submitted for r in self.done if r.first_token]
+        toks = sum(len(r.out_tokens) for r in self.done)
+        wall = (max(r.finished for r in self.done)
+                - min(r.submitted for r in self.done)) if self.done else 0.0
+        return {
+            "requests": len(self.done),
+            "tokens": toks,
+            "throughput_tok_s": toks / wall if wall else 0.0,
+            "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
+            "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+        }

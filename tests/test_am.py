@@ -1,0 +1,147 @@
+"""Active Messages: opcode dispatch, message classes, PUT/GET flows."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import am, pgas
+
+
+def _gas(mesh, size=64):
+    heap = pgas.SymmetricHeap(size)
+    return heap, pgas.GlobalAddressSpace(mesh, "x", heap)
+
+
+class TestRegistry:
+    def test_builtin_opcodes(self):
+        reg = am.HandlerRegistry()
+        assert reg.reply_opcode("NOP_REPLY") == 0
+        assert reg.reply_opcode("PUT_REPLY") == 1
+        assert reg.request_opcode("PUT") == 0
+        assert reg.request_opcode("GET") == 1
+
+    def test_registration_order_defines_opcode(self):
+        reg = am.HandlerRegistry()
+        op1 = reg.register_request("H1", lambda h, a, p: (h, jnp.int32(0),
+                                                          am.make_args(), p))
+        op2 = reg.register_request("H2", lambda h, a, p: (h, jnp.int32(0),
+                                                          am.make_args(), p))
+        assert op2 == op1 + 1
+
+
+class TestGasnetPutGet:
+    def test_put(self, mesh4):
+        heap, gas = _gas(mesh4)
+        reg = am.HandlerRegistry()
+        g = gas.zeros_global()
+
+        def f(h):
+            payload = jnp.arange(8.0) + 3
+            return am.gasnet_put(reg, h, payload, 10, axis="x", perm=[(1, 3)])
+
+        out = np.asarray(gas.run(f)(g)).reshape(4, 64)
+        np.testing.assert_allclose(out[3, 10:18], np.arange(8) + 3)
+        assert np.all(out[[0, 1, 2]] == 0)
+
+    def test_get_lands_at_dst_offset(self, mesh4):
+        heap, gas = _gas(mesh4)
+        reg = am.HandlerRegistry()
+        g = gas.zeros_global()
+
+        def f(h):
+            my = jax.lax.axis_index("x").astype(jnp.float32)
+            h = h.at[:8].set(my * 100 + jnp.arange(8.0))
+            # rank 0 reads rank 2's [0:8) into its own [32:40)
+            return am.gasnet_get(reg, h, 0, 32, 8, axis="x", perm=[(0, 2)])
+
+        out = np.asarray(gas.run(f)(g)).reshape(4, 64)
+        np.testing.assert_allclose(out[0, 32:40], 200 + np.arange(8))
+        # GET must not disturb the source
+        np.testing.assert_allclose(out[2, :8], 200 + np.arange(8))
+
+
+class TestMessageClasses:
+    def test_short_runs_handler_without_payload(self, mesh4):
+        heap, gas = _gas(mesh4)
+        reg = am.HandlerRegistry()
+
+        def bump(h, args, payload):
+            h = h.at[args[0]].add(1.0)
+            return h, jnp.int32(0), am.make_args(), jnp.zeros_like(payload)
+
+        opc = reg.register_request("BUMP", bump)
+        g = gas.zeros_global()
+
+        def f(h):
+            return am.am_request_short(reg, h, opc, am.make_args(7),
+                                       axis="x", perm=[(0, 1), (2, 3)])
+
+        out = np.asarray(gas.run(f)(g)).reshape(4, 64)
+        assert out[1, 7] == 1.0 and out[3, 7] == 1.0
+        assert out[0, 7] == 0.0 and out[2, 7] == 0.0
+
+    def test_medium_delivers_scratch(self, mesh4):
+        heap, gas = _gas(mesh4)
+        reg = am.HandlerRegistry()
+        g = gas.zeros_global()
+
+        def f(h):
+            payload = jnp.full((8,), 5.0)
+            h, scratch = am.am_request_medium(
+                reg, h, jnp.int32(0), am.make_args(0), payload,
+                axis="x", perm=[(0, 2)])
+            return h, scratch
+
+        _, scratch = gas.run(f, extra_out_specs=P("x"))(g)
+        s = np.asarray(scratch).reshape(4, 8)
+        np.testing.assert_allclose(s[2], 5.0)   # receiver got scratch
+        assert np.all(s[[0, 1, 3]] == 0)
+
+    def test_long_deposits_before_handler(self, mesh4):
+        heap, gas = _gas(mesh4)
+        reg = am.HandlerRegistry()
+
+        def check(h, args, payload):
+            # handler sees the payload already in the heap at args[0]
+            val = jax.lax.dynamic_slice(h, (args[0],), (1,))
+            h = jax.lax.dynamic_update_slice(h, val * 2, (args[0] + 16,))
+            return h, jnp.int32(0), am.make_args(), jnp.zeros((1,), h.dtype)
+
+        opc = reg.register_request("CHECK", check)
+        g = gas.zeros_global()
+
+        def f(h):
+            payload = jnp.full((4,), 21.0)
+            return am.am_request_long(reg, h, opc, am.make_args(), payload,
+                                      dst_offset=8, axis="x", perm=[(0, 1)])
+
+        out = np.asarray(gas.run(f)(g)).reshape(4, 64)
+        np.testing.assert_allclose(out[1, 8:12], 21.0)   # deposit
+        assert out[1, 24] == 42.0                        # handler ran after
+
+
+class TestComputeHandler:
+    def test_dla_pattern(self, mesh4):
+        """AM carrying a compute opcode: the Sec. III-A orange flow."""
+        heap, gas = _gas(mesh4)
+        reg = am.HandlerRegistry()
+
+        def compute(h, args, payload):
+            # "DLA": scale inbox by args[1], store at args[2]
+            x = jax.lax.dynamic_slice(h, (args[0],), (8,))
+            h = jax.lax.dynamic_update_slice(
+                h, x * args[1].astype(h.dtype), (args[2],))
+            return h, jnp.int32(0), am.make_args(), jnp.zeros((1,), h.dtype)
+
+        opc = reg.register_request("COMPUTE", compute)
+        g = gas.zeros_global()
+
+        def f(h):
+            my = jax.lax.axis_index("x").astype(jnp.float32)
+            h = h.at[:8].set(my + 1.0)
+            return am.am_request_short(
+                reg, h, opc, am.make_args(0, 3, 16), axis="x", perm=[(0, 2)])
+
+        out = np.asarray(gas.run(f)(g)).reshape(4, 64)
+        np.testing.assert_allclose(out[2, 16:24], 9.0)   # (2+1) * 3

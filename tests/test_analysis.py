@@ -1,0 +1,116 @@
+"""The HLO cost walker: exact FLOPs on known programs, loop multipliers,
+collective operand accounting."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.analysis.hlo_cost import parse_module, summarize
+from repro.analysis.roofline import (
+    CollectiveStats, model_flops_for, roofline_from_parts)
+
+
+def _text(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestDotFlops:
+    def test_single_matmul_exact(self):
+        x = jnp.zeros((128, 64))
+        w = jnp.zeros((64, 32))
+        s = summarize(_text(lambda a, b: a @ b, x, w))
+        assert s.flops == 2 * 128 * 64 * 32
+
+    def test_batched_matmul(self):
+        x = jnp.zeros((4, 32, 16))
+        w = jnp.zeros((4, 16, 8))
+        s = summarize(_text(lambda a, b: jnp.einsum("bij,bjk->bik", a, b),
+                            x, w))
+        assert s.flops == 2 * 4 * 32 * 16 * 8
+
+
+class TestLoopMultipliers:
+    def test_scan_multiplies_by_trip_count(self):
+        x = jnp.zeros((64, 64))
+
+        def f(a):
+            def body(c, _):
+                return c @ x, None
+            out, _ = jax.lax.scan(body, a, None, length=7)
+            return out
+
+        s = summarize(_text(f, x))
+        assert s.flops == 7 * 2 * 64 * 64 * 64
+
+    def test_nested_scans_multiply(self):
+        x = jnp.zeros((32, 32))
+
+        def f(a):
+            def outer(c, _):
+                def inner(ci, _):
+                    return ci @ x, None
+                c2, _ = jax.lax.scan(inner, c, None, length=3)
+                return c2, None
+            out, _ = jax.lax.scan(outer, a, None, length=5)
+            return out
+
+        s = summarize(_text(f, x))
+        assert s.flops == 15 * 2 * 32 ** 3
+
+
+class TestCollectives:
+    def test_psum_operand_bytes(self, mesh4):
+        x = jnp.zeros((4, 256), jnp.float32)
+        xs = jax.device_put(x, jax.sharding.NamedSharding(mesh4, P("x")))
+        f = jax.jit(jax.shard_map(lambda v: jax.lax.psum(v, "x"),
+                                  mesh=mesh4, in_specs=(P("x"),),
+                                  out_specs=P("x")))
+        s = summarize(f.lower(xs).compile().as_text())
+        # per-device operand: (1, 256) f32 = 1024 B
+        assert s.coll_bytes.get("all-reduce", 0) == 1024
+
+    def test_permute_in_loop_multiplied(self, mesh4):
+        def f(v):
+            def body(c, _):
+                c = jax.lax.ppermute(c, "x", [(i, (i + 1) % 4)
+                                              for i in range(4)])
+                return c, None
+            out, _ = jax.lax.scan(body, v, None, length=6)
+            return out
+
+        x = jnp.zeros((4, 128), jnp.float32)
+        xs = jax.device_put(x, jax.sharding.NamedSharding(mesh4, P("x")))
+        g = jax.jit(jax.shard_map(f, mesh=mesh4, in_specs=(P("x"),),
+                                  out_specs=P("x")))
+        s = summarize(g.lower(xs).compile().as_text())
+        assert s.coll_bytes.get("collective-permute", 0) == 6 * 128 * 4
+
+
+class TestParseRobustness:
+    def test_entry_detected(self):
+        x = jnp.zeros((8, 8))
+        comps, entry = parse_module(_text(lambda a: a @ a, x))
+        assert entry is not None
+        assert entry in comps
+
+
+class TestRoofline:
+    def test_dominant_term(self):
+        coll = CollectiveStats({"all-reduce": int(1e12)}, {"all-reduce": 3})
+        r = roofline_from_parts(
+            arch="a", shape="s", mesh="m", chips=4,
+            per_device_flops=1e12, per_device_bytes=1e9,
+            coll=coll, model_flops=2e12)
+        assert r.dominant == "collective"
+        assert abs(r.compute_s - 1e12 / 197e12) < 1e-9
+        assert abs(r.useful_ratio - 0.5) < 1e-9
+
+    def test_model_flops_decode_vs_train(self):
+        from repro.configs import get_config, shape_cell
+        cfg = get_config("smollm-360m")
+        tr = model_flops_for(cfg, shape_cell("train_4k"))
+        de = model_flops_for(cfg, shape_cell("decode_32k"))
+        assert tr / de == (6 * 256 * 4096) / (2 * 128)

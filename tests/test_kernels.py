@@ -1,0 +1,169 @@
+"""Per-kernel shape/dtype sweeps, asserted allclose against ref.py oracles
+(interpret mode executes the Pallas body on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.ssd import ssd
+from repro.kernels.ssd.ref import ssd_ref
+
+
+class TestMatmulKernel:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 128), (100, 200, 150), (256, 64, 512), (1, 7, 3),
+        (384, 128, 128),
+    ])
+    def test_shapes(self, m, k, n):
+        x = jax.random.normal(jax.random.PRNGKey(0), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+        np.testing.assert_allclose(np.asarray(matmul(x, w)),
+                                   np.asarray(matmul_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("act", ["none", "relu", "relu2", "silu", "gelu"])
+    def test_fused_activations(self, act):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 96), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(1), (96, 80), jnp.float32)
+        b = jax.random.normal(jax.random.PRNGKey(2), (80,), jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(matmul(x, w, b, activation=act)),
+            np.asarray(matmul_ref(x, w, b, activation=act)),
+            rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        x = jax.random.normal(jax.random.PRNGKey(0), (64, 64)).astype(dtype)
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 64)).astype(dtype)
+        got = matmul(x, w, out_dtype=jnp.float32)
+        want = matmul_ref(x, w, out_dtype=jnp.float32)
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=tol, atol=tol)
+
+    def test_batched(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (3, 40, 64))
+        w = jax.random.normal(jax.random.PRNGKey(1), (64, 32))
+        np.testing.assert_allclose(np.asarray(matmul(x, w)),
+                                   np.asarray(matmul_ref(x, w)),
+                                   rtol=2e-5, atol=2e-5)
+
+    @given(m=st.integers(1, 300), k=st.integers(1, 260), n=st.integers(1, 200))
+    @settings(max_examples=8, deadline=None)
+    def test_padding_is_exact(self, m, k, n):
+        """Zero-padding to block multiples must not perturb results."""
+        x = jax.random.normal(jax.random.PRNGKey(m), (m, k), jnp.float32)
+        w = jax.random.normal(jax.random.PRNGKey(n), (k, n), jnp.float32)
+        np.testing.assert_allclose(np.asarray(matmul(x, w)),
+                                   np.asarray(matmul_ref(x, w)),
+                                   rtol=3e-5, atol=3e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("sq,skv", [(128, 128), (100, 100), (64, 256),
+                                        (256, 256)])
+    def test_causal_shapes(self, sq, skv):
+        q = jax.random.normal(jax.random.PRNGKey(0), (2, 4, sq, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (2, 2, skv, 32))
+        v = jax.random.normal(jax.random.PRNGKey(2), (2, 2, skv, 32))
+        got = flash_attention(q, k, v, causal=True)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("window", [16, 64, 129])
+    def test_sliding_window(self, window):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 200, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 200, 32))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 200, 32))
+        got = flash_attention(q, k, v, causal=True, window=window)
+        want = attention_ref(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_non_causal(self):
+        q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 128, 32))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 128, 32))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 128, 32))
+        got = flash_attention(q, k, v, causal=False)
+        want = attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("group", [1, 2, 4])
+    def test_gqa_groups(self, group):
+        hkv = 2
+        q = jax.random.normal(jax.random.PRNGKey(0),
+                              (1, hkv * group, 128, 16))
+        k = jax.random.normal(jax.random.PRNGKey(1), (1, hkv, 128, 16))
+        v = jax.random.normal(jax.random.PRNGKey(2), (1, hkv, 128, 16))
+        got = flash_attention(q, k, v, causal=True)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_bf16(self):
+        q = jax.random.normal(jax.random.PRNGKey(0),
+                              (1, 2, 128, 32)).astype(jnp.bfloat16)
+        k = jax.random.normal(jax.random.PRNGKey(1),
+                              (1, 2, 128, 32)).astype(jnp.bfloat16)
+        v = jax.random.normal(jax.random.PRNGKey(2),
+                              (1, 2, 128, 32)).astype(jnp.bfloat16)
+        got = flash_attention(q, k, v, causal=True)
+        want = attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32),
+            rtol=3e-2, atol=3e-2)
+
+
+class TestSSD:
+    @pytest.mark.parametrize("s,chunk", [(64, 16), (50, 16), (128, 32),
+                                         (17, 8)])
+    def test_shapes_vs_ref(self, s, chunk):
+        B, H, P, G, N = 2, 4, 16, 2, 8
+        xs = jax.random.normal(jax.random.PRNGKey(0), (B, s, H, P))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                               (B, s, H)))
+        a = -jnp.exp(jnp.linspace(0.0, 1.0, H))
+        bm = jax.random.normal(jax.random.PRNGKey(2), (B, s, G, N))
+        cm = jax.random.normal(jax.random.PRNGKey(3), (B, s, G, N))
+        d = jnp.ones((H,))
+        y, st_ = ssd(xs, dt, a, bm, cm, d, chunk=chunk)
+        yr, sr = ssd_ref(xs, dt, a, bm, cm, d)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(st_), np.asarray(sr),
+                                   rtol=2e-3, atol=2e-3)
+
+    def test_decode_step_consistency(self):
+        """Sequential decode steps == full-sequence SSD."""
+        from repro.kernels.ssd.ref import ssd_decode_step
+
+        B, s, H, P, G, N = 1, 12, 2, 8, 1, 4
+        xs = jax.random.normal(jax.random.PRNGKey(0), (B, s, H, P))
+        dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1),
+                                               (B, s, H)))
+        a = -jnp.exp(jnp.linspace(0.0, 0.5, H))
+        bm = jax.random.normal(jax.random.PRNGKey(2), (B, s, G, N))
+        cm = jax.random.normal(jax.random.PRNGKey(3), (B, s, G, N))
+        d = jnp.zeros((H,))
+        y_full, state_full = ssd(xs, dt, a, bm, cm, d, chunk=4)
+
+        state = jnp.zeros((B, H, N, P))
+        ys = []
+        for t in range(s):
+            state, y = ssd_decode_step(state, xs[:, t], dt[:, t], a,
+                                       bm[:, t], cm[:, t], d)
+            ys.append(y)
+        y_seq = jnp.stack(ys, axis=1)
+        np.testing.assert_allclose(np.asarray(y_seq), np.asarray(y_full),
+                                   rtol=2e-3, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(state),
+                                   np.asarray(state_full),
+                                   rtol=2e-3, atol=2e-3)

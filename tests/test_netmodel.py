@@ -1,0 +1,103 @@
+"""The analytic netmodel must reproduce every quantitative claim of the
+paper's Fig. 5 / Table III, and satisfy basic physical invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import netmodel as nm
+
+
+class TestPaperClaims:
+    def test_peak_bandwidth_3813(self):
+        for p in (512, 1024):
+            bw = nm.put_bandwidth(nm.FSHMEM_QSFP, 2 << 20, p) / 1e6
+            assert abs(bw - 3813) < 40
+            assert bw > 0.95 * 4000
+
+    def test_small_packet_peaks(self):
+        assert abs(nm.put_bandwidth(nm.FSHMEM_QSFP, 2 << 20, 128) / 1e6
+                   - 2621) < 60
+        assert abs(nm.put_bandwidth(nm.FSHMEM_QSFP, 2 << 20, 256) / 1e6
+                   - 3419) < 60
+
+    def test_half_saturation_around_2kb(self):
+        assert 1024 <= nm.half_saturation_size(nm.FSHMEM_QSFP, 1024) <= 4096
+
+    def test_saturation_around_32kb(self):
+        assert 16384 <= nm.saturation_size(nm.FSHMEM_QSFP, 1024) <= 65536
+
+    def test_latencies_table_iii(self):
+        lat = nm.FSHMEM_QSFP.latency
+        assert abs(lat.put_short * 1e6 - 0.21) < 0.005
+        assert abs(lat.get_short * 1e6 - 0.45) < 0.005
+        assert abs(lat.put_long * 1e6 - 0.35) < 0.005
+        assert abs(lat.get_long * 1e6 - 0.59) < 0.005
+
+    def test_get_below_put_asymmetry(self):
+        """GET −20 % at 2 KB, −8 % at 8 KB (Sec. IV-C)."""
+        gap2k = 1 - (nm.get_bandwidth(nm.FSHMEM_QSFP, 2048, 1024)
+                     / nm.put_bandwidth(nm.FSHMEM_QSFP, 2048, 1024))
+        gap8k = 1 - (nm.get_bandwidth(nm.FSHMEM_QSFP, 8192, 1024)
+                     / nm.put_bandwidth(nm.FSHMEM_QSFP, 8192, 1024))
+        assert 0.15 <= gap2k <= 0.25
+        assert 0.05 <= gap8k <= 0.11
+        assert gap2k > gap8k     # overhead amortizes with size
+
+    def test_9_5x_over_prior(self):
+        bw = nm.put_bandwidth(nm.FSHMEM_QSFP, 2 << 20, 1024) / 1e6
+        assert 9.0 <= bw / 400 <= 10.0
+
+
+class TestInvariants:
+    @given(size=st.integers(4, 1 << 22), packet=st.sampled_from(
+        (128, 256, 512, 1024)))
+    @settings(max_examples=50, deadline=None)
+    def test_bandwidth_below_line_rate(self, size, packet):
+        bw = nm.put_bandwidth(nm.FSHMEM_QSFP, size, packet)
+        assert bw <= nm.FSHMEM_QSFP.peak_bandwidth * (1 + 1e-9)
+
+    @given(packet=st.sampled_from((128, 256, 512, 1024)))
+    @settings(max_examples=10, deadline=None)
+    def test_put_time_monotonic(self, packet):
+        sizes = [4 << i for i in range(16)]
+        times = [nm.put_time(nm.FSHMEM_QSFP, s, packet) for s in sizes]
+        assert times == sorted(times)
+
+    @given(size=st.integers(4, 1 << 20))
+    @settings(max_examples=30, deadline=None)
+    def test_get_slower_than_put(self, size):
+        assert (nm.get_time(nm.FSHMEM_QSFP, size, 1024)
+                > nm.put_time(nm.FSHMEM_QSFP, size, 1024))
+
+
+class TestARTModel:
+    def test_art_never_slower_when_free(self):
+        t_bulk = nm.bulk_time(1e-3, 5e-4, 1e-6)
+        best = nm.best_chunk_count(1e-3, 5e-4, 1e-6)
+        assert nm.art_time(1e-3, 5e-4, 1e-6, best) <= t_bulk
+
+    def test_art_speedup_grows_with_problem_size(self):
+        """Fig. 7: in a matmul family compute ∝ s³ while the exchanged
+        partial sums ∝ s² — larger problems leave more compute to hide the
+        transfer under, so the ART-vs-bulk advantage grows with s."""
+        sps = []
+        for s in (256, 512, 1024):
+            tc = (s ** 3) * 1e-12          # compute time ∝ s³
+            tx = (s ** 2) * 1e-9           # exchange time ∝ s²
+            sps.append(nm.art_speedup(tc, tx, 1e-6, 8))
+        assert sps == sorted(sps)
+        assert sps[0] > 1.0
+
+    @given(n=st.integers(1, 256))
+    @settings(max_examples=30, deadline=None)
+    def test_art_time_at_least_compute(self, n):
+        t = nm.art_time(1e-3, 2e-4, 1e-6, n)
+        assert t >= 1e-3  # cannot beat the compute lower bound
+
+    def test_chunk_u_curve(self):
+        """Too many chunks pay per-message latency — same U as Fig. 5."""
+        t_huge = nm.art_time(1e-4, 5e-5, 1e-6, 4096)
+        best = nm.best_chunk_count(1e-4, 5e-5, 1e-6)
+        assert nm.art_time(1e-4, 5e-5, 1e-6, best) < t_huge

@@ -1,0 +1,159 @@
+"""Runtime: fault-tolerant trainer (restart, preemption, watchdog),
+elastic re-meshing, continuous-batching server."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLM
+from repro.dist.steps import StepConfig
+from repro.runtime.elastic import ElasticMesh, remesh, viable_mesh_shapes
+from repro.runtime.server import Server, ServerConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _trainer(tmp_path, total=6, interval=2, mesh=None, seed=0):
+    cfg = get_config("smollm-360m").reduced()
+    scfg = StepConfig(microbatches=1, seq_chunk=8, warmup_steps=2,
+                      total_steps=total, peak_lr=1e-3)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=17,
+                                  global_batch=4, seed=seed))
+    tcfg = TrainerConfig(total_steps=total, ckpt_dir=str(tmp_path / "ck"),
+                         ckpt_interval=interval, log_interval=100)
+    return Trainer(cfg, scfg, tcfg, data, mesh=mesh, log_fn=lambda s: None)
+
+
+class TestTrainerRestart:
+    def test_restart_resumes_from_checkpoint(self, tmp_path, mesh22):
+        t1 = _trainer(tmp_path, total=4, interval=2, mesh=mesh22)
+        t1.train()
+        losses_a = [h["loss"] for h in t1.history]
+
+        # a "crashed and restarted" trainer picks up at step 4 (last ckpt)
+        t2 = _trainer(tmp_path, total=6, interval=2, mesh=mesh22)
+        t2.train()
+        assert t2.history[0]["step"] == 5      # resumed after step-4 ckpt
+        assert len(t2.history) == 2            # only steps 5..6 run
+
+    def test_restart_trajectory_identical(self, tmp_path, mesh22):
+        """Determinism: (run 6) == (run 4, restart, run to 6) losses."""
+        t_full = _trainer(tmp_path / "a", total=6, interval=100, mesh=mesh22)
+        t_full.train()
+        full = [round(h["loss"], 5) for h in t_full.history]
+
+        t1 = _trainer(tmp_path / "b", total=4, interval=4, mesh=mesh22)
+        t1.train()
+        t2 = _trainer(tmp_path / "b", total=6, interval=4, mesh=mesh22)
+        t2.train()
+        resumed = [round(h["loss"], 5) for h in t1.history] + \
+                  [round(h["loss"], 5) for h in t2.history]
+        np.testing.assert_allclose(full, resumed[: len(full)], rtol=1e-3)
+
+    def test_preemption_checkpoints_and_exits(self, tmp_path, mesh22):
+        t = _trainer(tmp_path, total=50, interval=100, mesh=mesh22)
+        steps_seen = []
+
+        def on_step(step, m):
+            steps_seen.append(step)
+            if step == 3:
+                t._preempted = True     # simulate SIGTERM
+
+        t.train(on_step=on_step)
+        assert max(steps_seen) == 3
+        assert t.ckpt.latest_step() == 3
+
+
+class TestWatchdog:
+    def test_flags_stragglers(self, tmp_path, mesh22):
+        t = _trainer(tmp_path, mesh=mesh22)
+        t.tcfg = t.tcfg
+        for _ in range(10):
+            assert not t._watch_step_time(0.1)
+        # three consecutive 10x-slow steps exhaust the budget
+        assert not t._watch_step_time(1.0)
+        assert not t._watch_step_time(1.0)
+        assert t._watch_step_time(1.0)
+
+    def test_recovers_after_normal_step(self, tmp_path, mesh22):
+        t = _trainer(tmp_path, mesh=mesh22)
+        for _ in range(10):
+            t._watch_step_time(0.1)
+        t._watch_step_time(1.0)
+        t._watch_step_time(0.1)       # strike reset
+        assert t._straggler_strikes == 0
+
+
+class TestElastic:
+    def test_viable_shapes(self):
+        shapes = viable_mesh_shapes(8, model=2)
+        assert shapes[0] == (4, 2)
+
+    def test_remesh_drops_devices(self):
+        devs = jax.devices()
+        m = remesh(devs, model=2)
+        assert m.shape["model"] == 2
+        assert m.shape["data"] == len(devs) // 2
+
+    def test_elastic_fail_shrinks_data_axis(self):
+        em = ElasticMesh(model=2)
+        m0 = em.mesh()
+        m1 = em.fail(0, 1)
+        assert m1.shape["data"] == m0.shape["data"] - 1
+
+    def test_fail_below_tp_raises(self):
+        em = ElasticMesh(model=4)
+        with pytest.raises(RuntimeError):
+            em.fail(0)      # 3 devices cannot keep TP=4
+
+
+class TestServer:
+    def _server(self, mesh):
+        from repro.dist.sharding import param_pspecs, to_shardings
+        from repro.models.model import init_params
+        cfg = get_config("smollm-360m").reduced()
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        psh = to_shardings(mesh, param_pspecs(cfg, mesh, shape))
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=psh)(jax.random.PRNGKey(0))
+        return cfg, params, Server(cfg, params, mesh, srv=ServerConfig(
+            max_batch=2, max_seq=64, max_new_tokens=4))
+
+    def test_all_requests_complete(self, mesh22):
+        cfg, params, srv = self._server(mesh22)
+        rng = np.random.default_rng(0)
+        for _ in range(5):
+            srv.submit(rng.integers(0, cfg.vocab_size, size=6))
+        srv.run()
+        assert len(srv.done) == 5
+        assert all(len(r.out_tokens) == 4 for r in srv.done)
+        s = srv.stats()
+        assert s["tokens"] == 20 and s["throughput_tok_s"] > 0
+
+    def test_output_matches_unbatched_greedy(self, mesh22):
+        """Continuous batching must not change any request's tokens."""
+        from repro.models.decode import decode_step, init_cache
+        cfg, params, srv = self._server(mesh22)
+        rng = np.random.default_rng(1)
+        prompts = [rng.integers(0, cfg.vocab_size, size=6) for _ in range(3)]
+        for p in prompts:
+            srv.submit(p)
+        srv.run()
+
+        params_local = jax.device_get(params)
+        for req in srv.done:
+            cache = init_cache(cfg, 1, 64)
+            toks = list(req.prompt)
+            logits = None
+            for t in toks:
+                cache, logits = decode_step(cfg, params_local, cache,
+                                            jnp.asarray([t], jnp.int32))
+            out = []
+            for _ in range(4):
+                nxt = int(jnp.argmax(logits, -1)[0])
+                out.append(nxt)
+                cache, logits = decode_step(cfg, params_local, cache,
+                                            jnp.asarray([nxt], jnp.int32))
+            assert out == req.out_tokens, (out, req.out_tokens)
