@@ -19,11 +19,9 @@ in tests/test_dist.py::TestTrainStep (full step) and here at reduced size.
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo_cost import summarize
@@ -157,7 +155,9 @@ def art_layer(d: LayerDims, mesh, tp="model"):
 
 
 def compare(d: LayerDims = LayerDims()):
-    n = min(len(jax.devices()), 16)
+    # the ART ring gathers K/V whole per rank, so the schedule needs
+    # tp <= n_kv (GQA); cap the mesh accordingly on large host counts
+    n = min(len(jax.devices()), 16, d.n_kv)
     mesh = jax.make_mesh((n,), ("model",),
                          axis_types=(jax.sharding.AxisType.Auto,))
     out = {}

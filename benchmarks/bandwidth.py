@@ -75,8 +75,6 @@ def verify_paper_claims() -> dict:
 def measured_mesh_put(n_iters: int = 50) -> dict:
     """Functional-path wall clock of fshmem_put on a host mesh (2 ranks)."""
     import jax
-    import jax.numpy as jnp
-    from jax.sharding import PartitionSpec as P
     from repro.core import pgas
 
     if len(jax.devices()) < 2:

@@ -5,4 +5,20 @@ Space on FPGAs for Large-Scale Hardware Acceleration Infrastructure"
 (Arthanto, Ojika, Kim — CS.DC 2022).  See DESIGN.md / EXPERIMENTS.md.
 """
 
-__version__ = "1.0.0"
+from repro import compat as _compat
+
+_compat.install()
+
+__all__ = ["dist"]
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    # Lazy re-export: `repro.dist` pulls in the full model/optim stack, which
+    # lightweight consumers (e.g. the analytic netmodel) shouldn't pay for —
+    # only the compat shims must run at package import.
+    if name == "dist":
+        import importlib
+
+        return importlib.import_module("repro.dist")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

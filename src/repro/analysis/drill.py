@@ -5,7 +5,7 @@ the op metadata (this is the dry-run's 'profiler')."""
 from __future__ import annotations
 
 import re
-from typing import List, Tuple
+from typing import List
 
 from repro.analysis.hlo_cost import (
     _collective_operand_bytes, _dot_flops, _trip_count, _COLLECTIVES,

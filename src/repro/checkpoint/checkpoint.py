@@ -41,7 +41,8 @@ _VIEW_AS = {np.dtype(ml_dtypes.bfloat16): np.uint16,
 
 
 def _flatten_with_paths(tree):
-    flat, treedef = jax.tree.flatten_with_path(tree)
+    # tree_util spelling: works on every jax this package supports
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     names = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
                       for k in path) for path, _ in flat]
     leaves = [leaf for _, leaf in flat]

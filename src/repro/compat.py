@@ -1,0 +1,109 @@
+"""Runtime compatibility shims for the installed jax version.
+
+The codebase is written against the current public jax API —
+``jax.shard_map``, ``jax.sharding.AxisType``, ``jax.make_mesh(...,
+axis_types=...)``, ``jax.tree.flatten_with_path`` — but the pinned CPU
+toolchain in the container ships jax 0.4.x, where the same programs are
+expressible under older spellings (``jax.experimental.shard_map``, no axis
+types, ``jax.tree_util``).  :func:`install` backfills the missing attributes
+so library code, tests, and examples are written exactly once against the
+new spelling.
+
+Every shim is strictly additive and a no-op on a jax that already provides
+the API, so the package runs unmodified on both the pinned container and a
+current-jax CI runner.
+"""
+
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+import jax
+
+
+def _ensure_axis_type() -> None:
+    """``jax.sharding.AxisType`` (Auto/Explicit/Manual) for jax < 0.5."""
+    import jax.sharding as jsharding
+
+    if hasattr(jsharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jsharding.AxisType = AxisType
+
+
+def _ensure_make_mesh_axis_types() -> None:
+    """Accept (and drop) ``axis_types=`` on old ``jax.make_mesh``: pre-0.5
+    meshes have no axis-type concept — every axis behaves as Auto, which is
+    the only type this codebase uses."""
+    try:
+        params = inspect.signature(jax.make_mesh).parameters
+    except (TypeError, ValueError):  # builtins without signatures
+        return
+    if "axis_types" in params:
+        return
+    orig = jax.make_mesh
+
+    @functools.wraps(orig)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        del axis_types
+        return orig(axis_shapes, axis_names, devices=devices)
+
+    jax.make_mesh = make_mesh
+
+
+def _ensure_shard_map() -> None:
+    """``jax.shard_map`` for jax < 0.6 (lives under jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kwargs):
+        # new-jax spelling check_vma= maps onto old check_rep=
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+
+    jax.shard_map = shard_map
+
+
+def _ensure_axis_size() -> None:
+    """``lax.axis_size`` for jax < 0.6.  ``lax.psum(1, axis)`` constant-folds
+    to a Python int under tracing on old jax, which is exactly the static
+    extent the ring schedules need for their python-loop trip counts."""
+    from jax import lax
+
+    if hasattr(lax, "axis_size"):
+        return
+
+    def axis_size(axis_name):
+        return lax.psum(1, axis_name)
+
+    lax.axis_size = axis_size
+
+
+def _ensure_tree_paths() -> None:
+    """``jax.tree.flatten_with_path`` / ``map_with_path`` for jax < 0.5."""
+    import jax.tree as jtree
+    import jax.tree_util as jtu
+
+    if not hasattr(jtree, "flatten_with_path"):
+        jtree.flatten_with_path = jtu.tree_flatten_with_path
+    if not hasattr(jtree, "map_with_path"):
+        jtree.map_with_path = jtu.tree_map_with_path
+
+
+def install() -> None:
+    _ensure_axis_type()
+    _ensure_make_mesh_axis_types()
+    _ensure_shard_map()
+    _ensure_axis_size()
+    _ensure_tree_paths()

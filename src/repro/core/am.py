@@ -33,7 +33,7 @@ and payloads are static per call site — the software analogue of
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Sequence, Tuple
+from typing import Callable, List, Tuple
 
 import jax.numpy as jnp
 from jax import lax

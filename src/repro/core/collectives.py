@@ -5,12 +5,13 @@ the same: every collective here is composed of ring ``ppermute`` steps (the
 ``fshmem_put`` transport), so each can trade per-message overhead against
 pipeline overlap exactly like the paper's packet-size sweep in Fig. 5.
 
-These are the *paper-faithful* software collectives.  ``dist/steps.py`` can
-route data-parallel gradient reduction through :func:`ring_all_reduce`
-(optionally with 8-bit error-feedback compression from ``optim/compress.py``)
-instead of the XLA built-in ``psum``, making the PGAS layer a first-class
-transport for training — and giving us a handle to chunk/overlap/compress
-the cross-pod hop.
+These are the *paper-faithful* software collectives.
+``repro.dist.grad_sync.cross_pod_all_reduce`` routes the cross-pod
+data-parallel gradient reduction through :func:`ring_all_reduce` and
+:func:`ring_all_gather` (optionally with 8-bit error-feedback compression
+from ``optim/compress.py``) instead of the XLA built-in ``psum``, making
+the PGAS layer a first-class transport for training — and giving us a
+handle to chunk/overlap/compress the cross-pod hop.
 
 All functions run inside ``shard_map`` over ``axis``.
 """

@@ -38,7 +38,7 @@ handler atomicity is structural rather than arbitrated (see DESIGN.md §2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -171,6 +171,17 @@ def put_ring(
     return put(heap, payload, offset, axis=axis, perm=perm)
 
 
+def _as_spec_tuple(specs) -> tuple:
+    """Normalize a spec argument to a tuple of specs.  PartitionSpec is a
+    tuple subclass on some jax versions, so a bare P(...) must be wrapped
+    before tuple() can ever see it (it would iterate into its entries)."""
+    if isinstance(specs, P):
+        return (specs,)
+    if isinstance(specs, (list, tuple)):
+        return tuple(specs)
+    return (specs,)
+
+
 # ---------------------------------------------------------------------------
 # User-facing handle
 # ---------------------------------------------------------------------------
@@ -210,14 +221,11 @@ class GlobalAddressSpace:
         extra_out_specs: P | Sequence[P] | None = None,
     ) -> Callable:
         """shard_map ``fn(heap_local, *extras) -> (heap_local, *outs)``."""
-        in_specs = (P(self.axis),) + tuple(extra_in_specs)
+        in_specs = (P(self.axis),) + _as_spec_tuple(extra_in_specs)
         if extra_out_specs is None:
             out_specs: object = P(self.axis)
         else:
-            out_specs = (P(self.axis),) + tuple(
-                extra_out_specs if isinstance(extra_out_specs, (list, tuple))
-                else (extra_out_specs,)
-            )
+            out_specs = (P(self.axis),) + _as_spec_tuple(extra_out_specs)
         return jax.jit(
             jax.shard_map(
                 fn, mesh=self.mesh, in_specs=in_specs, out_specs=out_specs

@@ -16,7 +16,7 @@ examples/train_lm.py and the convergence test.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

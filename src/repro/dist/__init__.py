@@ -1,0 +1,39 @@
+"""Distribution layer: sharding rules, chunked loss, step builders, and the
+PGAS-backed cross-pod gradient transport.
+
+This is the layer between the mesh-agnostic model zoo (``repro.models``)
+and the runtimes (``repro.runtime``): it decides where every tensor lives
+(``sharding``), how the loss streams over the vocabulary (``loss``), how a
+train/prefill/serve step is jitted onto a mesh (``steps``), and which
+transport the once-per-step cross-pod gradient all-reduce takes
+(``grad_sync`` — the software analogue of the paper's 2-node case study).
+"""
+
+from repro.dist import grad_sync, loss, sharding, steps
+from repro.dist.grad_sync import cross_pod_all_reduce, wire_bytes
+from repro.dist.loss import chunked_ce_loss
+from repro.dist.sharding import (
+    MeshAxes,
+    batch_pspecs,
+    cache_pspecs,
+    opt_pspecs,
+    param_pspecs,
+    to_shardings,
+)
+from repro.dist.steps import (
+    StepBundle,
+    StepConfig,
+    build_init,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+
+__all__ = [
+    "grad_sync", "loss", "sharding", "steps",
+    "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
+    "MeshAxes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
+    "param_pspecs", "to_shardings",
+    "StepBundle", "StepConfig", "build_init", "build_prefill_step",
+    "build_serve_step", "build_train_step",
+]

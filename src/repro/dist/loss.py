@@ -1,0 +1,73 @@
+"""Sequence-chunked cross-entropy: the training loss without full logits.
+
+``models/model.loss_fn`` materializes (B, S, V) float32 logits — fine for
+tests, catastrophic for large-vocab archs at train shapes (nemotron's 256k
+vocab at 4k×256 tokens would be ~1 TB of logits).  ``chunked_ce_loss``
+computes the identical quantity by streaming the LM head over sequence
+chunks: per chunk it forms (B, C, V) logits, reduces them to three partial
+sums (masked NLL, masked squared-logsumexp for z-loss, token count), and
+drops them.  Peak logit memory is V·C instead of V·S per row.
+
+Numerics match ``loss_fn`` to float32 reassociation error (asserted at
+rtol 1e-5 by ``tests/test_dist.py::TestChunkedCE``): the per-position
+logsumexp is independent of chunking, and the final normalization uses the
+same global masked-token denominator.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward_hidden
+from repro.models.shardctx import constrain
+
+
+def chunked_ce_loss(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, jnp.ndarray],
+    *,
+    seq_chunk: int,
+    z_loss: float = 1e-4,
+    moe_aux_weight: float = 1e-2,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """batch: tokens (B, S), labels (B, S) with -1 = masked, plus optional
+    frontend_embeds.  Returns (total_loss, metrics) exactly like
+    ``models.model.loss_fn``."""
+    hidden, aux = forward_hidden(cfg, params, batch["tokens"],
+                                 batch.get("frontend_embeds"))
+    labels = batch["labels"]
+    if hidden.shape[1] != labels.shape[1]:   # vlm: crop frontend positions
+        hidden = hidden[:, hidden.shape[1] - labels.shape[1]:]
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"]).astype(cd)
+
+    s = labels.shape[1]
+    chunk = max(int(seq_chunk), 1)
+    nll_sum = jnp.zeros((), jnp.float32)
+    z_sum = jnp.zeros((), jnp.float32)
+    tokens = jnp.zeros((), jnp.float32)
+    for start in range(0, s, chunk):
+        h_c = constrain(hidden[:, start:start + chunk], "logit_hidden")
+        lab = labels[:, start:start + chunk]
+        logits = jnp.einsum("bsd,dv->bsv", h_c.astype(cd),
+                            head).astype(jnp.float32)
+        mask = (lab >= 0).astype(jnp.float32)
+        safe = jnp.maximum(lab, 0)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll_sum += ((lse - gold) * mask).sum()
+        z_sum += ((lse * mask) ** 2).sum()
+        tokens += mask.sum()
+
+    denom = jnp.maximum(tokens, 1.0)
+    ce = nll_sum / denom
+    zl = z_loss * z_sum / denom
+    total = ce + zl + moe_aux_weight * aux
+    return total, {"ce": ce, "z_loss": zl, "moe_aux": aux, "tokens": tokens}

@@ -1,0 +1,392 @@
+"""Step builders: jit-compiled, mesh-sharded train / prefill / serve steps.
+
+This is the layer that turns the mesh-agnostic model zoo into distributed
+programs.  Each ``build_*`` returns a :class:`StepBundle`: a jitted callable
+with in/out shardings bound, the matching PartitionSpec trees (so runtimes
+can place state without re-deriving rules), and shape templates for
+checkpoint restore and dry-run lowering.
+
+Responsibilities:
+
+  * sharding — parameter/optimizer/cache/batch placement from
+    ``dist/sharding.py``; activation constraints are injected into the
+    model's ``constrain(x, tag)`` call sites via ``models/shardctx.py``
+    (sequence-parallel residual when the length divides TP);
+  * loss — the sequence-chunked CE from ``dist/loss.py`` (full logits never
+    materialize at train shapes);
+  * microbatching — ``lax.scan`` gradient accumulation in fp32; with equal
+    per-microbatch token counts the update is exactly the full-batch one
+    (asserted by ``tests/test_dist.py::test_microbatch_equivalence``);
+  * transport selection — ``StepConfig.art_tp`` swaps every TP collective of
+    dense blocks for the hand-scheduled PGAS rings of ``models/artblock.py``
+    (the paper's ART as a training feature).  The cross-pod gradient hop has
+    its own PGAS transport in ``dist/grad_sync.py`` (operating on per-pod
+    gradients, pod-sharded layout); wiring it *inside* this GSPMD step would
+    require partial-manual shard_map over ``pod``, which the pinned jax's
+    partitioner rejects — see DESIGN §6 and the ROADMAP open item.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.dist.loss import chunked_ce_loss
+from repro.dist.sharding import (
+    MeshAxes,
+    batch_pspecs,
+    cache_pspecs,
+    dp_axes,
+    fit_axis,
+    opt_pspecs,
+    param_pspecs,
+    to_shardings,
+)
+from repro.models import artblock
+from repro.models import layers as L
+from repro.models.decode import decode_step, init_cache
+from repro.models.model import init_params
+from repro.models.prefill import prefill
+from repro.models.shardctx import activation_sharding
+from repro.optim import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    warmup_cosine,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    """Per-run knobs of the distributed step (model config stays pure)."""
+
+    microbatches: int = 1
+    seq_chunk: int = 512             # CE streaming chunk (dist/loss.py)
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"    # "bfloat16" for >=100B archs
+    master_fp32: bool = True
+    sequence_parallel: bool = True   # shard S of the residual over TP
+    art_tp: bool = False             # PGAS ring schedules for TP collectives
+    z_loss: float = 1e-4
+    moe_aux_weight: float = 1e-2
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A built step: jitted fn + the specs/shapes runtimes need around it."""
+
+    fn: Any                          # jitted callable (has .lower)
+    in_specs: Tuple[Any, ...]        # PartitionSpec tree per positional arg
+    out_specs: Any
+    aux: Dict[str, Any]              # params_shape / opt_shape / cache_shape
+
+
+# ---------------------------------------------------------------------------
+# shared plumbing
+# ---------------------------------------------------------------------------
+
+
+def _adamw_config(scfg: StepConfig) -> AdamWConfig:
+    return AdamWConfig(lr=scfg.peak_lr, weight_decay=scfg.weight_decay,
+                       moment_dtype=scfg.moment_dtype,
+                       master_fp32=scfg.master_fp32)
+
+
+def _state_shapes(cfg: ModelConfig, scfg: StepConfig):
+    params_shape = jax.eval_shape(functools.partial(init_params, cfg),
+                                  jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(
+        functools.partial(adamw_init, cfg=_adamw_config(scfg)), params_shape)
+    return params_shape, opt_shape
+
+
+def _tp_extent(mesh) -> int:
+    return mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+
+def _constraint_fn(cfg: ModelConfig, mesh, scfg: StepConfig) -> Callable:
+    """The ``constrain(x, tag)`` implementation installed for a trace."""
+    dp = dp_axes(mesh)
+    tp = "model" if "model" in mesh.axis_names else None
+    tp_n = _tp_extent(mesh)
+
+    def constrain(x, tag: str):
+        if getattr(x, "ndim", 0) != 3:
+            return x
+        if tag in ("residual", "block_input"):
+            sp = (scfg.sequence_parallel and tp is not None
+                  and x.shape[1] % tp_n == 0)
+            spec = P(dp, tp if sp else None, None)
+        elif tag == "logit_hidden":
+            spec = P(dp, None, None)
+        else:
+            return x
+        return lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+def _scalar_sharding(mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# ART-TP block runner (the paper's transport inside the train step)
+# ---------------------------------------------------------------------------
+
+
+def _art_runner(cfg: ModelConfig, mesh, scfg: StepConfig) -> Optional[Callable]:
+    """Dense-block runner with every TP collective a PGAS ring schedule.
+
+    Norms and the (small) K/V projections stay GSPMD; the two manual regions
+    differentiate only tp-sharded tensors (see models/artblock.py notes).
+    Returns None when the arch/mesh cannot take the manual schedule — the
+    step then falls back to GSPMD collectives, same numerics.
+    """
+    tp_n = _tp_extent(mesh)
+    if tp_n <= 1 or not artblock.supports_art_tp(cfg, tp_n):
+        return None
+    dp = dp_axes(mesh)
+    act3 = P(dp, "model", None)
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def runner(cfg_, lp, x, positions):
+        attn_p, mlp_p = lp["attn"], lp["mlp"]
+        a_in = L.apply_norm(cfg_, lp["ln1"], x)
+        k_full = jnp.einsum("bsd,dh->bsh", a_in.astype(cd),
+                            attn_p["wk"].astype(cd))
+        v_full = jnp.einsum("bsd,dh->bsh", a_in.astype(cd),
+                            attn_p["wv"].astype(cd))
+
+        attn_fn = jax.shard_map(
+            functools.partial(artblock.art_attention_part, cfg_,
+                              axis="model"),
+            mesh=mesh,
+            in_specs=(act3, act3, act3, act3,
+                      P(None, "model"), P("model", None), P(None)),
+            out_specs=act3, check_vma=False)
+        h = attn_fn(x, a_in, k_full, v_full, attn_p["wq"], attn_p["wo"],
+                    positions)
+
+        m_in = L.apply_norm(cfg_, lp["ln2"], h)
+        w_gate = mlp_p.get("w_gate")
+        if w_gate is not None:
+            def gated(h_, m_, wu, wg, wd):
+                return artblock.art_mlp_part(cfg_, h_, m_, wu, wg, wd,
+                                             axis="model")
+            mlp_fn = jax.shard_map(
+                gated, mesh=mesh,
+                in_specs=(act3, act3, P(None, "model"), P(None, "model"),
+                          P("model", None)),
+                out_specs=act3, check_vma=False)
+            return mlp_fn(h, m_in, mlp_p["w_up"], w_gate, mlp_p["w_down"])
+
+        def ungated(h_, m_, wu, wd):
+            return artblock.art_mlp_part(cfg_, h_, m_, wu, None, wd,
+                                         axis="model")
+        mlp_fn = jax.shard_map(
+            ungated, mesh=mesh,
+            in_specs=(act3, act3, P(None, "model"), P("model", None)),
+            out_specs=act3, check_vma=False)
+        return mlp_fn(h, m_in, mlp_p["w_up"], mlp_p["w_down"])
+
+    return runner
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def build_init(cfg: ModelConfig, mesh, scfg: StepConfig):
+    """Returns ``(init_fn, (param_pspecs, opt_pspecs))``; ``init_fn(key)``
+    materializes sharded (params, opt_state) directly on the mesh."""
+    params_shape, opt_shape = _state_shapes(cfg, scfg)
+    pspecs = param_pspecs(cfg, mesh, params_shape)
+    ospecs = opt_pspecs(cfg, mesh, opt_shape, pspecs)
+    acfg = _adamw_config(scfg)
+
+    @functools.partial(
+        jax.jit,
+        out_shardings=(to_shardings(mesh, pspecs), to_shardings(mesh, ospecs)))
+    def init_fn(key):
+        params = init_params(cfg, key)
+        return params, adamw_init(params, acfg)
+
+    return init_fn, (pspecs, ospecs)
+
+
+# ---------------------------------------------------------------------------
+# train
+# ---------------------------------------------------------------------------
+
+
+def build_train_step(cfg: ModelConfig, mesh, scfg: StepConfig,
+                     bshape) -> StepBundle:
+    """``fn(params, opt, batch, step) -> (params, opt, metrics)``."""
+    params_shape, opt_shape = _state_shapes(cfg, scfg)
+    pspecs = param_pspecs(cfg, mesh, params_shape)
+    ospecs = opt_pspecs(cfg, mesh, opt_shape, pspecs)
+    bspecs = batch_pspecs(mesh, bshape)
+    acfg = _adamw_config(scfg)
+    constrain = _constraint_fn(cfg, mesh, scfg)
+    runner = _art_runner(cfg, mesh, scfg) if scfg.art_tp else None
+    n_micro = max(int(scfg.microbatches), 1)
+
+    def loss_fn(params, microbatch):
+        with activation_sharding(constrain, tp_block=runner):
+            return chunked_ce_loss(
+                cfg, params, microbatch, seq_chunk=scfg.seq_chunk,
+                z_loss=scfg.z_loss, moe_aux_weight=scfg.moe_aux_weight)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def step_fn(params, opt, batch, step):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            micro = jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:]), batch)
+
+            def body(g_acc, mb):
+                (l, met), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32), g_acc, g)
+                return g_acc, (l, met)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            g_sum, (losses, mets) = lax.scan(body, zeros, micro)
+            grads = jax.tree.map(lambda a: a / n_micro, g_sum)
+            loss = losses.mean()
+            metrics = {k: (v.sum() if k == "tokens" else v.mean())
+                       for k, v in mets.items()}
+
+        grads, grad_norm = clip_by_global_norm(grads, scfg.clip_norm)
+        lr = warmup_cosine(step, peak_lr=scfg.peak_lr,
+                           warmup_steps=scfg.warmup_steps,
+                           total_steps=scfg.total_steps)
+        new_params, new_opt = adamw_update(grads, opt, params, acfg, lr)
+        metrics = dict(metrics, loss=loss, grad_norm=grad_norm, lr=lr)
+        return new_params, new_opt, metrics
+
+    psh = to_shardings(mesh, pspecs)
+    osh = to_shardings(mesh, ospecs)
+    bsh = to_shardings(mesh, bspecs)
+    scalar = _scalar_sharding(mesh)
+    fn = jax.jit(step_fn, in_shardings=(psh, osh, bsh, scalar),
+                 out_shardings=(psh, osh, scalar))
+    return StepBundle(
+        fn=fn,
+        in_specs=(pspecs, ospecs, bspecs, P()),
+        out_specs=(pspecs, ospecs, P()),
+        aux={"params_shape": params_shape, "opt_shape": opt_shape},
+    )
+
+
+# ---------------------------------------------------------------------------
+# prefill / serve
+# ---------------------------------------------------------------------------
+
+
+def build_prefill_step(cfg: ModelConfig, mesh, scfg: StepConfig,
+                       batch: int, seq_len: int,
+                       with_frontend: Optional[Tuple[int, int]] = None
+                       ) -> StepBundle:
+    """``fn(params, tokens[, frontend_embeds]) -> (cache, logits)``:
+    forward over the prompt that also materializes the decode cache."""
+    params_shape, _ = _state_shapes(cfg, scfg)
+    pspecs = param_pspecs(cfg, mesh, params_shape)
+    constrain = _constraint_fn(cfg, mesh, scfg)
+    dp = dp_axes(mesh)
+
+    arg_shapes = [jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)]
+    arg_specs = [P(fit_axis(mesh, dp, batch), None)]
+    if with_frontend is not None:
+        n_tok, n_dim = with_frontend
+        arg_shapes.append(
+            jax.ShapeDtypeStruct((batch, n_tok, n_dim), jnp.float32))
+        arg_specs.append(P(arg_specs[0][0], None, None))
+
+    if with_frontend is None:
+        def raw(params, tokens):
+            return prefill(cfg, params, tokens, cache_len=seq_len)
+
+        def fwd(params, tokens):
+            with activation_sharding(constrain):
+                return prefill(cfg, params, tokens, cache_len=seq_len)
+    else:
+        def raw(params, tokens, fe):
+            return prefill(cfg, params, tokens, fe, cache_len=seq_len)
+
+        def fwd(params, tokens, fe):
+            with activation_sharding(constrain):
+                return prefill(cfg, params, tokens, fe, cache_len=seq_len)
+
+    cache_shape, logits_shape = jax.eval_shape(raw, params_shape, *arg_shapes)
+    cspecs = cache_pspecs(cfg, mesh, cache_shape)
+    lspec = P(arg_specs[0][0], None)
+
+    fn = jax.jit(
+        fwd,
+        in_shardings=(to_shardings(mesh, pspecs),
+                      *[NamedSharding(mesh, s) for s in arg_specs]),
+        out_shardings=(to_shardings(mesh, cspecs), NamedSharding(mesh, lspec)))
+    return StepBundle(
+        fn=fn,
+        in_specs=(pspecs, *arg_specs),
+        out_specs=(cspecs, lspec),
+        aux={"params_shape": params_shape, "cache_shape": cache_shape,
+             "logits_shape": logits_shape},
+    )
+
+
+def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
+                     batch: int, max_seq: int) -> StepBundle:
+    """``fn(params, cache, tokens) -> (cache, logits)``: one batched decode
+    step against the ring-buffer cache (continuous-batching inner loop)."""
+    params_shape, _ = _state_shapes(cfg, scfg)
+    pspecs = param_pspecs(cfg, mesh, params_shape)
+    cache_shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    cspecs = cache_pspecs(cfg, mesh, cache_shape)
+    dp = dp_axes(mesh)
+    b_entry = fit_axis(mesh, dp, batch)
+    tok_spec = P(b_entry)
+    logit_spec = P(b_entry, None)
+
+    def fn_(params, cache, tokens):
+        return decode_step(cfg, params, cache, tokens)
+
+    fn = jax.jit(
+        fn_,
+        in_shardings=(to_shardings(mesh, pspecs),
+                      to_shardings(mesh, cspecs),
+                      NamedSharding(mesh, tok_spec)),
+        out_shardings=(to_shardings(mesh, cspecs),
+                       NamedSharding(mesh, logit_spec)))
+    return StepBundle(
+        fn=fn,
+        in_specs=(pspecs, cspecs, tok_spec),
+        out_specs=(cspecs, logit_spec),
+        aux={"params_shape": params_shape, "cache_shape": cache_shape},
+    )
+
+
+__all__ = [
+    "StepConfig", "StepBundle", "build_init", "build_train_step",
+    "build_prefill_step", "build_serve_step", "MeshAxes",
+]

@@ -9,7 +9,6 @@ binds the production mesh and full config.  All fault-tolerance features
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import os
 
 

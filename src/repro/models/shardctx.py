@@ -1,8 +1,10 @@
 """Activation-sharding context: the step builder injects sharding
 constraints into the (mesh-agnostic) model code.
 
-``dist/steps.py`` installs a tag→constraint function for the duration of a
-trace; model code calls ``constrain(x, "residual")`` at block boundaries.
+The step builders in ``repro.dist.steps`` install a tag→constraint function
+for the duration of a trace (``build_train_step`` / ``build_prefill_step``
+via :func:`activation_sharding`); model code calls
+``constrain(x, "residual")`` at block boundaries.
 Outside any context this is the identity, so model code runs unchanged in
 unit tests / single-device smoke tests.
 
@@ -23,10 +25,10 @@ _TP_BLOCK: Optional[Callable] = None
 @contextlib.contextmanager
 def activation_sharding(fn: Callable, tp_block: Optional[Callable] = None):
     """``fn(x, tag)`` applies sharding constraints; ``tp_block`` (optional)
-    is the ART-TP dense-block runner installed by the step builder when
-    ``StepConfig.art_tp`` is on: ``tp_block(cfg, layer_params, x,
-    positions) -> x`` executes the block with hand-scheduled ring
-    collectives (models/artblock.py)."""
+    is the ART-TP dense-block runner installed by
+    ``repro.dist.steps.build_train_step`` when ``StepConfig.art_tp`` is on:
+    ``tp_block(cfg, layer_params, x, positions) -> x`` executes the block
+    with hand-scheduled ring collectives (models/artblock.py)."""
     global _ACTIVE, _TP_BLOCK
     old, old_tp = _ACTIVE, _TP_BLOCK
     _ACTIVE, _TP_BLOCK = fn, tp_block

@@ -27,7 +27,7 @@ import dataclasses
 import signal
 import statistics
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp

@@ -1,11 +1,9 @@
 """The HLO cost walker: exact FLOPs on known programs, loop multipliers,
 collective operand accounting."""
 
-import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.analysis.hlo_cost import parse_module, summarize

@@ -1,8 +1,6 @@
 """Checkpoint atomicity/roundtrip + data-pipeline determinism."""
 
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

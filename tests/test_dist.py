@@ -269,7 +269,6 @@ class TestCrossPodGradSync:
         assert np.abs(np.asarray(ef["w"])).max() <= scale + 1e-6
 
     def test_int8_on_the_wire(self, podmesh):
-        from repro.analysis.hlo_cost import summarize
         from repro.dist.grad_sync import cross_pod_all_reduce
         g = jnp.zeros((2, 512))
         gs = jax.device_put(g, jax.sharding.NamedSharding(

@@ -1,9 +1,7 @@
 """The analytic netmodel must reproduce every quantitative claim of the
 paper's Fig. 5 / Table III, and satisfy basic physical invariants."""
 
-import math
 
-import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import netmodel as nm

@@ -1,6 +1,5 @@
 """PGAS semantics: symmetric heap, one-sided put/get, addressing."""
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -103,9 +103,10 @@ class TestElastic:
         assert m1.shape["data"] == m0.shape["data"] - 1
 
     def test_fail_below_tp_raises(self):
-        em = ElasticMesh(model=4)
+        n = len(jax.devices())
+        em = ElasticMesh(model=n)       # TP spans every device
         with pytest.raises(RuntimeError):
-            em.fail(0)      # 3 devices cannot keep TP=4
+            em.fail(0)      # n-1 devices cannot keep TP=n
 
 
 class TestServer:
