@@ -1,0 +1,152 @@
+"""Transport sweep: op × transport × message size over the conduit layer.
+
+The perf-trajectory artifact of the conduit refactor: for every collective
+op and every registered transport, the modeled time (QSFP+ and ICI
+netmodels, per message size and axis size) plus the ``auto`` policy's
+choice — the paper's Fig. 5 packet-size sweep generalized into a transport
+*selection* surface.  A second, measured section times the real schedules
+on a host-device CPU mesh (functional wall-clock only; CPU numbers are
+never reported as link performance).
+
+Writes ``BENCH_transport.json`` at the repo root.  ``--model-only`` skips
+the measured section (CI smoke).
+
+Internal assertions (a failed claim is a failed run):
+  * every op is servable by ≥ 3 transports;
+  * ``auto`` picks different transports for small vs large messages on the
+    QSFP+ link (the Fig. 5 tradeoff is actually exercised);
+  * every measured transport agrees numerically with the XLA builtin.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_transport.json")
+
+SIZES = tuple(1 << p for p in range(8, 25, 2))     # 256 B .. 16 MB
+AXIS_SIZES = (4, 8, 64)
+MEASURED_OPS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all")
+
+
+def model_rows():
+    from repro.core import conduit
+    from repro.core import netmodel as nm
+
+    rows = []
+    for link_name, link in (("qsfp", nm.FSHMEM_QSFP), ("ici", nm.TPU_ICI)):
+        for op in conduit.OPS:
+            names = conduit.transports(op)
+            assert len(names) >= 3, (op, names)
+            for n in AXIS_SIZES:
+                for size in SIZES:
+                    for t in names:
+                        rows.append({
+                            "source": "model", "link": link_name, "op": op,
+                            "transport": t, "axis_size": n, "bytes": size,
+                            "time_us": 1e6 * conduit.estimate_time(
+                                op, t, size_bytes=size, axis_size=n,
+                                link=link),
+                        })
+                    choice, chunk = conduit.auto_select(
+                        op, size_bytes=size, axis_size=n, link=link)
+                    rows.append({
+                        "source": "auto", "link": link_name, "op": op,
+                        "transport": choice, "axis_size": n, "bytes": size,
+                        "chunk_bytes": chunk,
+                    })
+    return rows
+
+
+def verify_model_claims(rows) -> dict:
+    """auto must flip transports across the size sweep (Fig. 5 as policy)."""
+    auto_ar = {r["bytes"]: r["transport"] for r in rows
+               if r["source"] == "auto" and r["op"] == "all_reduce"
+               and r["link"] == "qsfp" and r["axis_size"] == 8}
+    small, large = auto_ar[min(auto_ar)], auto_ar[max(auto_ar)]
+    assert small != large, (small, large)
+    assert small == "xla", small
+    assert large in ("ring", "bidir"), large
+    return {"auto_small_transport": small, "auto_large_transport": large}
+
+
+def measured_rows(n_iters: int = 5):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core import conduit
+
+    n = min(4, len(jax.devices()))
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n]), ("x",))
+    rows = []
+    for op in MEASURED_OPS:
+        for size in (1 << 12, 1 << 18):          # 4 KB / 256 KB per rank
+            elems = size // 4
+            if op == "all_to_all":
+                x = jnp.arange(n * n * elems, dtype=jnp.float32
+                               ).reshape(n, n, elems)
+                spec, call = P("x"), lambda cd, v: cd.all_to_all(v[0])[None]
+            elif op == "reduce_scatter":
+                x = jnp.arange(n * n * elems, dtype=jnp.float32
+                               ).reshape(n * n, elems)
+                spec, call = P("x"), lambda cd, v: cd.reduce_scatter(v)
+            else:
+                x = jnp.arange(n * elems, dtype=jnp.float32
+                               ).reshape(n, elems)
+                spec, call = P("x"), (
+                    (lambda cd, v: cd.all_reduce(v[0])[None])
+                    if op == "all_reduce"
+                    else (lambda cd, v: cd.all_gather(v)))
+            ref = None
+            for t in conduit.transports(op):
+                cd = conduit.Conduit("x", t)
+                f = jax.jit(jax.shard_map(
+                    lambda v, cd=cd, call=call: call(cd, v),
+                    mesh=mesh, in_specs=spec, out_specs=P("x")))
+                out = np.asarray(f(x))           # compile + correctness
+                if ref is None:
+                    ref = out
+                else:
+                    np.testing.assert_allclose(
+                        out, ref, rtol=1e-5, atol=1e-5,
+                        err_msg=f"{op}/{t} disagrees with other transports")
+                t0 = time.perf_counter()
+                for _ in range(n_iters):
+                    jax.block_until_ready(f(x))
+                dt = (time.perf_counter() - t0) / n_iters
+                rows.append({
+                    "source": "measured-cpu-mesh", "op": op, "transport": t,
+                    "axis_size": n, "bytes": size,
+                    "wall_us": 1e6 * dt,
+                })
+    return rows
+
+
+def main(model_only: bool = False) -> dict:
+    rows = model_rows()
+    claims = verify_model_claims(rows)
+    if not model_only:
+        rows += measured_rows()
+    payload = {
+        "suite": "transport_sweep",
+        "claims": claims,
+        "n_rows": len(rows),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"transport_sweep: {len(rows)} rows -> {OUT_PATH}")
+    print(f"  auto(QSFP, all_reduce, n=8): small -> "
+          f"{claims['auto_small_transport']}, large -> "
+          f"{claims['auto_large_transport']}")
+    return payload
+
+
+if __name__ == "__main__":
+    # failures surface as uncaught assertions (nonzero exit)
+    main("--model-only" in sys.argv[1:])

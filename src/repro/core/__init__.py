@@ -5,11 +5,15 @@ Layers (bottom-up):
   pgas        — symmetric heap + one-sided put/get over a mesh axis
   am          — GASNet Active Messages: opcode registry + lax.switch dispatch
   art         — Automatic Result Transfer: chunked compute/comm overlap
-  collectives — extended API (barrier/bcast/AG/RS/AR/a2a) from PUT rings
+  conduit     — GASNet-style transport registry (xla/ring/bidir + auto
+                cost-model selection) behind one collective API
+  collectives — extended API (barrier/bcast/AG/RS/AR/a2a), thin wrappers
+                binding the conduit's paper-faithful ring transport
   overlap     — beyond-paper: ART applied to tensor-parallel matmuls
 """
 
-from repro.core import am, art, collectives, netmodel, overlap, pgas
+from repro.core import am, art, collectives, conduit, netmodel, overlap, pgas
+from repro.core.conduit import Conduit
 from repro.core.am import (
     HandlerRegistry,
     am_request,
@@ -30,7 +34,8 @@ from repro.core.overlap import allgather_matmul, matmul_reducescatter
 from repro.core.pgas import GlobalAddressSpace, SymmetricHeap, get, put
 
 __all__ = [
-    "am", "art", "collectives", "netmodel", "overlap", "pgas",
+    "am", "art", "collectives", "conduit", "netmodel", "overlap", "pgas",
+    "Conduit",
     "HandlerRegistry", "am_request", "am_request_long", "am_request_medium",
     "am_request_short", "gasnet_get", "gasnet_put", "make_args",
     "art_matmul_reducescatter", "art_send", "bulk_matmul_reducescatter",

@@ -1,17 +1,17 @@
-"""GASNet "extended API" collectives built from one-sided PUT chunks.
+"""GASNet "extended API" collectives — thin wrappers over the conduit layer.
 
 GASNet layers barriers/collectives on top of the core AM primitives; we do
-the same: every collective here is composed of ring ``ppermute`` steps (the
-``fshmem_put`` transport), so each can trade per-message overhead against
-pipeline overlap exactly like the paper's packet-size sweep in Fig. 5.
+the same, except the schedules themselves now live in one place: the
+conduit registry (``repro.core.conduit``).  Every function here binds the
+paper-faithful ``ring`` transport (n−1 one-sided ``fshmem_put`` hops, each
+an ART-sized message — DESIGN §4); callers who want the XLA built-ins, the
+full-duplex ``bidir`` rings, or cost-model-driven selection construct a
+:class:`repro.core.conduit.Conduit` directly.
 
-These are the *paper-faithful* software collectives.
 ``repro.dist.grad_sync.cross_pod_all_reduce`` routes the cross-pod
-data-parallel gradient reduction through :func:`ring_all_reduce` and
-:func:`ring_all_gather` (optionally with 8-bit error-feedback compression
-from ``optim/compress.py``) instead of the XLA built-in ``psum``, making
-the PGAS layer a first-class transport for training — and giving us a
-handle to chunk/overlap/compress the cross-pod hop.
+data-parallel gradient reduction through these conduits (optionally with
+8-bit error-feedback compression as a conduit wrapper), making the PGAS
+layer a first-class transport for training.
 
 All functions run inside ``shard_map`` over ``axis``.
 """
@@ -19,56 +19,45 @@ All functions run inside ``shard_map`` over ``axis``.
 from __future__ import annotations
 
 import jax.numpy as jnp
-from jax import lax
 
-from repro.core.art import _ring_perm
+from repro.core import conduit as _conduit
+
+
+def _ring(axis: str, chunk_bytes: int | None = None) -> _conduit.Conduit:
+    return _conduit.Conduit(axis=axis, transport="ring",
+                            chunk_bytes=chunk_bytes)
 
 
 def barrier(axis: str) -> jnp.ndarray:
     """GASNet barrier: every rank reports in; returns the participant count.
 
-    (An all-reduce of 1 — the cheapest full-synchronization primitive.)
+    A ones-token relayed around the PUT ring (n−1 hops): every rank counts
+    the same n, but the result is *not* statically provably replicated the
+    way the old ``psum(1)`` was — consume it with per-rank out_specs, or
+    use ``Conduit(axis, "xla").barrier()`` for the psum form.
     """
-    return lax.psum(jnp.ones((), jnp.int32), axis)
+    return _ring(axis).barrier()
 
 
 def broadcast(x: jnp.ndarray, root: int, *, axis: str) -> jnp.ndarray:
     """One-sided broadcast: the value propagates from root around the ring,
     one PUT per hop (n−1 hops).  Non-root inputs are ignored, as in
     shmem_broadcast."""
-    n = lax.axis_size(axis)
-    my = lax.axis_index(axis)
-    cur = jnp.where(my == root, x, jnp.zeros_like(x))
-    have = my == root
-    perm = _ring_perm(n, 1)
-    for _ in range(n - 1):
-        arrived = lax.ppermute(cur, axis, perm)
-        have_prev = lax.ppermute(have, axis, perm)
-        cur = jnp.where(~have & have_prev, arrived, cur)
-        have = have | have_prev
-    return cur
+    return _ring(axis).broadcast(x, root)
 
 
-def ring_all_gather(x: jnp.ndarray, *, axis: str) -> jnp.ndarray:
+def ring_all_gather(x: jnp.ndarray, *, axis: str,
+                    chunk_bytes: int | None = None) -> jnp.ndarray:
     """All-gather via n−1 ring PUTs: each rank forwards the block it just
     received (bandwidth-optimal, (n−1)/n · |global| bytes per rank).
 
     ``x``: (B, ...) local block; returns (n·B, ...) tiled on axis 0.
     """
-    n = lax.axis_size(axis)
-    perm = _ring_perm(n, 1)
-    my = lax.axis_index(axis)
-    out = jnp.zeros((n,) + x.shape, x.dtype)
-    out = lax.dynamic_update_index_in_dim(out, x, my, 0)
-    cur = x
-    for hop in range(1, n):
-        cur = lax.ppermute(cur, axis, perm)
-        src = (my - hop) % n
-        out = lax.dynamic_update_index_in_dim(out, cur, src, 0)
-    return out.reshape((n * x.shape[0],) + x.shape[1:])
+    return _ring(axis, chunk_bytes).all_gather(x)
 
 
-def ring_reduce_scatter(x: jnp.ndarray, *, axis: str) -> jnp.ndarray:
+def ring_reduce_scatter(x: jnp.ndarray, *, axis: str,
+                        chunk_bytes: int | None = None) -> jnp.ndarray:
     """Reduce-scatter via the ring invariant of ``art_matmul_reducescatter``:
     block b_q starts at rank q+1, gathers every rank's contribution along
     n−1 hops, and lands fully reduced at its owner.
@@ -76,43 +65,20 @@ def ring_reduce_scatter(x: jnp.ndarray, *, axis: str) -> jnp.ndarray:
     ``x``: (n·B, ...) per-rank vector of partial sums; returns (B, ...) —
     this rank's fully-reduced block.
     """
-    n = lax.axis_size(axis)
-    assert x.shape[0] % n == 0, (x.shape, n)
-    b = x.shape[0] // n
-    perm = _ring_perm(n, 1)
-    my = lax.axis_index(axis)
-
-    def block(owner_offset: int):
-        start = ((my + owner_offset) % n) * b
-        return lax.dynamic_slice_in_dim(x, start, b, 0)
-
-    cur = block(-1)
-    for hop in range(1, n):
-        arrived = lax.ppermute(cur, axis, perm)
-        cur = arrived + block(-(hop + 1))
-    return cur
+    return _ring(axis, chunk_bytes).reduce_scatter(x)
 
 
-def ring_all_reduce(x: jnp.ndarray, *, axis: str) -> jnp.ndarray:
+def ring_all_reduce(x: jnp.ndarray, *, axis: str,
+                    chunk_bytes: int | None = None) -> jnp.ndarray:
     """Bandwidth-optimal all-reduce = ring reduce-scatter + ring all-gather
     (2·(n−1)/n · |x| bytes on the wire per rank, the textbook optimum —
     and every hop is an `fshmem_put`-sized message, i.e. ART-chunked by
     construction)."""
-    n = lax.axis_size(axis)
-    orig_shape = x.shape
-    n_elems = 1
-    for s in orig_shape:
-        n_elems *= s
-    flat = x.reshape(-1)
-    pad = (-n_elems) % n
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    reduced_block = ring_reduce_scatter(flat, axis=axis)
-    gathered = ring_all_gather(reduced_block, axis=axis)
-    return gathered[:n_elems].reshape(orig_shape)
+    return _ring(axis, chunk_bytes).all_reduce(x)
 
 
-def all_to_all_chunked(x: jnp.ndarray, *, axis: str) -> jnp.ndarray:
+def all_to_all_chunked(x: jnp.ndarray, *, axis: str,
+                       chunk_bytes: int | None = None) -> jnp.ndarray:
     """All-to-all via n−1 single-block ring hops (MoE dispatch transport).
 
     ``x``: (n, B, ...) — slot q is destined for rank q.  Returns (n, B, ...)
@@ -120,17 +86,4 @@ def all_to_all_chunked(x: jnp.ndarray, *, axis: str) -> jnp.ndarray:
     one block per rank, so the per-hop message size is |x|/n — i.e. the
     all-to-all is already ART-chunked by construction.
     """
-    n = lax.axis_size(axis)
-    my = lax.axis_index(axis)
-    out = jnp.zeros_like(x)
-    out = lax.dynamic_update_index_in_dim(
-        out, lax.dynamic_index_in_dim(x, my, 0, keepdims=False), my, 0
-    )
-    for shift in range(1, n):
-        perm = _ring_perm(n, shift)
-        dst = (my + shift) % n
-        block = jnp.take(x, dst, axis=0)
-        arrived = lax.ppermute(block, axis, perm)
-        src = (my - shift) % n
-        out = lax.dynamic_update_index_in_dim(out, arrived, src, 0)
-    return out
+    return _ring(axis, chunk_bytes).all_to_all(x)

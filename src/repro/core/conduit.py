@@ -1,0 +1,751 @@
+"""GASNet-style conduit layer: one collective API, interchangeable transports.
+
+GASNet's portability comes from its *conduit* abstraction — one core API
+compiled against many network backends.  This module is that layer for the
+repo: every collective op (``all_gather``, ``reduce_scatter``,
+``all_reduce``, ``all_to_all``, ``broadcast``, ``barrier``) is served by a
+registry of named transports, and everything above (``core/collectives``,
+``core/overlap``, ``models/artblock``, ``dist/grad_sync``, ``dist/steps``)
+goes through a :class:`Conduit` handle instead of hard-coding a schedule.
+
+Registered transports:
+
+``xla``
+    The XLA built-in collectives (``lax.psum`` & friends).  The compiler
+    picks the algorithm; per-message latency is low (tree/doubling style)
+    but the schedule ignores ring locality.
+``ring``
+    The paper-faithful unidirectional PUT rings: n−1 neighbor hops, every
+    hop an ``fshmem_put``-sized message (DESIGN §4).  Bandwidth-optimal
+    per link direction.
+``bidir``
+    Two counter-rotating half-sized rings.  Links are full-duplex (QSFP+,
+    ICI), so splitting the payload across both directions halves the bytes
+    each direction carries — the generalization of the bidirectional
+    matmul schedules in ``core/overlap.py`` to the bare collectives.
+    (For ``all_to_all`` the permutes are direction-symmetric —
+    ``(i+s) % n == (i-(n-s)) % n`` — so ``bidir`` differs only in hop
+    *distance*, which the cost model prices; the wire schedule enumerates
+    shifts as ±s.)
+
+Every ring transport accepts an ART chunk size (``chunk_bytes``): the
+per-hop message is split into ⌈hop_bytes / chunk_bytes⌉ independent pieces
+so XLA's latency-hiding scheduler can pipeline them — the paper's packet
+size knob (Fig. 5) surfaced as a software parameter.  Chunking never
+changes numerics: pieces partition the payload elementwise and each piece
+runs the identical ring order.
+
+``auto`` is not a transport but a *policy*: :func:`auto_select` queries the
+analytic netmodel (``core/netmodel.py``) per (op, bytes, axis size) and
+returns the (transport, chunk) pair with the lowest modeled time — the
+paper's Fig. 5 message-size × packet-size tradeoff turned into a runtime
+decision.  Small messages resolve to ``xla`` (fewest per-message
+latencies); large messages resolve to ``bidir`` (full-duplex bandwidth).
+
+All collective entry points run *inside* ``shard_map`` over the conduit's
+axis, like everything else in ``repro.core``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import netmodel as nm
+from repro.core.art import _ring_perm
+
+OPS = (
+    "all_gather",
+    "reduce_scatter",
+    "all_reduce",
+    "all_to_all",
+    "broadcast",
+    "barrier",
+)
+
+LINKS: Dict[str, nm.LinkParams] = {
+    "qsfp": nm.FSHMEM_QSFP,
+    "ici": nm.TPU_ICI,
+}
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[Tuple[str, str], Callable] = {}
+
+
+def register(op: str, name: str):
+    """Decorator: register ``fn`` as transport ``name`` for collective ``op``."""
+    if op not in OPS:
+        raise ValueError(f"unknown collective op {op!r} (one of {OPS})")
+
+    def deco(fn):
+        _REGISTRY[(op, name)] = fn
+        return fn
+
+    return deco
+
+
+def transports(op: str) -> Tuple[str, ...]:
+    """Names of every transport registered for ``op`` (sorted, stable)."""
+    return tuple(sorted(name for (o, name) in _REGISTRY if o == op))
+
+
+def resolve(op: str, name: str) -> Callable:
+    try:
+        return _REGISTRY[(op, name)]
+    except KeyError:
+        raise KeyError(
+            f"no transport {name!r} for {op!r}; registered: {transports(op)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Shared ring engine
+# ---------------------------------------------------------------------------
+
+
+def _ring_engine(wire, perms, axis: str, hops: int, body):
+    """The one ring loop every ring/bidir collective below is an instance of.
+
+    ``wire``: tuple of pytrees riding the ring (one entry per direction);
+    ``perms``: matching tuple of static permutations;
+    ``body(hop, arrived) -> (wire', state)`` consumes what the hop delivered.
+    Returns the last ``state``.  The permute of hop *k* never depends on
+    ``body``'s work for hop *k* — the ART overlap window (DESIGN §3).
+    """
+    state = None
+    for hop in range(1, hops + 1):
+        arrived = tuple(
+            jax.tree.map(lambda t, p=p: lax.ppermute(t, axis, p), w)
+            for w, p in zip(wire, perms)
+        )
+        wire, state = body(hop, arrived)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# ART chunking helpers
+# ---------------------------------------------------------------------------
+
+
+def _n_chunks(hop_bytes: int, chunk_bytes: Optional[int], limit: int) -> int:
+    """⌈hop_bytes / chunk_bytes⌉ clamped to the splittable extent."""
+    if not chunk_bytes or hop_bytes <= chunk_bytes:
+        return 1
+    return max(1, min(limit, -(-hop_bytes // chunk_bytes)))
+
+
+def _split_cols(x2d: jnp.ndarray, c: int):
+    """Static split of axis −1 into ``c`` nearly equal pieces."""
+    f = x2d.shape[-1]
+    cuts = [round(i * f / c) for i in range(c + 1)]
+    return [x2d[..., lo:hi] for lo, hi in zip(cuts, cuts[1:]) if hi > lo]
+
+
+# ---------------------------------------------------------------------------
+# xla transports — the lax built-ins
+# ---------------------------------------------------------------------------
+
+
+@register("barrier", "xla")
+def _barrier_xla(*, axis: str, chunk_bytes=None) -> jnp.ndarray:
+    return lax.psum(jnp.ones((), jnp.int32), axis)
+
+
+@register("broadcast", "xla")
+def _broadcast_xla(x, *, root: int, axis: str, chunk_bytes=None):
+    my = lax.axis_index(axis)
+    return lax.psum(jnp.where(my == root, x, jnp.zeros_like(x)), axis)
+
+
+@register("all_gather", "xla")
+def _all_gather_xla(x, *, axis: str, chunk_bytes=None):
+    return lax.all_gather(x, axis, axis=0, tiled=True)
+
+
+@register("reduce_scatter", "xla")
+def _reduce_scatter_xla(x, *, axis: str, chunk_bytes=None):
+    return lax.psum_scatter(x, axis, scatter_dimension=0, tiled=True)
+
+
+@register("all_reduce", "xla")
+def _all_reduce_xla(x, *, axis: str, chunk_bytes=None):
+    return lax.psum(x, axis)
+
+
+@register("all_to_all", "xla")
+def _all_to_all_xla(x, *, axis: str, chunk_bytes=None):
+    return lax.all_to_all(x, axis, split_axis=0, concat_axis=0, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# ring transports — unidirectional PUT rings (DESIGN §4)
+# ---------------------------------------------------------------------------
+
+
+@register("barrier", "ring")
+def _barrier_ring(*, axis: str, chunk_bytes=None) -> jnp.ndarray:
+    n = lax.axis_size(axis)
+    one = jnp.ones((), jnp.int32)
+    if n == 1:
+        return one
+    # a ones-token relayed n−1 hops: each arrival is one more participant
+    acc = one
+
+    def body(hop, arrived):
+        nonlocal acc
+        ((token,),) = (arrived,)
+        acc = acc + token
+        return (token,), acc
+
+    return _ring_engine((one,), (_ring_perm(n, 1),), axis, n - 1, body)
+
+
+@register("broadcast", "ring")
+def _broadcast_ring(x, *, root: int, axis: str, chunk_bytes=None):
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+
+    def piece(flat):
+        my = lax.axis_index(axis)
+        cur = jnp.where(my == root, flat, jnp.zeros_like(flat))
+        have = my == root
+
+        def body(hop, arrived):
+            nonlocal cur, have
+            ((cur_prev, have_prev),) = arrived
+            cur = jnp.where(~have & have_prev, cur_prev, cur)
+            have = have | have_prev
+            return ((cur, have),), cur
+
+        return _ring_engine(((cur, have),), (_ring_perm(n, 1),), axis,
+                            n - 1, body)
+
+    shape = x.shape
+    flat = x.reshape(1, -1)
+    c = _n_chunks(x.size * x.dtype.itemsize, chunk_bytes, max(1, flat.shape[-1]))
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape(shape)
+
+
+@register("all_gather", "ring")
+def _all_gather_ring(x, *, axis: str, chunk_bytes=None):
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    my = lax.axis_index(axis)
+    b = x.shape[0]
+    shape_rest = x.shape[1:]
+
+    def piece(x2d):  # (b, Fi) -> (n*b, Fi)
+        out = jnp.zeros((n * b, x2d.shape[-1]), x2d.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, x2d, my * b, 0)
+
+        def body(hop, arrived):
+            nonlocal out
+            ((cur,),) = (arrived,)
+            src = (my - hop) % n
+            out = lax.dynamic_update_slice_in_dim(out, cur, src * b, 0)
+            return (cur,), out
+
+        return _ring_engine((x2d,), (_ring_perm(n, 1),), axis, n - 1, body)
+
+    hop_bytes = x.size * x.dtype.itemsize
+    flat = x.reshape(b, -1)
+    c = _n_chunks(hop_bytes, chunk_bytes, flat.shape[-1])
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape((n * b,) + shape_rest)
+
+
+@register("reduce_scatter", "ring")
+def _reduce_scatter_ring(x, *, axis: str, chunk_bytes=None):
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    assert x.shape[0] % n == 0, (x.shape, n)
+    b = x.shape[0] // n
+    my = lax.axis_index(axis)
+
+    def piece(x2d):  # (n*b, Fi) -> (b, Fi)
+        def block(owner_offset: int):
+            start = ((my + owner_offset) % n) * b
+            return lax.dynamic_slice_in_dim(x2d, start, b, 0)
+
+        def body(hop, arrived):
+            ((cur,),) = (arrived,)
+            cur = cur + block(-(hop + 1))
+            return (cur,), cur
+
+        return _ring_engine((block(-1),), (_ring_perm(n, 1),), axis, n - 1,
+                            body)
+
+    hop_bytes = (x.size // n) * x.dtype.itemsize
+    flat = x.reshape(x.shape[0], -1)
+    c = _n_chunks(hop_bytes, chunk_bytes, flat.shape[-1])
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape((b,) + x.shape[1:])
+
+
+def _flat_all_reduce(x, *, axis: str, rs, ag, chunk_bytes):
+    """all-reduce = reduce-scatter + all-gather over the flattened payload
+    (the bandwidth-optimal composition; 2·(n−1)/n·|x| wire bytes/rank)."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    shape = x.shape
+    n_elems = x.size
+    flat = x.reshape(-1)
+    pad = (-n_elems) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    reduced = rs(flat, axis=axis, chunk_bytes=chunk_bytes)
+    gathered = ag(reduced, axis=axis, chunk_bytes=chunk_bytes)
+    return gathered[:n_elems].reshape(shape)
+
+
+@register("all_reduce", "ring")
+def _all_reduce_ring(x, *, axis: str, chunk_bytes=None):
+    return _flat_all_reduce(x, axis=axis, rs=_reduce_scatter_ring,
+                            ag=_all_gather_ring, chunk_bytes=chunk_bytes)
+
+
+@register("all_to_all", "ring")
+def _all_to_all_ring(x, *, axis: str, chunk_bytes=None, _shifts=None):
+    """All-to-all as n−1 single-block permutes (MoE dispatch transport).
+
+    ``x``: (n, B, ...) — slot q is destined for rank q; returns (n, B, ...)
+    where slot q holds the block rank q sent here.  Per-permute message
+    size is |x|/n — ART-chunked by construction, further split by
+    ``chunk_bytes``.
+    """
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    assert x.shape[0] == n, (x.shape, n)
+    my = lax.axis_index(axis)
+    shifts = _shifts if _shifts is not None else list(range(1, n))
+
+    def piece(x2d):  # (n, Fi) -> (n, Fi)
+        out = jnp.zeros_like(x2d)
+        out = lax.dynamic_update_index_in_dim(
+            out, lax.dynamic_index_in_dim(x2d, my, 0, keepdims=False), my, 0
+        )
+        for shift in shifts:
+            perm = _ring_perm(n, shift)
+            dst = (my + shift) % n
+            block = jnp.take(x2d, dst, axis=0)
+            arrived = lax.ppermute(block, axis, perm)
+            src = (my - shift) % n
+            out = lax.dynamic_update_index_in_dim(out, arrived, src, 0)
+        return out
+
+    hop_bytes = (x.size // n) * x.dtype.itemsize
+    flat = x.reshape(n, -1)
+    c = _n_chunks(hop_bytes, chunk_bytes, flat.shape[-1])
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# bidir transports — two counter-rotating half-sized rings
+# ---------------------------------------------------------------------------
+
+
+@register("barrier", "bidir")
+def _barrier_bidir(*, axis: str, chunk_bytes=None) -> jnp.ndarray:
+    """Tokens walk both directions; rank my hears my−h (fwd) and my+h (bwd).
+    n//2 forward + (n−1)//2 backward hops count every rank exactly once."""
+    n = lax.axis_size(axis)
+    one = jnp.ones((), jnp.int32)
+    if n == 1:
+        return one
+    fwd, bwd = _ring_perm(n, 1), _ring_perm(n, -1)
+    acc = one
+    tf = tb = one
+    for h in range(1, n // 2 + 1):
+        tf = lax.ppermute(tf, axis, fwd)
+        acc = acc + tf
+        if h <= (n - 1) // 2:
+            tb = lax.ppermute(tb, axis, bwd)
+            acc = acc + tb
+    return acc
+
+
+@register("broadcast", "bidir")
+def _broadcast_bidir(x, *, root: int, axis: str, chunk_bytes=None):
+    """The value floods outward from root in both directions: n//2 hops
+    reach the antipode instead of the unidirectional ring's n−1."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    fwd, bwd = _ring_perm(n, 1), _ring_perm(n, -1)
+
+    def piece(flat):
+        my = lax.axis_index(axis)
+        cur = jnp.where(my == root, flat, jnp.zeros_like(flat))
+        have = my == root
+        for _ in range(n // 2):
+            cur_f = lax.ppermute(cur, axis, fwd)
+            have_f = lax.ppermute(have, axis, fwd)
+            cur_b = lax.ppermute(cur, axis, bwd)
+            have_b = lax.ppermute(have, axis, bwd)
+            cur = jnp.where(~have & have_f, cur_f,
+                            jnp.where(~have & have_b, cur_b, cur))
+            have = have | have_f | have_b
+        return cur
+
+    shape = x.shape
+    flat = x.reshape(1, -1)
+    c = _n_chunks(x.size * x.dtype.itemsize, chunk_bytes, flat.shape[-1])
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape(shape)
+
+
+@register("all_gather", "bidir")
+def _all_gather_bidir(x, *, axis: str, chunk_bytes=None):
+    """Split the local block in half; the low half rides the forward ring,
+    the high half the backward ring — each link direction carries half the
+    bytes of the unidirectional schedule (links are full-duplex)."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    b = x.shape[0]
+    if n == 2 or b < 2:
+        return _all_gather_ring(x, axis=axis, chunk_bytes=chunk_bytes)
+    my = lax.axis_index(axis)
+    h = b // 2
+    fwd, bwd = _ring_perm(n, 1), _ring_perm(n, -1)
+
+    def piece(x2d):  # (b, Fi) -> (n*b, Fi)
+        out = jnp.zeros((n * b, x2d.shape[-1]), x2d.dtype)
+        out = lax.dynamic_update_slice_in_dim(out, x2d, my * b, 0)
+        lo, hi = x2d[:h], x2d[h:]
+
+        def body(hop, arrived):
+            nonlocal out
+            (cur_f,), (cur_b,) = arrived
+            src_f = (my - hop) % n
+            src_b = (my + hop) % n
+            out = lax.dynamic_update_slice_in_dim(out, cur_f, src_f * b, 0)
+            out = lax.dynamic_update_slice_in_dim(out, cur_b,
+                                                  src_b * b + h, 0)
+            return ((cur_f,), (cur_b,)), out
+
+        return _ring_engine(((lo,), (hi,)), (fwd, bwd), axis, n - 1, body)
+
+    hop_bytes = (x.size // 2) * x.dtype.itemsize
+    flat = x.reshape(b, -1)
+    c = _n_chunks(hop_bytes, chunk_bytes, flat.shape[-1])
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape((n * b,) + x.shape[1:])
+
+
+@register("reduce_scatter", "bidir")
+def _reduce_scatter_bidir(x, *, axis: str, chunk_bytes=None):
+    """Low halves of every block reduce around the forward ring, high halves
+    around the backward ring (the RS invariant mirrored: fwd block b_q
+    starts at q+1 moving +1; bwd block b_q starts at q−1 moving −1)."""
+    n = lax.axis_size(axis)
+    if n == 1:
+        return x
+    assert x.shape[0] % n == 0, (x.shape, n)
+    b = x.shape[0] // n
+    if n == 2 or b < 2:
+        return _reduce_scatter_ring(x, axis=axis, chunk_bytes=chunk_bytes)
+    my = lax.axis_index(axis)
+    h = b // 2
+    fwd, bwd = _ring_perm(n, 1), _ring_perm(n, -1)
+
+    def piece(x2d):  # (n*b, Fi) -> (b, Fi)
+        def block(owner_offset: int, lo: bool):
+            start = ((my + owner_offset) % n) * b + (0 if lo else h)
+            return lax.dynamic_slice_in_dim(x2d, start, h if lo else b - h, 0)
+
+        def body(hop, arrived):
+            (cur_f,), (cur_b,) = arrived
+            cur_f = cur_f + block(-(hop + 1), True)
+            cur_b = cur_b + block(+(hop + 1), False)
+            return ((cur_f,), (cur_b,)), (cur_f, cur_b)
+
+        lo_r, hi_r = _ring_engine(((block(-1, True),), (block(+1, False),)),
+                                  (fwd, bwd), axis, n - 1, body)
+        return jnp.concatenate([lo_r, hi_r], axis=0)
+
+    hop_bytes = (x.size // n // 2) * x.dtype.itemsize
+    flat = x.reshape(x.shape[0], -1)
+    c = _n_chunks(hop_bytes, chunk_bytes, flat.shape[-1])
+    if c == 1:
+        out = piece(flat)
+    else:
+        out = jnp.concatenate([piece(p) for p in _split_cols(flat, c)], -1)
+    return out.reshape((b,) + x.shape[1:])
+
+
+@register("all_reduce", "bidir")
+def _all_reduce_bidir(x, *, axis: str, chunk_bytes=None):
+    return _flat_all_reduce(x, axis=axis, rs=_reduce_scatter_bidir,
+                            ag=_all_gather_bidir, chunk_bytes=chunk_bytes)
+
+
+@register("all_to_all", "bidir")
+def _all_to_all_bidir(x, *, axis: str, chunk_bytes=None):
+    """Shift enumeration ±s (s ≤ ⌈n/2⌉): the permutation sets are identical
+    to the unidirectional ring's — ``(i+s) % n == (i-(n-s)) % n`` — so this
+    is wire-identical; the payoff is modeled hop distance (see
+    :func:`estimate_time`), which auto-selection prices."""
+    n = lax.axis_size(axis)
+    shifts = []
+    for s in range(1, n // 2 + 1):
+        shifts.append(s)
+        if s <= (n - 1) // 2:
+            shifts.append(n - s)          # == shift −s
+    return _all_to_all_ring(x, axis=axis, chunk_bytes=chunk_bytes,
+                            _shifts=shifts)
+
+
+# ---------------------------------------------------------------------------
+# Cost model + auto policy (Fig. 5 as a runtime decision)
+# ---------------------------------------------------------------------------
+
+#: candidate ART chunk sizes the auto policy sweeps (bytes)
+CHUNK_CANDIDATES = (256, 1024, 4096, 16384, 65536, 262144)
+
+
+def _default_packet(link: nm.LinkParams) -> int:
+    return max(link.packet_overhead_bytes)
+
+
+def estimate_time(
+    op: str,
+    transport: str,
+    *,
+    size_bytes: int,
+    axis_size: int,
+    link: nm.LinkParams = nm.FSHMEM_QSFP,
+    chunk_bytes: Optional[int] = None,
+) -> float:
+    """Modeled wall-clock of one collective, per the netmodel.
+
+    ``size_bytes`` is the op's **global payload**: for ``all_gather`` the
+    gathered size (local shard × n), for ``reduce_scatter``/``all_to_all``
+    the full per-rank input, for ``all_reduce``/``broadcast`` the tensor
+    itself.  Under this convention every ring hop moves ``S/n`` bytes for
+    the bandwidth-optimal ops.
+
+    Assumptions (documented, deliberately simple):
+
+    * the mesh axis is a 1-D ring of full-duplex links;
+    * ``ring``/``bidir`` messages travel one hop; ``bidir`` halves the
+      bytes per link direction (both directions run concurrently);
+    * ``xla`` uses a distance-oblivious doubling schedule: ⌈log2 n⌉ rounds
+      whose round-k messages travel 2^k hops — distance multiplies the
+      link-bytes (a message crossing d links occupies d of them), which is
+      why doubling loses to rings at large sizes *on a ring topology*;
+    * ``chunk_bytes`` plays the packet-size role of Fig. 5: each message
+      is priced by :func:`repro.core.netmodel.put_time` at that packet
+      size, so small chunks pay per-packet overhead and large chunks
+      amortize it.
+    """
+    n, S = int(axis_size), int(size_bytes)
+    if n <= 1:
+        return 0.0
+    p = int(chunk_bytes or _default_packet(link))
+    rounds = max(1, math.ceil(math.log2(n)))
+
+    def t_put(b: float) -> float:
+        return nm.put_time(link, max(1, int(b)), p)
+
+    if op == "barrier":
+        S = 4
+    if op in ("all_gather", "reduce_scatter", "all_reduce", "barrier"):
+        phases = 2 if op == "all_reduce" else 1
+        if op == "barrier":
+            if transport == "xla":
+                return rounds * t_put(S)
+            if transport == "ring":
+                return (n - 1) * t_put(S)
+            if transport == "bidir":
+                return -(-n // 2) * t_put(S)
+            raise ValueError(
+                f"unknown (op, transport) = ({op!r}, {transport!r})")
+        if transport == "xla":
+            # doubling: round k sends 2^k·S/n bytes across 2^k hops
+            one = sum(t_put((S / n) * (4 ** k)) for k in range(rounds))
+            return phases * one
+        if transport == "ring":
+            return phases * (n - 1) * t_put(S / n)
+        if transport == "bidir":
+            return phases * (n - 1) * t_put(S / (2 * n))
+    if op == "broadcast":
+        if transport == "xla":
+            return sum(t_put(S * (2 ** k)) for k in range(rounds))
+        c = max(1, -(-S // p))
+        if transport == "ring":
+            return (n - 2 + c) * t_put(S / c)   # pipelined store-and-forward
+        if transport == "bidir":
+            return (n // 2 - 1 + c) * t_put(S / c)
+    if op == "all_to_all":
+        if transport == "xla":
+            return sum(t_put((S / 2) * (2 ** k)) for k in range(rounds))
+        if transport == "ring":
+            # n−1 direct messages; a shift-s message crosses s links
+            return sum(t_put((S / n) * s) for s in range(1, n))
+        if transport == "bidir":
+            # shifts ±s, distance ≤ ⌈n/2⌉; the two directions run
+            # concurrently, so wall-clock is the slower direction's sum
+            fwd = sum(t_put((S / n) * s) for s in range(1, n // 2 + 1))
+            bwd = sum(t_put((S / n) * s) for s in range(1, (n - 1) // 2 + 1))
+            return max(fwd, bwd)
+    raise ValueError(f"unknown (op, transport) = ({op!r}, {transport!r})")
+
+
+def auto_select(
+    op: str,
+    *,
+    size_bytes: int,
+    axis_size: int,
+    link: nm.LinkParams = nm.FSHMEM_QSFP,
+    chunk_bytes: Optional[int] = None,
+) -> Tuple[str, Optional[int]]:
+    """Pick (transport, chunk_bytes) minimizing :func:`estimate_time`.
+
+    This is the conduit's answer to the paper's Fig. 5: per (message size,
+    axis size) the best transport differs — small payloads go to ``xla``
+    (latency), large ones to the full-duplex ``bidir`` rings (bandwidth).
+
+    ``chunk_bytes``: pin the ART chunk instead of sweeping
+    :data:`CHUNK_CANDIDATES` — the transport choice is then conditioned on
+    the chunk that will actually run.  Transports the cost model cannot
+    price (custom registrations) are skipped, never an error.
+    """
+    if axis_size <= 1:
+        return "xla", None
+    candidates = (chunk_bytes,) if chunk_bytes else CHUNK_CANDIDATES
+    best: Tuple[float, str, Optional[int]] = (float("inf"), "xla", None)
+    for name in transports(op):
+        for chunk in candidates:
+            try:
+                t = estimate_time(op, name, size_bytes=size_bytes,
+                                  axis_size=axis_size, link=link,
+                                  chunk_bytes=chunk)
+            except ValueError:
+                break                      # unmodeled transport: skip it
+            if t < best[0]:
+                best = (t, name, chunk)
+    return best[1], best[2]
+
+
+# ---------------------------------------------------------------------------
+# The user-facing handle
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Conduit:
+    """A bound (mesh axis, transport policy, chunk size, link model).
+
+    Hashable and immutable, so it can be closed over by jitted/shard_mapped
+    code.  ``transport='auto'`` resolves per call from the payload's static
+    byte size via :func:`auto_select`.
+    """
+
+    axis: str
+    transport: str = "auto"          # "xla" | "ring" | "bidir" | "auto"
+    chunk_bytes: Optional[int] = None
+    link: str = "qsfp"               # key into LINKS (netmodel params)
+
+    # -- resolution ---------------------------------------------------------
+
+    def _resolve(self, op: str, size_bytes: int) -> Tuple[str, Optional[int]]:
+        if self.transport != "auto":
+            return self.transport, self.chunk_bytes
+        name, chunk = auto_select(
+            op, size_bytes=size_bytes,
+            axis_size=lax.axis_size(self.axis), link=LINKS[self.link],
+            chunk_bytes=self.chunk_bytes)
+        return name, chunk
+
+    def _call(self, op: str, x, **kw):
+        size = int(x.size) * jnp.dtype(x.dtype).itemsize
+        if op == "all_gather":
+            # estimate_time's convention is the *global* payload; the
+            # all_gather input is only this rank's shard
+            size *= lax.axis_size(self.axis)
+        name, chunk = self._resolve(op, size)
+        return resolve(op, name)(x, axis=self.axis, chunk_bytes=chunk, **kw)
+
+    # -- collectives (call inside shard_map over ``self.axis``) -------------
+
+    def barrier(self) -> jnp.ndarray:
+        name, chunk = self._resolve("barrier", 4)
+        return resolve("barrier", name)(axis=self.axis, chunk_bytes=chunk)
+
+    def broadcast(self, x, root: int):
+        return self._call("broadcast", x, root=root)
+
+    def all_gather(self, x):
+        return self._call("all_gather", x)
+
+    def reduce_scatter(self, x):
+        return self._call("reduce_scatter", x)
+
+    def all_reduce(self, x):
+        return self._call("all_reduce", x)
+
+    def all_to_all(self, x):
+        return self._call("all_to_all", x)
+
+    # -- fused-matmul flavor (core/overlap.py schedules) --------------------
+
+    def matmul_bidirectional(self, size_bytes: int) -> bool:
+        """Whether the fused ring-matmul schedules should counter-rotate.
+
+        The overlap schedules only come in ring flavors (xla has no fused
+        equivalent), so ``xla``/``auto`` resolve via the cost model
+        restricted to {ring, bidir}."""
+        if self.transport == "bidir":
+            return True
+        if self.transport == "ring":
+            return False
+        n = lax.axis_size(self.axis)
+        link = LINKS[self.link]
+        t_ring = estimate_time("all_gather", "ring", size_bytes=size_bytes,
+                               axis_size=n, link=link,
+                               chunk_bytes=self.chunk_bytes)
+        t_bidir = estimate_time("all_gather", "bidir", size_bytes=size_bytes,
+                                axis_size=n, link=link,
+                                chunk_bytes=self.chunk_bytes)
+        return t_bidir <= t_ring
+
+
+__all__ = [
+    "OPS", "LINKS", "CHUNK_CANDIDATES", "Conduit",
+    "register", "transports", "resolve",
+    "estimate_time", "auto_select",
+]

@@ -21,6 +21,12 @@ Two schedule families:
   per-hop bytes on each link direction (ICI links are full-duplex), i.e.
   ~2× faster collective term on the same hardware.
 
+Both functions accept either a bare ``axis`` (+ ``bidirectional`` flag) or
+a :class:`repro.core.conduit.Conduit` handle, whose transport selects the
+schedule family (``ring`` → unidirectional, ``bidir`` → counter-rotating,
+``auto`` → cost-model choice per payload size; ``xla`` has no fused
+equivalent and resolves like ``auto``).
+
 All functions run inside ``shard_map``; the weight stays resident
 (sharded), only activations move — the same locality argument the paper
 makes for keeping data in each FPGA's partition.
@@ -28,36 +34,57 @@ makes for keeping data in each FPGA's partition.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core.art import _ring_perm
+from repro.core.conduit import Conduit
+
+
+def _schedule(conduit: Optional[Conduit], axis: Optional[str],
+              bidirectional: bool, size_bytes: int) -> tuple[str, bool]:
+    """Resolve (axis, bidirectional) from either calling convention.
+
+    ``size_bytes`` is the *global* payload the fused collective edge moves
+    (the convention of ``conduit.estimate_time``) — what the conduit's
+    cost model prices when its transport is ``auto``/``xla``."""
+    if conduit is None:
+        assert axis is not None, "pass either conduit= or axis="
+        return axis, bidirectional
+    return conduit.axis, conduit.matmul_bidirectional(size_bytes)
 
 
 def allgather_matmul(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
-    axis: str,
+    axis: Optional[str] = None,
     bidirectional: bool = True,
+    conduit: Optional[Conduit] = None,
 ) -> jnp.ndarray:
-    """Compute ``all_gather(x, axis) @ w`` without materializing the gather.
+    """Compute ``all_gather(x, axis) @ w`` without materializing the gather
+    (Megatron column-parallel layer with the AG fused into the ring).
 
-    x: (B, K/n) — this rank's activation shard (sharded on the contraction
-       dim); w: (K/n·? ...) — NO: here w is the *full-K* local weight
-       (K, N_local) is not resident under TP.  Layout used by dist/steps:
+    Global computation: ``Y[B, N] = X[B, K] @ W[K, N]`` with ``W``
+    column-sharded over the axis (``w = W[:, cols_local]``, shape
+    (K, N/n)) and ``X`` row-sharded (``x = X[rows_local, :]``, shape
+    (B/n, K)) — under tensor parallelism the rows are the
+    sequence/batch dim, so the all-gather runs over that dim.
 
-       x: (B, K)  sharded rows of the *sequence/batch*?  — No.
-
-    Concretely (Megatron column-parallel layer):
-       global:  Y[B, N] = X[B, K] @ W[K, N],  W column-sharded: w = W[:, n_loc]
-       X arrives sequence-sharded: x = X[b_loc, K] ... the AG is over the
-       batch/sequence dim.  Ring step s multiplies the block that just
-       arrived while the next block is in flight:
-
-       x: (B/n, K) local block; returns (B, N/n): Y for *all* rows, this
-       rank's output columns — i.e. AG(x) @ w with the AG hidden.
+    Ring step *s* multiplies the row block that just arrived against the
+    resident weight while the next block's ``ppermute`` is in flight, so
+    the gather is hidden under the sub-matmuls (ART).  Returns
+    ``(B, N/n)``: every global row, this rank's output columns — i.e.
+    ``all_gather(x) @ w`` with the AG never materialized.
     """
+    if conduit is not None:
+        axis = conduit.axis
+    # global AG payload: every rank's (B/n, K) block, i.e. local × n
+    axis, bidirectional = _schedule(
+        conduit, axis, bidirectional,
+        x.size * x.dtype.itemsize * lax.axis_size(axis))
     n = lax.axis_size(axis)
     my = lax.axis_index(axis)
     b_loc = x.shape[0]
@@ -107,8 +134,9 @@ def matmul_reducescatter(
     x: jnp.ndarray,
     w: jnp.ndarray,
     *,
-    axis: str,
+    axis: Optional[str] = None,
     bidirectional: bool = True,
+    conduit: Optional[Conduit] = None,
 ) -> jnp.ndarray:
     """Compute ``reduce_scatter(x @ w, axis)`` with the RS fused into the
     matmul ring (Megatron row-parallel layer; the paper's Fig. 6(a) pattern).
@@ -121,6 +149,11 @@ def matmul_reducescatter(
     farthest next, adds the in-flight accumulator, and forwards it; the
     permute of the accumulator overlaps the next sub-matmul.
     """
+    if conduit is not None:
+        axis = conduit.axis
+    # global RS payload: the full (B, N) fp32 partial product
+    axis, bidirectional = _schedule(
+        conduit, axis, bidirectional, x.shape[0] * w.shape[1] * 4)
     n = lax.axis_size(axis)
     my = lax.axis_index(axis)
     b = x.shape[0]

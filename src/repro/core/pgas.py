@@ -101,9 +101,17 @@ class SymmetricHeap:
 
 
 def _recv_mask(axis: str, perm: Perm) -> jnp.ndarray:
-    """True on ranks that are a destination in ``perm``."""
-    ones = jnp.ones((), jnp.bool_)
-    return lax.ppermute(ones, axis, list(perm))
+    """True on ranks that are a destination in ``perm``.
+
+    ``perm`` is a static Python list, so the mask is a compile-time table
+    indexed by ``lax.axis_index`` — no wire traffic.  (It used to ppermute
+    a ones-array, costing every ``put``/``get`` an extra message.)
+    """
+    n = lax.axis_size(axis)
+    is_dst = [False] * n
+    for _, d in perm:
+        is_dst[d] = True
+    return jnp.asarray(is_dst)[lax.axis_index(axis)]
 
 
 def put(

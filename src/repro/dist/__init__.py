@@ -10,7 +10,7 @@ transport the once-per-step cross-pod gradient all-reduce takes
 """
 
 from repro.dist import grad_sync, loss, sharding, steps
-from repro.dist.grad_sync import cross_pod_all_reduce, wire_bytes
+from repro.dist.grad_sync import Int8Conduit, cross_pod_all_reduce, wire_bytes
 from repro.dist.loss import chunked_ce_loss
 from repro.dist.sharding import (
     MeshAxes,
@@ -23,6 +23,7 @@ from repro.dist.sharding import (
 from repro.dist.steps import (
     StepBundle,
     StepConfig,
+    TransportPolicy,
     build_init,
     build_prefill_step,
     build_serve_step,
@@ -31,9 +32,9 @@ from repro.dist.steps import (
 
 __all__ = [
     "grad_sync", "loss", "sharding", "steps",
-    "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
+    "Int8Conduit", "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
     "MeshAxes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
     "param_pspecs", "to_shardings",
-    "StepBundle", "StepConfig", "build_init", "build_prefill_step",
-    "build_serve_step", "build_train_step",
+    "StepBundle", "StepConfig", "TransportPolicy", "build_init",
+    "build_prefill_step", "build_serve_step", "build_train_step",
 ]

@@ -1,20 +1,24 @@
-"""Cross-pod gradient synchronization over the PGAS transport.
+"""Cross-pod gradient synchronization over the PGAS conduit layer.
 
 The ``pod`` mesh axis crosses data-center network (~25× slower than ICI);
 the only traffic on it is the data-parallel gradient all-reduce, once per
-step.  This module makes that hop an explicit, *selectable* transport
-instead of an XLA implementation detail:
+step.  This module makes that hop an explicit, *selectable* transport: the
+reduction goes through a :class:`repro.core.conduit.Conduit` (``ring`` by
+default — the paper's GASNet extended-API collective carrying real
+training traffic — but any registered transport, or ``auto`` for
+cost-model selection, works), and int8 compression is a *conduit wrapper*
+(:class:`Int8Conduit`), not a transport property:
 
-  * uncompressed — the bandwidth-optimal ring all-reduce from
-    ``core/collectives.py`` (reduce-scatter + all-gather built from the
-    one-sided ``fshmem_put`` ``ppermute`` rings), i.e. the paper's GASNet
-    extended-API collective carrying real training traffic;
-  * compressed — each pod quantizes its (error-feedback-corrected) gradient
-    to int8 with per-block scales (``optim/compress.py``), the *int8*
-    payloads and fp32 scales ride the PUT ring, and each pod dequantizes and
-    averages what arrived.  Only ~1/4 of the bytes cross the DCN
-    (:func:`wire_bytes`), and the int8 payload is visible as ``s8[`` operands
-    of the lowered collective-permutes — asserted by
+  * uncompressed — ``conduit.all_reduce``: the bandwidth-optimal ring
+    all-reduce built from one-sided ``fshmem_put`` ``ppermute`` hops
+    (or whichever transport the conduit names);
+  * compressed — :class:`Int8Conduit` quantizes each pod's
+    (error-feedback-corrected) gradient to int8 with per-block scales
+    (``optim/compress.py``), ships the *int8* payloads and fp32 scales over
+    the base conduit's all-gather, and dequantizes-and-averages what
+    arrived.  Only ~1/4 of the bytes cross the DCN (:func:`wire_bytes`),
+    and the int8 payload is visible as ``s8[`` operands of the lowered
+    collective-permutes — asserted by
     ``tests/test_dist.py::TestCrossPodGradSync``.
 
 Error feedback: the quantization residual ``e' = (g + e) − Q(g + e)`` is
@@ -37,13 +41,14 @@ see DESIGN §6 and the ROADMAP open item.
 
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.collectives import ring_all_gather, ring_all_reduce
+from repro.core.conduit import Conduit
 from repro.optim.compress import (
     compress_8bit,
     compressed_bytes,
@@ -61,28 +66,44 @@ def wire_bytes(n_elements: int, *, compressed: bool = False,
     return compressed_bytes(n_elements, block)
 
 
-def _leaf_uncompressed(g, e, *, axis: str, n: int):
-    """Exact mean over pods via the PGAS ring all-reduce.  Any outstanding
+@dataclasses.dataclass(frozen=True)
+class Int8Conduit:
+    """Conduit wrapper: error-feedback int8 on the wire.
+
+    Wraps any base conduit; ``all_reduce_mean_ef`` quantizes locally,
+    rides the base conduit's all-gather with int8 payloads + fp32 scales,
+    and dequantizes/averages at the receiver.  Composes with every
+    registered transport — compression is orthogonal to the schedule.
+    """
+
+    base: Conduit
+    block: int = 256
+
+    def all_reduce_mean_ef(self, g, e) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(mean over axis of Q(g+e), new EF residual)."""
+        from jax import lax
+
+        n = lax.axis_size(self.base.axis)
+        corrected = g.astype(jnp.float32) + e
+        q, scale = compress_8bit(corrected, self.block)
+        # one gather moves every pod's int8 payload + scales to every pod
+        q_all = self.base.all_gather(q[None])          # (n, padded)
+        s_all = self.base.all_gather(scale[None])      # (n, n_blocks)
+        acc = jnp.zeros(g.shape, jnp.float32)
+        for i in range(n):
+            acc = acc + decompress_8bit(q_all[i], s_all[i], g.shape,
+                                        self.block)
+        synced = (acc / n).astype(g.dtype)
+        ef_new = corrected - decompress_8bit(q, scale, g.shape, self.block)
+        return synced, ef_new
+
+
+def _leaf_uncompressed(g, e, *, conduit: Conduit, n: int):
+    """Exact mean over pods via the conduit's all-reduce.  Any outstanding
     error-feedback residual is flushed into the (lossless) reduction so a
     compressed→uncompressed schedule switch never drops gradient mass."""
-    synced = ring_all_reduce(g.astype(jnp.float32) + e, axis=axis) / n
+    synced = conduit.all_reduce(g.astype(jnp.float32) + e) / n
     return synced.astype(g.dtype), jnp.zeros(g.shape, jnp.float32)
-
-
-def _leaf_compressed(g, e, *, axis: str, n: int, block: int):
-    """EF-corrected int8 ring exchange: quantize locally, ship q/scales
-    around the pod ring, dequantize-and-average what every pod sent."""
-    corrected = g.astype(jnp.float32) + e
-    q, scale = compress_8bit(corrected, block)
-    # one ring lap moves every pod's int8 payload + scales to every pod
-    q_all = ring_all_gather(q[None], axis=axis)          # (n, padded)
-    s_all = ring_all_gather(scale[None], axis=axis)      # (n, n_blocks)
-    acc = jnp.zeros(g.shape, jnp.float32)
-    for i in range(n):
-        acc = acc + decompress_8bit(q_all[i], s_all[i], g.shape, block)
-    synced = (acc / n).astype(g.dtype)
-    ef_new = corrected - decompress_8bit(q, scale, g.shape, block)
-    return synced, ef_new
 
 
 def cross_pod_all_reduce(
@@ -91,13 +112,18 @@ def cross_pod_all_reduce(
     *,
     axis: str = "pod",
     compressed: bool = False,
+    transport: str = "ring",
+    chunk_bytes: Optional[int] = None,
     ef=None,
     block: int = 256,
     specs=None,
 ) -> Tuple[object, object]:
     """All-reduce-mean ``grads`` across the ``axis`` mesh dimension through
-    the PGAS ring transport.  Returns ``(synced_grads, ef_residuals)``.
+    the selected PGAS conduit.  Returns ``(synced_grads, ef_residuals)``.
 
+    ``transport``: any transport registered for ``all_reduce``/``all_gather``
+    (``ring``/``bidir``/``xla``) or ``auto`` for netmodel selection;
+    ``compressed``: wrap the conduit in :class:`Int8Conduit` (EF-int8 wire);
     ``ef``: previous error-feedback residuals (zeros when None);
     ``specs``: per-leaf PartitionSpecs of the *input* layout — defaults to
     pod-sharded on each leaf's leading dim."""
@@ -107,6 +133,9 @@ def cross_pod_all_reduce(
     if n == 1:
         return grads, ef
 
+    conduit = Conduit(axis=axis, transport=transport, chunk_bytes=chunk_bytes)
+    int8 = Int8Conduit(conduit, block=block) if compressed else None
+
     if specs is None:
         specs = jax.tree.map(
             lambda g: P(axis, *([None] * (max(g.ndim, 1) - 1))), grads)
@@ -115,11 +144,11 @@ def cross_pod_all_reduce(
     def body(g_tree, e_tree):
         flat_g, treedef = jax.tree.flatten(g_tree)
         flat_e = treedef.flatten_up_to(e_tree)
-        if compressed:
-            outs = [_leaf_compressed(g, e, axis=axis, n=n, block=block)
+        if int8 is not None:
+            outs = [int8.all_reduce_mean_ef(g, e)
                     for g, e in zip(flat_g, flat_e)]
         else:
-            outs = [_leaf_uncompressed(g, e, axis=axis, n=n)
+            outs = [_leaf_uncompressed(g, e, conduit=conduit, n=n)
                     for g, e in zip(flat_g, flat_e)]
         return (treedef.unflatten([o[0] for o in outs]),
                 treedef.unflatten([o[1] for o in outs]))

@@ -17,12 +17,16 @@ Responsibilities:
   * microbatching — ``lax.scan`` gradient accumulation in fp32; with equal
     per-microbatch token counts the update is exactly the full-batch one
     (asserted by ``tests/test_dist.py::test_microbatch_equivalence``);
-  * transport selection — ``StepConfig.art_tp`` swaps every TP collective of
-    dense blocks for the hand-scheduled PGAS rings of ``models/artblock.py``
-    (the paper's ART as a training feature).  The cross-pod gradient hop has
-    its own PGAS transport in ``dist/grad_sync.py`` (operating on per-pod
-    gradients, pod-sharded layout); wiring it *inside* this GSPMD step would
-    require partial-manual shard_map over ``pod``, which the pinned jax's
+  * transport selection — :class:`TransportPolicy` names a conduit
+    transport per traffic class (TP collectives of dense blocks, MoE
+    dispatch, cross-pod gradients).  A non-``xla`` ``tp`` transport swaps
+    every TP collective of dense blocks for the conduit-scheduled PGAS
+    rings of ``models/artblock.py`` (the paper's ART as a training
+    feature); the legacy boolean ``StepConfig.art_tp`` still works through
+    a deprecation shim.  The cross-pod gradient hop has its own PGAS
+    conduit in ``dist/grad_sync.py`` (operating on per-pod gradients,
+    pod-sharded layout); wiring it *inside* this GSPMD step would require
+    partial-manual shard_map over ``pod``, which the pinned jax's
     partitioner rejects — see DESIGN §6 and the ROADMAP open item.
 """
 
@@ -30,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -38,6 +43,7 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.conduit import Conduit, transports as conduit_transports
 from repro.dist.loss import chunked_ce_loss
 from repro.dist.sharding import (
     MeshAxes,
@@ -65,6 +71,48 @@ from repro.optim import (
 
 
 @dataclasses.dataclass(frozen=True)
+class TransportPolicy:
+    """Conduit transport per traffic class (DESIGN §6).
+
+    Each field names a transport registered in ``repro.core.conduit``
+    (``xla`` | ``ring`` | ``bidir`` | ``auto``).  ``xla`` means "leave the
+    collective to the GSPMD partitioner" — no manual region is built.
+
+    ``tp``         — TP collectives of dense blocks (QKV/O, up/down rings);
+    ``moe``        — MoE dispatch all-to-all (today's MoE layers dispatch
+                     densely under GSPMD, so this class only binds once a
+                     manual dispatch path exists; the sweep benchmark and
+                     the a2a conduit exercise it);
+    ``cross_pod``  — the DCN gradient hop (``dist/grad_sync.py``);
+    ``compress_cross_pod`` — wrap the cross-pod conduit in EF-int8
+                     (``grad_sync.Int8Conduit``);
+    ``chunk_bytes`` — ART chunk size handed to every conduit (None: let
+                     ``auto`` pick / transport default).
+    """
+
+    tp: str = "xla"
+    moe: str = "xla"
+    cross_pod: str = "ring"
+    compress_cross_pod: bool = False
+    chunk_bytes: Optional[int] = None
+
+    def __post_init__(self):
+        # each traffic class validates against the registry of the op it
+        # actually rides (tp/cross_pod reduce, moe dispatches)
+        for cls, op in (("tp", "all_reduce"), ("moe", "all_to_all"),
+                        ("cross_pod", "all_reduce")):
+            name = getattr(self, cls)
+            valid = ("auto",) + conduit_transports(op)
+            if name not in valid:
+                raise ValueError(
+                    f"TransportPolicy.{cls}={name!r} not in {valid}")
+
+    def tp_conduit(self, axis: str = "model") -> Conduit:
+        return Conduit(axis=axis, transport=self.tp,
+                       chunk_bytes=self.chunk_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
 class StepConfig:
     """Per-run knobs of the distributed step (model config stays pure)."""
 
@@ -78,9 +126,26 @@ class StepConfig:
     moment_dtype: str = "float32"    # "bfloat16" for >=100B archs
     master_fp32: bool = True
     sequence_parallel: bool = True   # shard S of the residual over TP
-    art_tp: bool = False             # PGAS ring schedules for TP collectives
+    art_tp: bool = False             # DEPRECATED: use transport=TransportPolicy
+    transport: Optional[TransportPolicy] = None
     z_loss: float = 1e-4
     moe_aux_weight: float = 1e-2
+
+    def resolved_transport(self) -> TransportPolicy:
+        """The effective policy, honoring the deprecated ``art_tp`` flag.
+
+        ``art_tp=True`` historically meant "bidirectional PGAS rings for
+        every TP collective of dense blocks" — it maps to
+        ``TransportPolicy(tp="bidir")``."""
+        if self.transport is not None:
+            return self.transport
+        if self.art_tp:
+            warnings.warn(
+                "StepConfig.art_tp is deprecated; use "
+                "StepConfig(transport=TransportPolicy(tp='bidir'))",
+                DeprecationWarning, stacklevel=2)
+            return TransportPolicy(tp="bidir")
+        return TransportPolicy()
 
 
 @dataclasses.dataclass
@@ -147,17 +212,21 @@ def _scalar_sharding(mesh) -> NamedSharding:
 # ---------------------------------------------------------------------------
 
 
-def _art_runner(cfg: ModelConfig, mesh, scfg: StepConfig) -> Optional[Callable]:
-    """Dense-block runner with every TP collective a PGAS ring schedule.
+def _art_runner(cfg: ModelConfig, mesh,
+                policy: TransportPolicy) -> Optional[Callable]:
+    """Dense-block runner with every TP collective a PGAS conduit schedule.
 
     Norms and the (small) K/V projections stay GSPMD; the two manual regions
     differentiate only tp-sharded tensors (see models/artblock.py notes).
-    Returns None when the arch/mesh cannot take the manual schedule — the
-    step then falls back to GSPMD collectives, same numerics.
+    Returns None when ``policy.tp`` leaves TP to GSPMD (``xla``) or the
+    arch/mesh cannot take the manual schedule — the step then falls back to
+    GSPMD collectives, same numerics.
     """
     tp_n = _tp_extent(mesh)
-    if tp_n <= 1 or not artblock.supports_art_tp(cfg, tp_n):
+    if policy.tp == "xla" or tp_n <= 1 \
+            or not artblock.supports_art_tp(cfg, tp_n):
         return None
+    conduit = policy.tp_conduit("model")
     dp = dp_axes(mesh)
     act3 = P(dp, "model", None)
     cd = jnp.dtype(cfg.compute_dtype)
@@ -172,7 +241,7 @@ def _art_runner(cfg: ModelConfig, mesh, scfg: StepConfig) -> Optional[Callable]:
 
         attn_fn = jax.shard_map(
             functools.partial(artblock.art_attention_part, cfg_,
-                              axis="model"),
+                              conduit=conduit),
             mesh=mesh,
             in_specs=(act3, act3, act3, act3,
                       P(None, "model"), P("model", None), P(None)),
@@ -185,7 +254,7 @@ def _art_runner(cfg: ModelConfig, mesh, scfg: StepConfig) -> Optional[Callable]:
         if w_gate is not None:
             def gated(h_, m_, wu, wg, wd):
                 return artblock.art_mlp_part(cfg_, h_, m_, wu, wg, wd,
-                                             axis="model")
+                                             conduit=conduit)
             mlp_fn = jax.shard_map(
                 gated, mesh=mesh,
                 in_specs=(act3, act3, P(None, "model"), P(None, "model"),
@@ -195,7 +264,7 @@ def _art_runner(cfg: ModelConfig, mesh, scfg: StepConfig) -> Optional[Callable]:
 
         def ungated(h_, m_, wu, wd):
             return artblock.art_mlp_part(cfg_, h_, m_, wu, None, wd,
-                                         axis="model")
+                                         conduit=conduit)
         mlp_fn = jax.shard_map(
             ungated, mesh=mesh,
             in_specs=(act3, act3, P(None, "model"), P("model", None)),
@@ -242,7 +311,7 @@ def build_train_step(cfg: ModelConfig, mesh, scfg: StepConfig,
     bspecs = batch_pspecs(mesh, bshape)
     acfg = _adamw_config(scfg)
     constrain = _constraint_fn(cfg, mesh, scfg)
-    runner = _art_runner(cfg, mesh, scfg) if scfg.art_tp else None
+    runner = _art_runner(cfg, mesh, scfg.resolved_transport())
     n_micro = max(int(scfg.microbatches), 1)
 
     def loss_fn(params, microbatch):
@@ -387,6 +456,6 @@ def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
 
 
 __all__ = [
-    "StepConfig", "StepBundle", "build_init", "build_train_step",
-    "build_prefill_step", "build_serve_step", "MeshAxes",
+    "StepConfig", "StepBundle", "TransportPolicy", "build_init",
+    "build_train_step", "build_prefill_step", "build_serve_step", "MeshAxes",
 ]

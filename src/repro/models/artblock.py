@@ -34,13 +34,15 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
-from repro.core.collectives import ring_all_gather
+from repro.core.conduit import Conduit
 from repro.core.overlap import allgather_matmul, matmul_reducescatter
 from repro.models import layers as L
 
 Params = Dict[str, Any]
 
-BIDIR = True
+#: default conduit for the manual TP regions: counter-rotating rings over
+#: the "model" axis (what `TransportPolicy.tp="bidir"` resolves to).
+DEFAULT_CONDUIT = Conduit(axis="model", transport="bidir")
 
 
 def supports_art_tp(cfg: ModelConfig, tp: int) -> bool:
@@ -53,25 +55,35 @@ def supports_art_tp(cfg: ModelConfig, tp: int) -> bool:
     return True
 
 
-def _vmap_ag(x, w, axis):
-    return jax.vmap(
-        lambda xb: allgather_matmul(xb, w, axis=axis, bidirectional=BIDIR)
-    )(x)
+def _resolve(conduit: Conduit | None, axis: str | None) -> Conduit:
+    if conduit is not None:
+        return conduit
+    if axis is not None and axis != DEFAULT_CONDUIT.axis:
+        return Conduit(axis=axis, transport="bidir")
+    return DEFAULT_CONDUIT
 
 
-def _vmap_rs(x, w, axis):
+def _vmap_ag(x, w, conduit: Conduit):
+    return jax.vmap(lambda xb: allgather_matmul(xb, w, conduit=conduit))(x)
+
+
+def _vmap_rs(x, w, conduit: Conduit):
     return jax.vmap(
-        lambda xb: matmul_reducescatter(xb, w, axis=axis, bidirectional=BIDIR)
-    )(x)
+        lambda xb: matmul_reducescatter(xb, w, conduit=conduit))(x)
 
 
 def art_attention_part(cfg: ModelConfig, x, a_in, k_shard, v_shard,
-                       wq, wo, positions, *, axis: str = "model"):
+                       wq, wo, positions, *, axis: str | None = None,
+                       conduit: Conduit | None = None):
     """Manual region 1: QKV via ART rings + local-head attention + O ring.
 
     x, a_in: (B, S/tp, D) local; k_shard/v_shard: (B, S/tp, n_kv·hd);
     wq: (D, hq_loc·hd) column-local; wo: (hq_loc·hd, D) row-local.
+    ``conduit`` selects the ring flavor (default: bidirectional rings over
+    "model"); the legacy ``axis=`` spelling still works.
     """
+    conduit = _resolve(conduit, axis)
+    axis = conduit.axis
     tp = lax.axis_size(axis)
     my = lax.axis_index(axis)
     cd = jnp.dtype(cfg.compute_dtype)
@@ -79,13 +91,13 @@ def art_attention_part(cfg: ModelConfig, x, a_in, k_shard, v_shard,
     hq_loc = cfg.n_heads // tp
     b = x.shape[0]
 
-    q = _vmap_ag(a_in.astype(cd), wq.astype(cd), axis)     # (B, S, nq)
+    q = _vmap_ag(a_in.astype(cd), wq.astype(cd), conduit)  # (B, S, nq)
     s_full = q.shape[1]
     q = q.reshape(b, s_full, hq_loc, hd).transpose(0, 2, 1, 3)
 
     # gasnet-style K/V broadcast: ring-gather the sequence-sharded K/V
-    k = jax.vmap(lambda t: ring_all_gather(t, axis=axis))(k_shard.astype(cd))
-    v = jax.vmap(lambda t: ring_all_gather(t, axis=axis))(v_shard.astype(cd))
+    k = jax.vmap(conduit.all_gather)(k_shard.astype(cd))
+    v = jax.vmap(conduit.all_gather)(v_shard.astype(cd))
     n_kv = k.shape[-1] // hd
     k = k.reshape(b, s_full, n_kv, hd).transpose(0, 2, 1, 3)
     v = v.reshape(b, s_full, n_kv, hd).transpose(0, 2, 1, 3)
@@ -104,20 +116,22 @@ def art_attention_part(cfg: ModelConfig, x, a_in, k_shard, v_shard,
         q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
         causal_skip=cfg.causal_block_skip)
     out = out.transpose(0, 2, 1, 3).reshape(b, s_full, hq_loc * hd)
-    return x + _vmap_rs(out, wo.astype(cd), axis).astype(x.dtype)
+    return x + _vmap_rs(out, wo.astype(cd), conduit).astype(x.dtype)
 
 
 def art_mlp_part(cfg: ModelConfig, h, m_in, w_up, w_gate, w_down,
-                 *, axis: str = "model"):
+                 *, axis: str | None = None,
+                 conduit: Conduit | None = None):
     """Manual region 2: gated MLP with AG/RS rings.  h, m_in local."""
+    conduit = _resolve(conduit, axis)
     cd = jnp.dtype(cfg.compute_dtype)
     m_in = m_in.astype(cd)
     w_up = w_up.astype(cd)
     if w_gate is not None:
         up_cat = _vmap_ag(m_in, jnp.concatenate(
-            [w_up, w_gate.astype(cd)], axis=1), axis)
+            [w_up, w_gate.astype(cd)], axis=1), conduit)
         f_loc = w_up.shape[1]
         act = L._act(cfg.activation, up_cat[..., f_loc:]) * up_cat[..., :f_loc]
     else:
-        act = L._act(cfg.activation, _vmap_ag(m_in, w_up, axis))
-    return h + _vmap_rs(act, w_down.astype(cd), axis).astype(h.dtype)
+        act = L._act(cfg.activation, _vmap_ag(m_in, w_up, conduit))
+    return h + _vmap_rs(act, w_down.astype(cd), conduit).astype(h.dtype)

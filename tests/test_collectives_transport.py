@@ -1,6 +1,11 @@
-"""Transport equivalence the dist layer's switch relies on: the PGAS ring
-collectives must be numerically interchangeable with the XLA built-ins
-(``dist/steps.py`` swaps one for the other per StepConfig)."""
+"""Transport equivalence the conduit layer's switch relies on: every
+registered transport of every collective op must be numerically
+interchangeable with the XLA built-ins (``dist/steps.py``'s
+TransportPolicy swaps one for the other), and the ``auto`` policy must
+actually *use* the Fig. 5 tradeoff — different transports for small vs
+large messages under the QSFP+ netmodel."""
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -9,7 +14,137 @@ import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import collectives as col
+from repro.core import conduit
+from repro.core import netmodel as nm
 from repro.dist.grad_sync import cross_pod_all_reduce
+
+RING_TRANSPORTS = ("ring", "bidir")
+ALL_TRANSPORTS = ("xla", "ring", "bidir")
+
+
+def _mesh(n):
+    """1-D mesh over the first ``n`` host devices (odd sizes included)."""
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("x",))
+
+
+def _run(mesh, fn, *args, in_specs=P("x"), out_specs=P("x")):
+    return np.asarray(jax.jit(jax.shard_map(
+        fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs))(*args))
+
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+
+class TestRegistry:
+    @pytest.mark.parametrize("op", conduit.OPS)
+    def test_every_op_has_three_transports(self, op):
+        names = conduit.transports(op)
+        assert set(ALL_TRANSPORTS) <= set(names), (op, names)
+
+
+# ---------------------------------------------------------------------------
+# per-op equivalence, every transport × odd/even axis sizes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 4])
+@pytest.mark.parametrize("transport", ALL_TRANSPORTS)
+class TestTransportEquivalence:
+    """Each conduit transport against the XLA builtin oracle."""
+
+    def test_all_gather(self, transport, n):
+        mesh = _mesh(n)
+        cd = conduit.Conduit("x", transport)
+        x = jax.random.normal(jax.random.PRNGKey(0), (n * 4, 6))
+        got = _run(mesh, lambda v: cd.all_gather(v), x)
+        want = _run(mesh, lambda v: jax.lax.all_gather(
+            v, "x", axis=0, tiled=True), x)
+        np.testing.assert_array_equal(got, want)
+
+    def test_reduce_scatter(self, transport, n):
+        mesh = _mesh(n)
+        cd = conduit.Conduit("x", transport)
+        x = jax.random.randint(
+            jax.random.PRNGKey(1), (n, n * 3, 5), -50, 50
+        ).astype(jnp.float32).reshape(n * n * 3, 5)
+        got = _run(mesh, lambda v: cd.reduce_scatter(v), x)
+        want = _run(mesh, lambda v: jax.lax.psum_scatter(
+            v, "x", scatter_dimension=0, tiled=True), x)
+        np.testing.assert_array_equal(got, want)   # ints: exact in any order
+
+    def test_all_reduce(self, transport, n):
+        mesh = _mesh(n)
+        cd = conduit.Conduit("x", transport)
+        x = jax.random.normal(jax.random.PRNGKey(2), (n, 7, 5))
+
+        def ours(v):
+            return cd.all_reduce(v[0])[None]
+
+        def ref(v):
+            return jax.lax.psum(v[0], "x")[None]
+
+        got = _run(mesh, ours, x)
+        want = _run(mesh, ref, x)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("root", [0, 1])
+    def test_broadcast(self, transport, n, root):
+        mesh = _mesh(n)
+        cd = conduit.Conduit("x", transport)
+        x = jax.random.normal(jax.random.PRNGKey(3), (n, 9))
+
+        def ours(v):
+            return cd.broadcast(v[0], root)[None]
+
+        got = _run(mesh, ours, x)
+        want = np.broadcast_to(np.asarray(x)[root], (n, 9))
+        np.testing.assert_array_equal(got, want)
+
+    def test_all_to_all(self, transport, n):
+        mesh = _mesh(n)
+        cd = conduit.Conduit("x", transport)
+        x = jax.random.normal(jax.random.PRNGKey(4), (n, n, 2, 3))
+
+        def ours(v):
+            return cd.all_to_all(v[0])[None]
+
+        got = _run(mesh, ours, x)
+        # oracle: slot q on rank r must hold what rank q addressed to r
+        want = np.asarray(x).transpose(1, 0, 2, 3)
+        np.testing.assert_array_equal(got, want)
+
+    def test_barrier(self, transport, n):
+        mesh = _mesh(n)
+        cd = conduit.Conduit("x", transport)
+        got = np.asarray(jax.jit(jax.shard_map(
+            lambda: cd.barrier()[None], mesh=mesh,
+            in_specs=(), out_specs=P("x")))())
+        assert got.tolist() == [n] * n
+
+
+# ---------------------------------------------------------------------------
+# ART chunking is numerics-neutral
+# ---------------------------------------------------------------------------
+
+
+class TestChunking:
+    @pytest.mark.parametrize("transport", RING_TRANSPORTS)
+    def test_chunked_equals_unchunked(self, transport):
+        mesh = _mesh(4)
+        x = jax.random.normal(jax.random.PRNGKey(5), (4, 8, 10))
+        outs = []
+        for chunk in (None, 64):
+            cd = conduit.Conduit("x", transport, chunk_bytes=chunk)
+            outs.append(_run(mesh, lambda v, cd=cd: cd.all_reduce(v[0])[None],
+                             x))
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# legacy collectives wrappers (the old public surface, now conduit-backed)
+# ---------------------------------------------------------------------------
 
 
 class TestRingAllReduce:
@@ -50,6 +185,58 @@ class TestRingAllReduce:
         np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
 
 
+# ---------------------------------------------------------------------------
+# the auto policy (paper Fig. 5 as a runtime decision)
+# ---------------------------------------------------------------------------
+
+
+class TestAutoSelection:
+    @pytest.mark.parametrize("op", ["all_reduce", "all_gather",
+                                    "reduce_scatter"])
+    def test_small_vs_large_pick_different_transports(self, op):
+        """Under the QSFP+ netmodel, tiny messages must resolve to the
+        latency-lean xla transport and multi-MB messages to a ring family
+        (full-duplex bidir) — the Fig. 5 tradeoff, decided at runtime."""
+        small, _ = conduit.auto_select(
+            op, size_bytes=256, axis_size=8, link=nm.FSHMEM_QSFP)
+        large, chunk = conduit.auto_select(
+            op, size_bytes=8 << 20, axis_size=8, link=nm.FSHMEM_QSFP)
+        assert small == "xla"
+        assert large in RING_TRANSPORTS
+        assert small != large
+        assert chunk in conduit.CHUNK_CANDIDATES
+
+    def test_large_prefers_full_duplex(self):
+        t, _ = conduit.auto_select(
+            "all_reduce", size_bytes=8 << 20, axis_size=8,
+            link=nm.FSHMEM_QSFP)
+        assert t == "bidir"   # both directions carry half the bytes
+
+    def test_auto_conduit_is_correct(self):
+        """End to end: an auto conduit must still be numerically right for
+        both a tiny and a large payload (different transports inside)."""
+        mesh = _mesh(4)
+        cd = conduit.Conduit("x", "auto")
+        for shape in ((4, 3), (4, 1 << 15)):
+            x = jax.random.normal(jax.random.PRNGKey(6), shape)
+            got = _run(mesh, lambda v: cd.all_reduce(v[0])[None], x)
+            want = np.broadcast_to(np.asarray(x).sum(0), x.shape)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    def test_estimate_time_covers_every_pair(self):
+        for op in conduit.OPS:
+            for t in conduit.transports(op):
+                dt = conduit.estimate_time(
+                    op, t, size_bytes=1 << 16, axis_size=8,
+                    link=nm.FSHMEM_QSFP)
+                assert dt > 0.0, (op, t)
+
+
+# ---------------------------------------------------------------------------
+# cross-pod grad sync through the conduit (transport switch incl. compression)
+# ---------------------------------------------------------------------------
+
+
 class TestCrossPodTransportSwitch:
     @pytest.fixture(scope="class")
     def podmesh(self):
@@ -71,8 +258,53 @@ class TestCrossPodTransportSwitch:
             out_specs=P("pod", None)))(gs)
         np.testing.assert_array_equal(np.asarray(ours["w"]), np.asarray(ref))
 
+    @pytest.mark.parametrize("transport", ALL_TRANSPORTS)
+    def test_every_transport_agrees(self, podmesh, transport):
+        g = jax.random.normal(jax.random.PRNGKey(7), (2, 96))
+        gs = jax.device_put(g, NamedSharding(podmesh, P("pod", None)))
+        ours, _ = cross_pod_all_reduce({"w": gs}, podmesh,
+                                       transport=transport)
+        want = np.broadcast_to(np.asarray(g).mean(0), g.shape)
+        np.testing.assert_allclose(np.asarray(ours["w"]), want,
+                                   rtol=1e-6, atol=1e-6)
+
     def test_ef_is_zero_when_uncompressed(self, podmesh):
         g = jax.random.normal(jax.random.PRNGKey(3), (2, 32))
         gs = jax.device_put(g, NamedSharding(podmesh, P("pod", None)))
         _, ef = cross_pod_all_reduce({"w": gs}, podmesh)
         assert float(jnp.abs(ef["w"]).max()) == 0.0
+
+    def test_compression_is_a_conduit_wrapper(self, podmesh):
+        """compressed=True must behave the same over any base transport —
+        compression wraps the conduit, it is not a transport property."""
+        g = jax.random.normal(jax.random.PRNGKey(8), (2, 64))
+        gs = jax.device_put(g, NamedSharding(podmesh, P("pod", None)))
+        outs = []
+        for transport in ("ring", "xla"):
+            synced, ef = cross_pod_all_reduce(
+                {"w": gs}, podmesh, compressed=True, transport=transport)
+            outs.append((np.asarray(synced["w"]), np.asarray(ef["w"])))
+        np.testing.assert_allclose(outs[0][0], outs[1][0], rtol=1e-6)
+        np.testing.assert_allclose(outs[0][1], outs[1][1], rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# overlap schedules driven by a conduit handle
+# ---------------------------------------------------------------------------
+
+
+class TestOverlapConduit:
+    @pytest.mark.parametrize("transport", RING_TRANSPORTS)
+    def test_allgather_matmul_conduit(self, mesh4, transport):
+        from repro.core import overlap
+        cd = conduit.Conduit("x", transport)
+        x = jax.random.normal(jax.random.PRNGKey(9), (8, 16))
+        w = jax.random.normal(jax.random.PRNGKey(10), (16, 32))
+        xs = jax.device_put(x, NamedSharding(mesh4, P("x", None)))
+        ws = jax.device_put(w, NamedSharding(mesh4, P(None, "x")))
+        f = jax.jit(jax.shard_map(
+            functools.partial(overlap.allgather_matmul, conduit=cd),
+            mesh=mesh4, in_specs=(P("x", None), P(None, "x")),
+            out_specs=P(None, "x")))
+        np.testing.assert_allclose(
+            np.asarray(f(xs, ws)), np.asarray(x @ w), rtol=1e-5, atol=1e-5)
