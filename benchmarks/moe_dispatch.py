@@ -1,0 +1,182 @@
+"""MoE dispatch sweep: the all_to_all traffic class over the conduit.
+
+PR 2's transport sweep measured the *collective* surface; this one
+measures the traffic class the expert-parallel MoE path
+(``models/moe_ep.py``) actually puts on the wire: bucketed token
+exchanges of ``tokens/rank × capacity × d_model`` bytes riding
+``all_to_all`` over the ``expert`` axis.  For every MoE arch preset the
+modeled section sweeps payload size × transport × expert-axis size on
+both link models and records where the ``auto`` policy flips from ``xla``
+(latency-lean doubling) to a ring family (bandwidth) — the paper's
+Fig.-5-style crossover, now measurable for MoE dispatch.  A measured
+section times the real EP layer against the dense-GSPMD layer on a
+host-device CPU mesh (functional wall-clock only) and asserts the two
+agree numerically.
+
+Writes ``BENCH_moe.json`` at the repo root.  ``--model-only`` skips the
+measured section (CI smoke).
+
+Internal assertions (a failed claim is a failed run):
+  * ``auto`` resolves all_to_all to ``xla`` for small dispatches and to a
+    ring family for large ones on the QSFP+ link (a crossover exists);
+  * every transport's EP layer output equals the dense layer's.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_moe.json")
+
+SIZES = tuple(1 << p for p in range(8, 25, 2))     # 256 B .. 16 MB
+EXPERT_AXES = (4, 8)
+TRANSPORTS = ("xla", "ring", "bidir")
+
+
+def _dispatch_bytes(cfg, tokens_per_rank: int) -> int:
+    """Bytes one rank puts on the wire per MoE layer dispatch: the
+    (E, cap, D) capacity buffer in compute dtype (both directions ride the
+    same payload; capacity per the dense path's per-row rule)."""
+    import jax.numpy as jnp
+
+    cap = max(1, int(tokens_per_rank * cfg.experts_per_token
+                     / cfg.n_experts * cfg.capacity_factor))
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    return cfg.n_experts * cap * cfg.d_model * itemsize
+
+
+def model_rows():
+    from repro.configs import EP_PRESETS
+    from repro.core import conduit
+    from repro.core import netmodel as nm
+
+    rows = []
+    for link_name, link in (("qsfp", nm.FSHMEM_QSFP), ("ici", nm.TPU_ICI)):
+        for n in EXPERT_AXES:
+            for size in SIZES:
+                for t in TRANSPORTS:
+                    rows.append({
+                        "source": "model", "link": link_name,
+                        "op": "all_to_all", "transport": t,
+                        "axis_size": n, "bytes": size,
+                        "time_us": 1e6 * conduit.estimate_time(
+                            "all_to_all", t, size_bytes=size,
+                            axis_size=n, link=link),
+                    })
+                choice, chunk = conduit.auto_select(
+                    "all_to_all", size_bytes=size, axis_size=n, link=link)
+                rows.append({
+                    "source": "auto", "link": link_name, "op": "all_to_all",
+                    "transport": choice, "axis_size": n, "bytes": size,
+                    "chunk_bytes": chunk,
+                })
+    # per-arch operating points: where each preset's train_4k dispatch
+    # lands on the sweep (tokens/rank at the preset's expert-axis extent)
+    for name, preset in EP_PRESETS.items():
+        cfg = preset.config
+        for tokens in (512, 4096, 32768):
+            size = _dispatch_bytes(cfg, tokens)
+            from repro.core import conduit as _c
+            choice, chunk = _c.auto_select(
+                "all_to_all", size_bytes=size,
+                axis_size=preset.expert_axis, link=nm.FSHMEM_QSFP)
+            rows.append({
+                "source": "preset", "preset": name, "arch": cfg.name,
+                "tokens_per_rank": tokens, "bytes": size,
+                "axis_size": preset.expert_axis,
+                "transport": choice, "chunk_bytes": chunk,
+            })
+    return rows
+
+
+def crossover_claims(rows) -> dict:
+    """Smallest swept dispatch size where auto leaves xla, per (link, n)."""
+    claims = {}
+    for link in ("qsfp", "ici"):
+        for n in EXPERT_AXES:
+            auto = {r["bytes"]: r["transport"] for r in rows
+                    if r["source"] == "auto" and r["link"] == link
+                    and r["axis_size"] == n}
+            flip = [s for s in sorted(auto) if auto[s] != "xla"]
+            claims[f"{link}_n{n}_crossover_bytes"] = flip[0] if flip else None
+    small = claims["qsfp_n8_crossover_bytes"]
+    assert small is not None, "auto never leaves xla on qsfp (no crossover)"
+    assert small > min(SIZES), "auto must keep xla for the smallest dispatch"
+    return claims
+
+
+def measured_rows(n_iters: int = 5):
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import layers as L
+    from repro.models import moe_ep
+    from repro.models.model import init_params
+
+    cfg = get_config("grok-1-314b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    moe_p = jax.tree.map(lambda a: a[0], params["layers"]["moe"])
+    n = min(4, len(jax.devices()))
+    while n > 1 and cfg.n_experts % n:
+        n -= 1
+    if n < 2:       # single-device host: no expert axis to exchange over
+        return []
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n]), ("expert",))
+    x = jax.random.normal(jax.random.PRNGKey(1), (n * 2, 64, cfg.d_model))
+
+    dense_fn = jax.jit(lambda p, v: L.moe(cfg, p, v))
+    ref = np.asarray(dense_fn(moe_p, x))
+    rows = []
+    for t in ("dense-gspmd",) + TRANSPORTS:
+        if t == "dense-gspmd":
+            fn = dense_fn
+        else:
+            runner = moe_ep.build_moe_ep_runner(cfg, mesh, transport=t)
+            fn = jax.jit(lambda p, v, r=runner: r(cfg, p, v))
+        out = np.asarray(fn(moe_p, x))      # compile + correctness
+        np.testing.assert_allclose(
+            out, ref, rtol=1e-5, atol=1e-5,
+            err_msg=f"EP/{t} disagrees with the dense layer")
+        t0 = time.perf_counter()
+        for _ in range(n_iters):
+            jax.block_until_ready(fn(moe_p, x))
+        dt = (time.perf_counter() - t0) / n_iters
+        rows.append({
+            "source": "measured-cpu-mesh", "op": "moe_layer",
+            "transport": t, "axis_size": n,
+            "tokens_per_rank": int(x.shape[0] // n * x.shape[1]),
+            "wall_us": 1e6 * dt,
+        })
+    return rows
+
+
+def main(model_only: bool = False) -> dict:
+    # the measured section builds a host-device expert mesh; harmless if a
+    # caller (benchmarks/run.py) or the environment already chose a count
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+    rows = model_rows()
+    claims = crossover_claims(rows)
+    if not model_only:
+        rows += measured_rows()
+    payload = {
+        "suite": "moe_dispatch",
+        "claims": claims,
+        "n_rows": len(rows),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"moe_dispatch: {len(rows)} rows -> {OUT_PATH}")
+    for k, v in claims.items():
+        print(f"  {k}: {v}")
+    return payload
+
+
+if __name__ == "__main__":
+    # failures surface as uncaught assertions (nonzero exit)
+    main("--model-only" in sys.argv[1:])

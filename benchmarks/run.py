@@ -27,7 +27,7 @@ def _ensure_devices(n: int = 4):
 def main() -> None:
     _ensure_devices()
     from benchmarks import artlayer, bandwidth, casestudy, latency, resource
-    from benchmarks import roofline_bench, transport_sweep
+    from benchmarks import moe_dispatch, roofline_bench, transport_sweep
 
     suites = [
         ("bandwidth(Fig5)", bandwidth.main),
@@ -36,6 +36,7 @@ def main() -> None:
         ("casestudy(Fig6/7)", casestudy.main),
         ("artlayer(§Perf ART-TP)", artlayer.main),
         ("transport(conduit sweep)", transport_sweep.main),
+        ("moe(EP dispatch sweep)", moe_dispatch.main),
         ("roofline(§Roofline)", roofline_bench.main),
     ]
     failed = []

@@ -1,14 +1,26 @@
 """Quickstart: the PGAS programming model in 60 lines.
 
 Builds a 4-rank global address space on a CPU mesh, then exercises the
-paper's primitives: one-sided put/get, an Active Message invoking a custom
-compute handler (the DLA pattern), and an ART-overlapped distributed
-matmul.
+paper's primitives: symmetric heap, one-sided ring PUT, an Active Message
+invoking a custom compute handler (the DLA pattern), and an
+ART-overlapped distributed matmul.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(see examples/README.md for the full script table)
 """
 
+import argparse
 import os
+
+argparse.ArgumentParser(
+    description="PGAS quickstart: symmetric heap, one-sided ring PUT, an "
+                "Active Message invoking a custom compute handler, and an "
+                "ART-overlapped distributed matmul on a 4-device CPU mesh. "
+                "Invocation: PYTHONPATH=src python examples/quickstart.py "
+                "(sets XLA_FLAGS=--xla_force_host_platform_device_count=4 "
+                "itself; see examples/README.md).",
+).parse_args()
+
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import functools

@@ -36,7 +36,18 @@ def get_config(name: str) -> ModelConfig:
     return mod.config
 
 
+# imported after get_config exists: get_ep_preset resolves presets against
+# the registry (lazily, at call time)
+from repro.configs.presets import (  # noqa: E402
+    EP_PRESET_NAMES,
+    EP_PRESETS,
+    EPPreset,
+    get_ep_preset,
+)
+
+
 __all__ = [
     "ARCH_NAMES", "SHAPES", "ModelConfig", "ShapeCell",
     "cell_applicable", "get_config", "shape_cell",
+    "EPPreset", "EP_PRESETS", "EP_PRESET_NAMES", "get_ep_preset",
 ]

@@ -1,0 +1,84 @@
+"""Expert-parallel (EP) presets for the MoE architectures.
+
+A ``ModelConfig`` stays pure — expert parallelism is a *run* property
+(mesh + :class:`~repro.dist.steps.TransportPolicy`), so an "EP-enabled
+preset" here is the pairing a launcher needs: the arch, a ``StepConfig``
+whose ``TransportPolicy.moe`` routes expert dispatch through the conduit
+``all_to_all`` (``models/moe_ep.py``), and the expert-axis extent the
+mesh should carry.
+
+Usage::
+
+    from repro.configs import get_ep_preset
+    preset = get_ep_preset("grok-1-314b-ep")
+    mesh = jax.make_mesh((n_data, preset.expert_axis), ("data", "expert"))
+    bundle = build_train_step(preset.config, mesh, preset.step, bshape)
+
+The expert-axis extents divide each arch's ``n_experts`` (asserted when a
+preset is resolved via :func:`get_ep_preset`, and for every preset by
+``tests/test_moe_ep.py``); ``moe="auto"`` defers the xla/ring/bidir
+choice to the netmodel per dispatch size (docs/transports.md lists the
+thresholds).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class EPPreset:
+    """One EP-enabled run recipe: arch + step knobs + mesh shape hint."""
+
+    arch: str                 # registry name of the ModelConfig
+    expert_axis: int          # recommended ``expert`` mesh-axis extent
+    moe_transport: str = "auto"   # TransportPolicy.moe
+
+    @property
+    def config(self) -> ModelConfig:
+        from repro.configs import get_config
+
+        return get_config(self.arch)
+
+    @property
+    def step(self):
+        """A ``StepConfig`` with the EP transport policy bound."""
+        from repro.dist.steps import StepConfig, TransportPolicy
+
+        return StepConfig(
+            transport=TransportPolicy(moe=self.moe_transport))
+
+
+#: EP recipes for every MoE arch in the registry.  ``expert_axis`` is the
+#: largest power-of-two extent dividing ``n_experts`` that still leaves
+#: ≥2 experts per shard (bucket payloads stay einsum-shaped, and odd
+#: extents are covered by tests rather than presets).
+EP_PRESETS: Dict[str, EPPreset] = {
+    "llama4-scout-17b-a16e-ep": EPPreset(
+        arch="llama4-scout-17b-a16e", expert_axis=8),
+    "grok-1-314b-ep": EPPreset(arch="grok-1-314b", expert_axis=4),
+}
+
+EP_PRESET_NAMES: Tuple[str, ...] = tuple(EP_PRESETS)
+
+
+def get_ep_preset(name: str) -> EPPreset:
+    """Resolve an EP preset by name (``<arch>-ep``), validated against the
+    arch it points at (lazy — arch modules load only when a preset is
+    actually requested; ``tests/test_moe_ep.py`` validates all of them)."""
+    if name not in EP_PRESETS:
+        raise KeyError(
+            f"unknown EP preset {name!r}; known: {sorted(EP_PRESETS)}")
+    p = EP_PRESETS[name]
+    cfg = p.config
+    assert cfg.family == "moe", (name, cfg.family)
+    assert cfg.n_experts % p.expert_axis == 0, (
+        name, cfg.n_experts, p.expert_axis)
+    assert cfg.n_experts // p.expert_axis >= 2, (name, p.expert_axis)
+    return p
+
+
+__all__ = ["EPPreset", "EP_PRESETS", "EP_PRESET_NAMES", "get_ep_preset"]

@@ -94,22 +94,26 @@ class HandlerRegistry:
     # -- registration -------------------------------------------------------
 
     def register_request(self, name: str, fn: RequestHandler) -> int:
+        """Register a request handler; returns its integer opcode."""
         opcode = len(self._requests)
         self._requests.append(_Entry(name, opcode, fn))
         return opcode
 
     def register_reply(self, name: str, fn: ReplyHandler) -> int:
+        """Register a reply handler; returns its integer opcode."""
         opcode = len(self._replies)
         self._replies.append(_Entry(name, opcode, fn))
         return opcode
 
     def request_opcode(self, name: str) -> int:
+        """Opcode of the request handler registered as ``name``."""
         for e in self._requests:
             if e.name == name:
                 return e.opcode
         raise KeyError(name)
 
     def reply_opcode(self, name: str) -> int:
+        """Opcode of the reply handler registered as ``name``."""
         for e in self._replies:
             if e.name == name:
                 return e.opcode
@@ -118,6 +122,9 @@ class HandlerRegistry:
     # -- dispatch (the hardware "AM receive handler") -------------------------
 
     def dispatch_request(self, opcode, heap, args, payload, *, axis: str | None = None):
+        """Invoke the request handler for a (traced) ``opcode`` —
+        ``lax.switch`` over the handler table, the software analogue of
+        the paper's AM sequencer."""
         branches = [
             (lambda h, a, p, fn=e.fn: _vary_tree(fn(h, a, p), axis))
             for e in self._requests
@@ -125,6 +132,7 @@ class HandlerRegistry:
         return lax.switch(opcode, branches, heap, args, payload)
 
     def dispatch_reply(self, opcode, heap, args, payload, *, axis: str | None = None):
+        """Invoke the reply handler for a (traced) ``opcode``."""
         branches = [
             (lambda h, a, p, fn=e.fn: _vary_tree(fn(h, a, p), axis))
             for e in self._replies

@@ -98,6 +98,11 @@ def transports(op: str) -> Tuple[str, ...]:
 
 
 def resolve(op: str, name: str) -> Callable:
+    """The registered transport callable for ``(op, name)``.
+
+    Raises ``KeyError`` (listing what *is* registered) for unknown pairs —
+    the error surface ``TransportPolicy.__post_init__`` validates against.
+    """
     try:
         return _REGISTRY[(op, name)]
     except KeyError:
@@ -330,15 +335,18 @@ def _all_reduce_ring(x, *, axis: str, chunk_bytes=None):
 def _all_to_all_ring(x, *, axis: str, chunk_bytes=None, _shifts=None):
     """All-to-all as n−1 single-block permutes (MoE dispatch transport).
 
-    ``x``: (n, B, ...) — slot q is destined for rank q; returns (n, B, ...)
-    where slot q holds the block rank q sent here.  Per-permute message
-    size is |x|/n — ART-chunked by construction, further split by
-    ``chunk_bytes``.
+    ``x``: (n·g, B, ...) with the leading dim a multiple of the axis size —
+    rows [q·g, (q+1)·g) are destined for rank q (``g=1`` is the plain
+    one-block-per-rank layout; ``g>1`` matches the *tiled* semantics of the
+    ``xla`` transport, which is what the bucketed MoE exchange of
+    ``models/moe_ep.py`` rides).  Returns the same shape with slot q
+    holding what rank q sent here.  Per-permute message size is |x|/n —
+    ART-chunked by construction, further split by ``chunk_bytes``.
     """
     n = lax.axis_size(axis)
     if n == 1:
         return x
-    assert x.shape[0] == n, (x.shape, n)
+    assert x.shape[0] % n == 0, (x.shape, n)
     my = lax.axis_index(axis)
     shifts = _shifts if _shifts is not None else list(range(1, n))
 
@@ -703,22 +711,29 @@ class Conduit:
     # -- collectives (call inside shard_map over ``self.axis``) -------------
 
     def barrier(self) -> jnp.ndarray:
+        """Full-axis rendezvous; returns the axis size on every rank."""
         name, chunk = self._resolve("barrier", 4)
         return resolve("barrier", name)(axis=self.axis, chunk_bytes=chunk)
 
     def broadcast(self, x, root: int):
+        """Rank ``root``'s ``x`` delivered to every rank."""
         return self._call("broadcast", x, root=root)
 
     def all_gather(self, x):
+        """Local ``(B, ...)`` → ``(n·B, ...)``, blocks in axis-index order."""
         return self._call("all_gather", x)
 
     def reduce_scatter(self, x):
+        """``(n·B, ...)`` → ``(B, ...)``: block q summed onto rank q."""
         return self._call("reduce_scatter", x)
 
     def all_reduce(self, x):
+        """Elementwise sum of ``x`` across the axis, on every rank."""
         return self._call("all_reduce", x)
 
     def all_to_all(self, x):
+        """Tiled exchange: leading dim a multiple of n; block q of ``x``
+        goes to rank q, returns the blocks the peers addressed here."""
         return self._call("all_to_all", x)
 
     # -- fused-matmul flavor (core/overlap.py schedules) --------------------

@@ -74,18 +74,22 @@ class LatencyParams:
 
     @property
     def put_short(self) -> float:
+        """Table III short-PUT latency (no payload DMA stage)."""
         return self.t_host_cmd + self.t_header
 
     @property
     def put_long(self) -> float:
+        """Table III long-PUT latency (adds the read-DMA startup)."""
         return self.t_host_cmd + self.t_dma + self.t_header
 
     @property
     def get_short(self) -> float:
+        """Table III short-GET latency (request + handler + short reply)."""
         return self.put_short + self.t_handler + self.t_sched + self.t_header
 
     @property
     def get_long(self) -> float:
+        """Table III long-GET latency (request + handler + long reply)."""
         return (
             self.put_short
             + self.t_handler
@@ -131,6 +135,7 @@ class LinkParams:
     # -- per-packet / steady-state -----------------------------------------
 
     def packet_time(self, packet_size: int) -> float:
+        """Wire time of one packet: payload + per-packet overhead bytes."""
         return (packet_size + self.overhead_bytes(packet_size)) / self.line_rate
 
     def steady_bandwidth(self, packet_size: int) -> float:
@@ -187,6 +192,7 @@ TPU_ICI = LinkParams(
 
 
 def n_packets(size_bytes: int, packet_size: int) -> int:
+    """⌈size/packet⌉, at least one packet."""
     return max(1, -(-size_bytes // packet_size))
 
 
@@ -211,10 +217,12 @@ def get_time(link: LinkParams, size_bytes: int, packet_size: int) -> float:
 
 
 def put_bandwidth(link: LinkParams, size_bytes: int, packet_size: int) -> float:
+    """Effective PUT bandwidth at this transfer/packet size (Fig. 5 y-axis)."""
     return size_bytes / put_time(link, size_bytes, packet_size)
 
 
 def get_bandwidth(link: LinkParams, size_bytes: int, packet_size: int) -> float:
+    """Effective GET bandwidth — below PUT at small sizes (two messages)."""
     return size_bytes / get_time(link, size_bytes, packet_size)
 
 
@@ -255,6 +263,7 @@ def art_time(
 def art_speedup(
     t_compute: float, t_comm: float, t_msg: float, n_chunks: int
 ) -> float:
+    """Bulk-synchronous time over ART time (the paper's Fig. 7 metric)."""
     return bulk_time(t_compute, t_comm, t_msg) / art_time(
         t_compute, t_comm, t_msg, n_chunks
     )
@@ -295,6 +304,7 @@ def half_saturation_size(link: LinkParams, packet_size: int) -> int:
 
 
 def saturation_size(link: LinkParams, packet_size: int, frac: float = 0.95) -> int:
+    """Smallest power-of-two transfer reaching ``frac`` of steady bandwidth."""
     target = frac * link.steady_bandwidth(packet_size)
     s = 4
     while put_bandwidth(link, s, packet_size) < target:

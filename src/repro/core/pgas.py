@@ -55,6 +55,9 @@ Perm = Sequence[Tuple[int, int]]
 
 @dataclasses.dataclass
 class Symbol:
+    """One named allocation in the symmetric heap (offset identical on
+    every rank — the SHMEM property remote addressing relies on)."""
+
     name: str
     offset: int
     size: int
@@ -74,6 +77,8 @@ class SymmetricHeap:
         self._top = 0
 
     def alloc(self, name: str, size: int) -> Symbol:
+        """Bump-allocate ``size`` words for ``name`` (same offset on every
+        rank); raises on double allocation or heap overflow."""
         if name in self._symbols:
             raise ValueError(f"symbol {name!r} already allocated")
         if self._top + size > self.size:
@@ -86,12 +91,15 @@ class SymmetricHeap:
         return sym
 
     def addr(self, name: str) -> int:
+        """The symbol's offset — valid as a *remote* address on any peer."""
         return self._symbols[name].offset
 
     def symbol(self, name: str) -> Symbol:
+        """The full :class:`Symbol` record for ``name``."""
         return self._symbols[name]
 
     def zeros_local(self) -> jnp.ndarray:
+        """A zeroed local partition with the heap's size and dtype."""
         return jnp.zeros((self.size,), self.dtype)
 
 
@@ -213,6 +221,7 @@ class GlobalAddressSpace:
 
     @property
     def n_ranks(self) -> int:
+        """Number of partitions (the PGAS axis extent)."""
         return self.mesh.shape[self.axis]
 
     def zeros_global(self) -> jax.Array:
@@ -243,6 +252,8 @@ class GlobalAddressSpace:
     # Convenience: symbol-level remote write/read closures ------------------
 
     def write_symbol(self, name: str, *, perm: Perm) -> Callable:
+        """A jitted ``f(global_heap, payload)`` PUTting into symbol
+        ``name`` on the peers named by ``perm``."""
         sym = self.heap.symbol(name)
 
         def _w(heap, payload):
@@ -251,6 +262,8 @@ class GlobalAddressSpace:
         return self.run(_w, extra_in_specs=(P(self.axis),))
 
     def read_symbol(self, name: str, *, perm: Perm) -> Callable:
+        """A jitted ``f(global_heap) -> (heap, chunk)`` GETting symbol
+        ``name`` from the peers named by ``perm`` (request + reply)."""
         sym = self.heap.symbol(name)
 
         def _r(heap, _dummy=None):

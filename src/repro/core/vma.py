@@ -31,6 +31,7 @@ def vary(x, axis: str | tuple[str, ...]):
 
 
 def vary_tree(tree, axis: str | tuple[str, ...] | None):
+    """:func:`vary` over every leaf of ``tree`` (None axis: no-op)."""
     if axis is None:
         return tree
     return jax.tree.map(lambda x: vary(x, axis), tree)

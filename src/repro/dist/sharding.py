@@ -37,21 +37,32 @@ class MeshAxes:
     """Logical roles of mesh axes.
 
     ``data``: DP/FSDP axes — a tuple (e.g. ``("pod", "data")``) spans the
-    cross-pod DCN hop; ``model``: tensor/sequence/expert parallelism (ICI).
+    cross-pod DCN hop; ``model``: tensor/sequence parallelism (ICI);
+    ``expert``: expert parallelism — MoE expert weights shard their leading
+    E dim over it, and for everything *else* it behaves as one more data
+    axis (tokens shard over it, dense params replicate along it), which is
+    what lets ``models/moe_ep.py`` route distinct tokens per expert shard.
     """
 
     data: AxisEntry = "data"
     model: AxisEntry = "model"
+    expert: AxisEntry = "expert"
 
     def names(self, entry: AxisEntry) -> Tuple[str, ...]:
+        """An entry as a flat tuple of mesh-axis names (None → empty)."""
         if entry is None:
             return ()
         return (entry,) if isinstance(entry, str) else tuple(entry)
 
 
 def dp_axes(mesh) -> AxisEntry:
-    """The full data-parallel axis set of ``mesh`` (includes ``pod``)."""
-    names = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    """The full data-parallel axis set of ``mesh``.
+
+    Includes ``pod`` (DCN) and ``expert`` when present: the expert axis
+    carries distinct tokens like any data axis — only MoE expert weights
+    treat it specially (see :func:`param_pspecs`)."""
+    names = tuple(a for a in ("pod", "data", "expert")
+                  if a in mesh.axis_names)
     if not names:
         return None
     return names[0] if len(names) == 1 else names
@@ -87,10 +98,13 @@ _ROW_PARALLEL = frozenset({"wo", "w_down", "out_proj"})
 _REPLICATED = frozenset({
     "scale", "bias", "dt_bias", "a_log", "d_skip", "conv_b", "step",
 })
+# MoE routed-expert tensors (leading E dim under params["moe"]): the E dim
+# shards over the ``expert`` axis when the mesh has one.
+_EXPERT_PARALLEL = frozenset({"w_up", "w_gate", "w_down"})
 
 
 def _param_rule(name: str, shape: Tuple[int, ...], mesh,
-                axes: MeshAxes) -> P:
+                axes: MeshAxes, parent: str = "") -> P:
     d, m = axes.data, axes.model
     if name in _REPLICATED or len(shape) == 0:
         return P()
@@ -110,6 +124,11 @@ def _param_rule(name: str, shape: Tuple[int, ...], mesh,
         base = (None, d)
     else:
         return P()
+    # routed-expert tensors carry a leading E dim ahead of the (in, out)
+    # pair; ``parent == "moe"`` distinguishes them from the same-named
+    # dense projections (incl. the shared expert under "shared")
+    if parent == "moe" and name in _EXPERT_PARALLEL and len(shape) >= 3:
+        base = (axes.expert,) + base
     k = min(len(base), len(shape))
     base = base[len(base) - k:]
     tail = shape[len(shape) - k:]
@@ -118,8 +137,10 @@ def _param_rule(name: str, shape: Tuple[int, ...], mesh,
     return P(*entries)
 
 
-def _leaf_name(path) -> str:
-    last = path[-1]
+def _leaf_name(path, idx: int = -1) -> str:
+    if len(path) < -idx:
+        return ""
+    last = path[idx]
     return str(getattr(last, "key", getattr(last, "idx", last)))
 
 
@@ -128,11 +149,14 @@ def param_pspecs(cfg: ModelConfig, mesh, params,
     """PartitionSpec tree for a parameter pytree (arrays or shape structs).
 
     Parameters stay *within-pod*: the default axes never shard over ``pod``
-    — only the gradient all-reduce crosses the DCN (DESIGN §6)."""
+    — only the gradient all-reduce crosses the DCN (DESIGN §6).  MoE
+    routed-expert weights additionally shard their leading E dim over the
+    ``expert`` axis when the mesh has one (expert parallelism)."""
     del cfg  # rules are shape/name driven; cfg kept for API stability
     axes = axes or MeshAxes()
     flat, treedef = jax.tree_util.tree_flatten_with_path(params)
-    specs = [_param_rule(_leaf_name(path), tuple(leaf.shape), mesh, axes)
+    specs = [_param_rule(_leaf_name(path), tuple(leaf.shape), mesh, axes,
+                         parent=_leaf_name(path, -2))
              for path, leaf in flat]
     return jax.tree_util.tree_unflatten(treedef, specs)
 

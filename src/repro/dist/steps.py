@@ -23,11 +23,18 @@ Responsibilities:
     every TP collective of dense blocks for the conduit-scheduled PGAS
     rings of ``models/artblock.py`` (the paper's ART as a training
     feature); the legacy boolean ``StepConfig.art_tp`` still works through
-    a deprecation shim.  The cross-pod gradient hop has its own PGAS
-    conduit in ``dist/grad_sync.py`` (operating on per-pod gradients,
-    pod-sharded layout); wiring it *inside* this GSPMD step would require
-    partial-manual shard_map over ``pod``, which the pinned jax's
-    partitioner rejects — see DESIGN §6 and the ROADMAP open item.
+    a deprecation shim.  A non-``xla`` ``moe`` transport swaps the dense
+    GSPMD MoE layer for the expert-parallel bucketed all_to_all dispatch
+    of ``models/moe_ep.py`` whenever the mesh has an ``expert`` axis
+    (falls back to dense otherwise — same numerics).  The cross-pod
+    gradient hop has its own PGAS conduit in ``dist/grad_sync.py``
+    (operating on per-pod gradients, pod-sharded layout); wiring it
+    *inside* this GSPMD step would require partial-manual shard_map over
+    ``pod``, which the pinned jax's partitioner rejects — see DESIGN §6
+    and the ROADMAP open item.
+
+See ``docs/api.md`` for the public surface and ``docs/transports.md`` for
+the op × transport support matrix these policies select from.
 """
 
 from __future__ import annotations
@@ -57,6 +64,7 @@ from repro.dist.sharding import (
 )
 from repro.models import artblock
 from repro.models import layers as L
+from repro.models import moe_ep
 from repro.models.decode import decode_step, init_cache
 from repro.models.model import init_params
 from repro.models.prefill import prefill
@@ -72,17 +80,20 @@ from repro.optim import (
 
 @dataclasses.dataclass(frozen=True)
 class TransportPolicy:
-    """Conduit transport per traffic class (DESIGN §6).
+    """Conduit transport per traffic class (DESIGN §6, docs/transports.md).
 
     Each field names a transport registered in ``repro.core.conduit``
     (``xla`` | ``ring`` | ``bidir`` | ``auto``).  ``xla`` means "leave the
     collective to the GSPMD partitioner" — no manual region is built.
 
-    ``tp``         — TP collectives of dense blocks (QKV/O, up/down rings);
-    ``moe``        — MoE dispatch all-to-all (today's MoE layers dispatch
-                     densely under GSPMD, so this class only binds once a
-                     manual dispatch path exists; the sweep benchmark and
-                     the a2a conduit exercise it);
+    ``tp``         — TP collectives of dense blocks (QKV/O, up/down rings):
+                     any ring family routes them through the ART schedules
+                     of ``models/artblock.py`` over a ``Conduit("model")``;
+    ``moe``        — MoE expert dispatch: any non-``xla`` value routes
+                     token buckets through the conduit ``all_to_all`` on
+                     the ``expert`` mesh axis (``models/moe_ep.py``);
+                     meshes without an ``expert`` axis keep the dense
+                     GSPMD capacity einsums regardless of this field;
     ``cross_pod``  — the DCN gradient hop (``dist/grad_sync.py``);
     ``compress_cross_pod`` — wrap the cross-pod conduit in EF-int8
                      (``grad_sync.Int8Conduit``);
@@ -108,6 +119,7 @@ class TransportPolicy:
                     f"TransportPolicy.{cls}={name!r} not in {valid}")
 
     def tp_conduit(self, axis: str = "model") -> Conduit:
+        """The conduit handle the ART-TP schedules run over."""
         return Conduit(axis=axis, transport=self.tp,
                        chunk_bytes=self.chunk_bytes)
 
@@ -275,6 +287,26 @@ def _art_runner(cfg: ModelConfig, mesh,
 
 
 # ---------------------------------------------------------------------------
+# expert-parallel MoE runner (conduit all_to_all dispatch)
+# ---------------------------------------------------------------------------
+
+
+def _moe_runner(cfg: ModelConfig, mesh,
+                policy: TransportPolicy) -> Optional[Callable]:
+    """MoE-layer runner with expert dispatch on the conduit ``all_to_all``.
+
+    ``policy.moe="xla"`` (or a mesh without a usable ``expert`` axis)
+    returns None — the step keeps the dense GSPMD capacity einsums, same
+    numerics.  Otherwise tokens ride the bucketed exchange of
+    ``models/moe_ep.py`` over ``Conduit("expert", policy.moe)``.
+    """
+    if policy.moe == "xla" or cfg.family != "moe":
+        return None
+    return moe_ep.build_moe_ep_runner(
+        cfg, mesh, transport=policy.moe, chunk_bytes=policy.chunk_bytes)
+
+
+# ---------------------------------------------------------------------------
 # init
 # ---------------------------------------------------------------------------
 
@@ -311,11 +343,14 @@ def build_train_step(cfg: ModelConfig, mesh, scfg: StepConfig,
     bspecs = batch_pspecs(mesh, bshape)
     acfg = _adamw_config(scfg)
     constrain = _constraint_fn(cfg, mesh, scfg)
-    runner = _art_runner(cfg, mesh, scfg.resolved_transport())
+    policy = scfg.resolved_transport()
+    runner = _art_runner(cfg, mesh, policy)
+    moe_runner = _moe_runner(cfg, mesh, policy)
     n_micro = max(int(scfg.microbatches), 1)
 
     def loss_fn(params, microbatch):
-        with activation_sharding(constrain, tp_block=runner):
+        with activation_sharding(constrain, tp_block=runner,
+                                 moe_ffn=moe_runner):
             return chunked_ce_loss(
                 cfg, params, microbatch, seq_chunk=scfg.seq_chunk,
                 z_loss=scfg.z_loss, moe_aux_weight=scfg.moe_aux_weight)

@@ -1,6 +1,6 @@
 """Pure-JAX model zoo (no flax): layers, family assembly, decode path."""
 
-from repro.models import decode, layers, model
+from repro.models import decode, layers, model, moe_ep
 from repro.models.decode import decode_step, init_cache
 from repro.models.model import (
     count_params_analytic,
@@ -8,9 +8,11 @@ from repro.models.model import (
     init_params,
     loss_fn,
 )
+from repro.models.moe_ep import build_moe_ep_runner, supports_moe_ep
 
 __all__ = [
-    "decode", "layers", "model",
+    "decode", "layers", "model", "moe_ep",
     "decode_step", "init_cache",
     "count_params_analytic", "forward", "init_params", "loss_fn",
+    "build_moe_ep_runner", "supports_moe_ep",
 ]

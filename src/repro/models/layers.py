@@ -466,6 +466,69 @@ def _expert_ffn(cfg: ModelConfig, params: Params, xe: jnp.ndarray) -> jnp.ndarra
     return jnp.einsum("...ecf,efd->...ecd", up, params["w_down"].astype(cd))
 
 
+def moe_route(cfg: ModelConfig, router: jnp.ndarray, xc: jnp.ndarray):
+    """Top-k routing + per-row capacity bookkeeping.
+
+    The single owner of the routing math: both the GSPMD dense path
+    (:func:`moe`) and the expert-parallel dispatch path
+    (``models/moe_ep.py``) call it, which is what makes the two paths
+    token-for-token equivalent (same slots, same drops).
+
+    Returns ``(weights (B,S,K) normalized, idx (B,S,K), keep (B,S,K) bool,
+    dst (B,S,K) flat slot with ``e*cap`` as the overflow bin, cap)``.
+    """
+    b, s, _ = xc.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    logits = jnp.einsum("bsd,de->bse", xc.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, idx = lax.top_k(probs, k)                   # (B, S, K)
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+    cap = max(1, int(s * k / e * cfg.capacity_factor))
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)      # (B, S, K, E)
+    flat_choice = onehot.reshape(b, s * k, e)
+    pos_in_e = jnp.cumsum(flat_choice, axis=1) - flat_choice  # (B, S*K, E)
+    slot = jnp.take_along_axis(
+        pos_in_e.reshape(b, s, k, e), idx[..., None], axis=-1
+    )[..., 0]                                              # (B, S, K)
+    keep = (slot < cap)
+    dst = jnp.where(keep, idx * cap + slot, e * cap)       # overflow bin
+    return weights, idx, keep, dst, cap
+
+
+def moe_dispatch(xc: jnp.ndarray, dst: jnp.ndarray, keep: jnp.ndarray,
+                 e: int, cap: int) -> jnp.ndarray:
+    """Scatter tokens into the per-expert capacity buffer.
+
+    ``xc``: (B, S, D); ``dst``/``keep`` from :func:`moe_route`.  Returns the
+    (B, E, cap, D) buffer — dropped (over-capacity) tokens land in the
+    overflow bin and are sliced away.
+    """
+    b, s, d = xc.shape
+    k = dst.shape[-1]
+    xin = jnp.zeros((b, e * cap + 1, d), xc.dtype)
+    src = jnp.broadcast_to(xc[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
+    xin = xin.at[jnp.arange(b)[:, None], dst.reshape(b, s * k)].add(
+        src * keep.reshape(b, s * k, 1))
+    return xin[:, : e * cap].reshape(b, e, cap, d)
+
+
+def moe_combine(ye: jnp.ndarray, dst: jnp.ndarray, keep: jnp.ndarray,
+                weights: jnp.ndarray) -> jnp.ndarray:
+    """Gather expert outputs back to token order and mix by router weights.
+
+    ``ye``: (B, E, cap, D) expert outputs; dropped tokens contribute zero
+    (residual fallthrough happens at the block level).  Returns (B, S, D).
+    """
+    b, e, cap, d = ye.shape
+    s, k = dst.shape[1], dst.shape[2]
+    ye = ye.reshape(b, e * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((b, 1, d), ye.dtype)], axis=1)
+    gathered = jnp.take_along_axis(
+        ye, dst.reshape(b, s * k, 1), axis=1
+    ).reshape(b, s, k, d)
+    return (gathered * (weights * keep).astype(ye.dtype)[..., None]).sum(axis=2)
+
+
 def moe(cfg: ModelConfig, params: Params, x: jnp.ndarray,
         dense_combine: bool = False) -> jnp.ndarray:
     """x: (B, S, D).  Routing/capacity are computed *per batch row*, so the
@@ -479,43 +542,24 @@ def moe(cfg: ModelConfig, params: Params, x: jnp.ndarray,
     gather/scatter (and its collectives) disappear.
     """
     b, s, d = x.shape
-    e, k = cfg.n_experts, cfg.experts_per_token
+    e = cfg.n_experts
     cd = _cdtype(cfg)
     xc = x.astype(cd)
 
-    logits = jnp.einsum("bsd,de->bse", xc.astype(jnp.float32),
-                        params["router"])
-    probs = jax.nn.softmax(logits, axis=-1)
-    weights, idx = lax.top_k(probs, k)                   # (B, S, K)
-    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
-
     if dense_combine:
+        # routing still owned by moe_route; the capacity bookkeeping it
+        # also returns is unused here and DCE'd under jit
+        weights, idx, _, _, _ = moe_route(cfg, params["router"], xc)
         combine = jnp.zeros((b, s, e), jnp.float32).at[
             jnp.arange(b)[:, None, None], jnp.arange(s)[None, :, None], idx
         ].add(weights)
         dense = _expert_ffn(cfg, params, jnp.broadcast_to(xc[:, None], (b, e, s, d)))
         y = jnp.einsum("besd,bse->bsd", dense, combine.astype(cd))
     else:
-        cap = max(1, int(s * k / e * cfg.capacity_factor))
-        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)      # (B, S, K, E)
-        flat_choice = onehot.reshape(b, s * k, e)
-        pos_in_e = jnp.cumsum(flat_choice, axis=1) - flat_choice  # (B, S*K, E)
-        slot = jnp.take_along_axis(
-            pos_in_e.reshape(b, s, k, e), idx[..., None], axis=-1
-        )[..., 0]                                              # (B, S, K)
-        keep = (slot < cap)
-        dst = jnp.where(keep, idx * cap + slot, e * cap)       # overflow bin
-        xin = jnp.zeros((b, e * cap + 1, d), cd)
-        src = jnp.broadcast_to(xc[:, :, None, :], (b, s, k, d)).reshape(b, s * k, d)
-        xin = xin.at[jnp.arange(b)[:, None], dst.reshape(b, s * k)].add(
-            src * keep.reshape(b, s * k, 1))
-        xe = xin[:, : e * cap].reshape(b, e, cap, d)
-        ye = _expert_ffn(cfg, params, xe).reshape(b, e * cap, d)
-        ye = jnp.concatenate([ye, jnp.zeros((b, 1, d), ye.dtype)], axis=1)
-        gathered = jnp.take_along_axis(
-            ye, dst.reshape(b, s * k, 1), axis=1
-        ).reshape(b, s, k, d)
-        y = (gathered * (weights * keep).astype(cd)[..., None]).sum(axis=2)
+        weights, _, keep, dst, cap = moe_route(cfg, params["router"], xc)
+        xe = moe_dispatch(xc, dst, keep, e, cap)
+        ye = _expert_ffn(cfg, params, xe)
+        y = moe_combine(ye, dst, keep, weights)
 
     if cfg.n_shared_experts:
         y = y + mlp(cfg, params["shared"], xc)

@@ -23,7 +23,7 @@ from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.models import layers as L
-from repro.models.shardctx import constrain, tp_block_runner
+from repro.models.shardctx import constrain, moe_ffn_runner, tp_block_runner
 
 Params = Dict[str, Any]
 
@@ -151,7 +151,13 @@ def _moe_block(cfg, p, x, positions):
     a_in = constrain(L.apply_norm(cfg, p["ln1"], x), "block_input")
     h = x + L.attention(cfg, p["attn"], a_in, positions)
     normed = constrain(L.apply_norm(cfg, p["ln2"], h), "block_input")
-    h = h + L.moe(cfg, p["moe"], normed)
+    ep = moe_ffn_runner()
+    if ep is not None:
+        # expert-parallel dispatch over the conduit all_to_all
+        # (models/moe_ep.py, installed by dist/steps.build_train_step)
+        h = h + ep(cfg, p["moe"], normed)
+    else:
+        h = h + L.moe(cfg, p["moe"], normed)
     aux = L.moe_aux_loss(cfg, normed, p["moe"])
     return h, aux
 

@@ -1,0 +1,165 @@
+"""Expert-parallel MoE dispatch over the conduit ``all_to_all``.
+
+The GSPMD path (``layers.py::moe``) keeps every expert's weights on every
+rank and lets the partitioner slice the capacity einsums; expert traffic
+never appears as an ``all_to_all`` on the wire, so ``TransportPolicy.moe``
+had nothing to bind.  This module is the manual counterpart: experts are
+*sharded* over an ``expert`` mesh axis, and tokens travel to their experts
+through the conduit registry — the FSHMEM claim (one-sided PGAS schedules
+carrying application traffic classes) applied to MoE routing, the way
+Sharma & Chow's PGAS communication library routes application scatter/
+gather through the same one-sided primitives as bulk transfers.
+
+Dataflow (inside one ``jax.shard_map`` region over the full mesh):
+
+1. every rank top-k routes its *local* tokens with the exact per-row
+   capacity bookkeeping of the dense path (``layers.moe_route`` /
+   ``layers.moe_dispatch`` — shared code, so slots and capacity drops are
+   token-for-token identical);
+2. the (B_loc, E, cap, D) dispatch buffer is bucketed per destination
+   expert shard — ``(n, E/n, B_loc, cap, D)``, leading dim = the expert
+   axis size — and exchanged with ``Conduit.all_to_all`` (``xla`` |
+   ``ring`` | ``bidir`` | ``auto``, honoring ``chunk_bytes``);
+3. each rank applies its E/n local experts (``layers._expert_ffn``) to
+   every arriving bucket;
+4. results ride the reverse ``all_to_all`` home and are combined by router
+   weight (``layers.moe_combine``) — over-capacity tokens contribute zero
+   and fall through on the block's residual path, exactly like the dense
+   path.
+
+The batch is sharded over **every** mesh axis inside the region (not just
+the data axes): each rank then differentiates distinct tokens, so the
+``psum`` that ``shard_map``'s transpose inserts for the replicated router
+and the expert-replicated weights is a true sum of partials — the same
+reason ``models/artblock.py`` only differentiates tp-sharded tensors.
+
+Equivalence across transports and odd/even expert-axis sizes is asserted
+by ``tests/test_moe_ep.py``; the dispatch-size crossover is swept into
+``BENCH_moe.json`` by ``benchmarks/moe_dispatch.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.conduit import Conduit
+from repro.models import layers as L
+
+
+def supports_moe_ep(cfg: ModelConfig, mesh) -> bool:
+    """Whether (cfg, mesh) can take the expert-parallel dispatch path.
+
+    Requires an ``expert`` mesh axis of extent > 1 that divides
+    ``cfg.n_experts``; anything else falls back to the dense GSPMD layer
+    (same numerics, no manual region).
+    """
+    if "expert" not in mesh.axis_names or mesh.shape["expert"] <= 1:
+        return False
+    n = mesh.shape["expert"]
+    return bool(cfg.n_experts) and cfg.n_experts % n == 0
+
+
+def moe_ep_ffn(cfg: ModelConfig, x, router, w_up, w_gate, w_down, *,
+               conduit: Conduit):
+    """The routed MoE FFN, manual over the mesh (call inside ``shard_map``).
+
+    ``x``: the local (B_loc, S, D) token shard; ``router``: the full (D, E)
+    router (replicated); ``w_up``/``w_gate``/``w_down``: this rank's expert
+    shard, leading dim E/n.  Returns (B_loc, S, D) in compute dtype — the
+    shared expert and the residual add stay outside the region.
+    """
+    n = lax.axis_size(conduit.axis)
+    e = cfg.n_experts
+    e_loc = e // n
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    b = xc.shape[0]
+
+    weights, _, keep, dst, cap = L.moe_route(cfg, router, xc)
+    xe = L.moe_dispatch(xc, dst, keep, e, cap)            # (b, E, cap, D)
+
+    # bucket per destination expert shard: expert q*e_loc+j lives on rank q
+    send = xe.transpose(1, 0, 2, 3).reshape(n, e_loc, b, cap, -1)
+    recv = conduit.all_to_all(send)                       # slot q: from rank q
+
+    p_loc = {"w_up": w_up, "w_down": w_down}
+    if w_gate is not None:
+        p_loc["w_gate"] = w_gate
+    # (n, b, e_loc, cap, D): leading (source rank, source row) batches the
+    # expert einsums exactly like the dense path's (b,) batch
+    ye = L._expert_ffn(cfg, p_loc, recv.transpose(0, 2, 1, 3, 4))
+
+    back = conduit.all_to_all(ye.transpose(0, 2, 1, 3, 4))
+    ye_full = back.reshape(e, b, cap, -1).transpose(1, 0, 2, 3)
+    return L.moe_combine(ye_full, dst, keep, weights)
+
+
+def _ep_gated(cfg, x, router, w_up, w_gate, w_down, *, conduit):
+    return moe_ep_ffn(cfg, x, router, w_up, w_gate, w_down, conduit=conduit)
+
+
+def _ep_ungated(cfg, x, router, w_up, w_down, *, conduit):
+    return moe_ep_ffn(cfg, x, router, w_up, None, w_down, conduit=conduit)
+
+
+def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
+                        chunk_bytes: Optional[int] = None
+                        ) -> Optional[Callable]:
+    """MoE-layer runner routing expert dispatch through the conduit.
+
+    Returns ``runner(cfg, moe_params, x) -> y`` — a drop-in for
+    ``layers.moe`` that the step builder installs via
+    ``models/shardctx.py`` — or ``None`` when (cfg, mesh) cannot take the
+    expert-parallel path (the step then keeps the dense GSPMD layer).
+    A batch that does not divide the mesh falls back per call, so prefill
+    or eval shapes never fail to trace.
+
+    On meshes that also carry ``data``/``model`` axes, the region's weight
+    specs (``P("expert", None, None)``) regather each expert shard's full
+    (D, F) weights from their at-rest data×model placement per layer call
+    — the same FSDP-style weight gather the ART-TP runner pays.  Running
+    TP *inside* the expert region (model-sharded F with an in-region
+    reduce) is future work; until then, size the expert axis so E/n
+    expert weights fit a rank.
+    """
+    if not supports_moe_ep(cfg, mesh):
+        return None
+    conduit = Conduit(axis="expert", transport=transport,
+                      chunk_bytes=chunk_bytes)
+    axes = tuple(mesh.axis_names)
+    act = P(axes, None, None)               # batch over EVERY mesh axis
+    wspec = P("expert", None, None)
+    rspec = P(None, None)
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def runner(cfg_: ModelConfig, p, x):
+        if x.shape[0] % mesh.size:
+            return L.moe(cfg_, p, x)        # indivisible batch: dense path
+        w_gate = p.get("w_gate")
+        if w_gate is not None:
+            fn = jax.shard_map(
+                functools.partial(_ep_gated, cfg_, conduit=conduit),
+                mesh=mesh, in_specs=(act, rspec, wspec, wspec, wspec),
+                out_specs=act, check_vma=False)
+            y = fn(x, p["router"], p["w_up"], w_gate, p["w_down"])
+        else:
+            fn = jax.shard_map(
+                functools.partial(_ep_ungated, cfg_, conduit=conduit),
+                mesh=mesh, in_specs=(act, rspec, wspec, wspec),
+                out_specs=act, check_vma=False)
+            y = fn(x, p["router"], p["w_up"], p["w_down"])
+        if cfg_.n_shared_experts:
+            y = y + L.mlp(cfg_, p["shared"], x.astype(cd))
+        return y.astype(x.dtype)
+
+    return runner
+
+
+__all__ = ["supports_moe_ep", "moe_ep_ffn", "build_moe_ep_runner"]

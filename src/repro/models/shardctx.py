@@ -20,22 +20,32 @@ from typing import Callable, Optional
 
 _ACTIVE: Optional[Callable] = None
 _TP_BLOCK: Optional[Callable] = None
+_MOE_FFN: Optional[Callable] = None
 
 
 @contextlib.contextmanager
-def activation_sharding(fn: Callable, tp_block: Optional[Callable] = None):
-    """``fn(x, tag)`` applies sharding constraints; ``tp_block`` (optional)
-    is the ART-TP dense-block runner installed by
-    ``repro.dist.steps.build_train_step`` when ``StepConfig.art_tp`` is on:
-    ``tp_block(cfg, layer_params, x, positions) -> x`` executes the block
-    with hand-scheduled ring collectives (models/artblock.py)."""
-    global _ACTIVE, _TP_BLOCK
-    old, old_tp = _ACTIVE, _TP_BLOCK
-    _ACTIVE, _TP_BLOCK = fn, tp_block
+def activation_sharding(fn: Callable, tp_block: Optional[Callable] = None,
+                        moe_ffn: Optional[Callable] = None):
+    """``fn(x, tag)`` applies sharding constraints.
+
+    ``tp_block`` (optional) is the ART-TP dense-block runner installed by
+    ``repro.dist.steps.build_train_step`` when ``TransportPolicy.tp`` names
+    a ring family: ``tp_block(cfg, layer_params, x, positions) -> x``
+    executes the block with hand-scheduled ring collectives
+    (models/artblock.py).
+
+    ``moe_ffn`` (optional) is the expert-parallel MoE runner installed when
+    ``TransportPolicy.moe`` names a conduit transport and the mesh has an
+    ``expert`` axis: ``moe_ffn(cfg, moe_params, x) -> y`` replaces
+    ``layers.moe`` with the bucketed all_to_all dispatch of
+    ``models/moe_ep.py``."""
+    global _ACTIVE, _TP_BLOCK, _MOE_FFN
+    old, old_tp, old_moe = _ACTIVE, _TP_BLOCK, _MOE_FFN
+    _ACTIVE, _TP_BLOCK, _MOE_FFN = fn, tp_block, moe_ffn
     try:
         yield
     finally:
-        _ACTIVE, _TP_BLOCK = old, old_tp
+        _ACTIVE, _TP_BLOCK, _MOE_FFN = old, old_tp, old_moe
 
 
 def constrain(x, tag: str):
@@ -46,3 +56,8 @@ def constrain(x, tag: str):
 
 def tp_block_runner() -> Optional[Callable]:
     return _TP_BLOCK
+
+
+def moe_ffn_runner() -> Optional[Callable]:
+    """The installed expert-parallel MoE runner, or None (dense GSPMD)."""
+    return _MOE_FFN

@@ -1,0 +1,275 @@
+"""Expert-parallel MoE dispatch (``models/moe_ep.py``).
+
+The conduit layer's last unbound traffic class: EP dispatch must equal the
+dense-GSPMD capacity path token-for-token (same routing, same capacity
+drops) for every registered ``all_to_all`` transport and for odd/even
+expert-axis sizes; the train step must select it from
+``TransportPolicy.moe`` and produce the same update as the dense path;
+and the bucketed exchange must verifiably run through the conduit
+``all_to_all`` registry (asserted with a counting probe transport).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, get_ep_preset
+from repro.core import conduit
+from repro.data import DataConfig, SyntheticLM, batch_specs
+from repro.dist.sharding import dp_axes, param_pspecs
+from repro.dist.steps import (
+    StepConfig, TransportPolicy, build_init, build_train_step)
+from repro.models import layers as L
+from repro.models import moe_ep
+from repro.models.model import init_params
+
+ALL_TRANSPORTS = ("xla", "ring", "bidir", "auto")
+
+
+def _expert_mesh(n_expert, data=1):
+    devs = np.array(jax.devices()[: data * n_expert])
+    if data == 1:
+        return jax.sharding.Mesh(devs, ("expert",))
+    return jax.sharding.Mesh(devs.reshape(data, n_expert),
+                             ("data", "expert"))
+
+
+def _moe_layer(cfg, seed=0):
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    return jax.tree.map(lambda a: a[0], params["layers"]["moe"])
+
+
+# ---------------------------------------------------------------------------
+# layer-level equivalence: every transport × odd/even expert-axis sizes
+# ---------------------------------------------------------------------------
+
+
+class TestLayerEquivalence:
+    @pytest.mark.parametrize("transport", ALL_TRANSPORTS)
+    @pytest.mark.parametrize("n_exp", [2, 4])
+    def test_matches_dense_even(self, transport, n_exp):
+        cfg = get_config("grok-1-314b").reduced()     # 4 experts, top-2
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model))
+        dense = L.moe(cfg, moe_p, x)
+        mesh = _expert_mesh(n_exp)
+        runner = moe_ep.build_moe_ep_runner(cfg, mesh, transport=transport)
+        assert runner is not None
+        got = jax.jit(lambda p, v: runner(cfg, p, v))(moe_p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("transport", ("ring", "bidir"))
+    def test_matches_dense_odd_axis(self, transport):
+        """3 expert shards (odd — the ring schedules' hard case)."""
+        cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                                  n_experts=6)
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(2), (3, 8, cfg.d_model))
+        dense = L.moe(cfg, moe_p, x)
+        mesh = _expert_mesh(3)
+        runner = moe_ep.build_moe_ep_runner(cfg, mesh, transport=transport)
+        assert runner is not None
+        got = jax.jit(lambda p, v: runner(cfg, p, v))(moe_p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_shared_expert_arch(self):
+        """llama4-scout: shared expert rides outside the manual region."""
+        cfg = get_config("llama4-scout-17b-a16e").reduced()
+        assert cfg.n_shared_experts
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(3), (4, 8, cfg.d_model))
+        dense = L.moe(cfg, moe_p, x)
+        runner = moe_ep.build_moe_ep_runner(cfg, _expert_mesh(2),
+                                            transport="ring")
+        got = jax.jit(lambda p, v: runner(cfg, p, v))(moe_p, x)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_grads_match_dense(self):
+        """The psum the shard_map transpose inserts for the replicated
+        router / expert-replicated weights must be a true sum of distinct
+        token partials — grads equal the dense path's."""
+        cfg = get_config("grok-1-314b").reduced()
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(4), (4, 8, cfg.d_model))
+        runner = moe_ep.build_moe_ep_runner(cfg, _expert_mesh(2, data=2),
+                                            transport="ring")
+        g_dense = jax.grad(lambda p: (L.moe(cfg, p, x) ** 2).sum())(moe_p)
+        g_ep = jax.jit(jax.grad(
+            lambda p: (runner(cfg, p, x) ** 2).sum()))(moe_p)
+        for a, b in zip(jax.tree.leaves(g_dense), jax.tree.leaves(g_ep)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# fallbacks (drop to dense, never fail to trace)
+# ---------------------------------------------------------------------------
+
+
+class TestFallbacks:
+    def test_no_expert_axis_returns_none(self, mesh22):
+        cfg = get_config("grok-1-314b").reduced()
+        assert moe_ep.build_moe_ep_runner(cfg, mesh22,
+                                          transport="ring") is None
+
+    def test_indivisible_experts_returns_none(self):
+        cfg = get_config("grok-1-314b").reduced()      # 4 experts
+        assert moe_ep.build_moe_ep_runner(cfg, _expert_mesh(3),
+                                          transport="ring") is None
+
+    def test_indivisible_batch_falls_back_to_dense(self):
+        cfg = get_config("grok-1-314b").reduced()
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(5), (3, 8, cfg.d_model))
+        runner = moe_ep.build_moe_ep_runner(cfg, _expert_mesh(2),
+                                            transport="ring")
+        got = runner(cfg, moe_p, x)                   # B=3 % mesh 2 != 0
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(L.moe(cfg, moe_p, x)))
+
+
+# ---------------------------------------------------------------------------
+# the exchange really rides the conduit registry
+# ---------------------------------------------------------------------------
+
+
+class TestConduitBinding:
+    def test_dispatch_goes_through_registry(self):
+        """Register a counting probe transport for all_to_all and name it
+        in TransportPolicy.moe: tracing the EP layer must invoke it (twice
+        per layer — dispatch + return)."""
+        calls = []
+
+        @conduit.register("all_to_all", "probe")
+        def _probe(x, *, axis, chunk_bytes=None):
+            calls.append(x.shape)
+            return conduit.resolve("all_to_all", "ring")(
+                x, axis=axis, chunk_bytes=chunk_bytes)
+
+        try:
+            TransportPolicy(moe="probe")              # registry-validated
+            cfg = get_config("grok-1-314b").reduced()
+            moe_p = _moe_layer(cfg)
+            x = jax.random.normal(jax.random.PRNGKey(6), (4, 8, cfg.d_model))
+            runner = moe_ep.build_moe_ep_runner(cfg, _expert_mesh(2),
+                                                transport="probe")
+            got = jax.jit(lambda p, v: runner(cfg, p, v))(moe_p, x)
+            assert len(calls) == 2, calls              # there and back
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(L.moe(cfg, moe_p, x)),
+                                       rtol=1e-6, atol=1e-6)
+        finally:
+            del conduit._REGISTRY[("all_to_all", "probe")]
+        with pytest.raises(ValueError):
+            TransportPolicy(moe="probe")               # gone again
+
+
+# ---------------------------------------------------------------------------
+# sharding rules: the expert axis
+# ---------------------------------------------------------------------------
+
+
+class TestExpertSharding:
+    def test_expert_axis_on_moe_params(self):
+        cfg = get_config("llama4-scout-17b-a16e").reduced()
+        mesh = _expert_mesh(2, data=2)
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        specs = param_pspecs(cfg, mesh, shape)
+        flat = {"/".join(str(getattr(k, "key", k)) for k in path): s
+                for path, s in
+                jax.tree_util.tree_flatten_with_path(specs)[0]}
+        # routed experts: (layer, E, in, out) -> E on "expert"
+        assert flat["layers/moe/w_up"] == P(None, "expert", "data", None)
+        assert flat["layers/moe/w_down"] == P(None, "expert", None, "data")
+        # router replicated over experts; shared expert is a dense MLP
+        assert flat["layers/moe/router"][-1] is None
+        assert "expert" not in tuple(flat["layers/moe/shared/w_up"])
+        assert flat["layers/moe/shared/w_up"] == P(None, "data", None)
+
+    def test_no_expert_axis_specs_unchanged(self, mesh22):
+        cfg = get_config("grok-1-314b").reduced()
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        specs = param_pspecs(cfg, mesh22, shape)
+        flat = {"/".join(str(getattr(k, "key", k)) for k in path): s
+                for path, s in
+                jax.tree_util.tree_flatten_with_path(specs)[0]}
+        assert flat["layers/moe/w_up"] == P(None, None, "data", "model")
+
+    def test_dp_axes_include_expert(self):
+        mesh = _expert_mesh(2, data=2)
+        assert dp_axes(mesh) == ("data", "expert")
+
+
+# ---------------------------------------------------------------------------
+# conduit all_to_all: tiled leading dims (the xla-transport semantics)
+# ---------------------------------------------------------------------------
+
+
+class TestTiledAllToAll:
+    @pytest.mark.parametrize("transport", ("ring", "bidir"))
+    def test_tiled_matches_xla(self, transport):
+        n = 4
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:n]), ("x",))
+        x = jax.random.normal(jax.random.PRNGKey(7), (n, 2 * n, 3))
+        outs = {}
+        for t in (transport, "xla"):
+            cd = conduit.Conduit("x", t)
+            outs[t] = np.asarray(jax.jit(jax.shard_map(
+                lambda v, cd=cd: cd.all_to_all(v[0])[None], mesh=mesh,
+                in_specs=P("x"), out_specs=P("x")))(x))
+        np.testing.assert_array_equal(outs[transport], outs["xla"])
+
+
+# ---------------------------------------------------------------------------
+# the train step: TransportPolicy.moe selects EP, update matches dense
+# ---------------------------------------------------------------------------
+
+
+class TestEPTrainStep:
+    def test_ep_step_matches_dense_gspmd(self):
+        """Acceptance: moe="ring" and moe="auto" produce the same MoE layer
+        output / loss / grads as the dense-GSPMD step (identical capacity
+        drops by construction)."""
+        cfg = get_config("grok-1-314b").reduced()
+        mesh = _expert_mesh(2, data=2)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=17,
+                                      global_batch=8))
+        batch = data.global_batch(0)
+        bshape = batch_specs(16, 8, cfg.vocab_size)
+        outs = {}
+        for moe_t in ("xla", "ring", "auto"):
+            scfg = StepConfig(microbatches=2, seq_chunk=8, warmup_steps=2,
+                              total_steps=10,
+                              transport=TransportPolicy(moe=moe_t))
+            bundle = build_train_step(cfg, mesh, scfg, bshape)
+            init_fn, _ = build_init(cfg, mesh, scfg)
+            params, opt = init_fn(jax.random.PRNGKey(0))
+            _, _, m = bundle.fn(params, opt, batch, jnp.int32(0))
+            outs[moe_t] = (float(m["loss"]), float(m["grad_norm"]),
+                           float(m["moe_aux"]))
+        for moe_t in ("ring", "auto"):
+            np.testing.assert_allclose(outs["xla"][0], outs[moe_t][0],
+                                       rtol=1e-5)
+            np.testing.assert_allclose(outs["xla"][1], outs[moe_t][1],
+                                       rtol=1e-4)
+            np.testing.assert_allclose(outs["xla"][2], outs[moe_t][2],
+                                       rtol=1e-5)
+
+    def test_ep_presets_build(self):
+        """Every shipped EP preset wires a valid policy end to end
+        (get_ep_preset validates arch family / expert-axis divisibility)."""
+        from repro.configs import EP_PRESET_NAMES
+
+        for name in EP_PRESET_NAMES:
+            preset = get_ep_preset(name)
+            assert preset.step.resolved_transport().moe == "auto"
+            assert preset.config.n_experts % preset.expert_axis == 0

@@ -1,0 +1,128 @@
+"""Docs hygiene checker: markdown links + docstring coverage.
+
+Two checks, both exit-code gated (CI's docs job runs this file):
+
+1. **Links** — every relative markdown link in ``docs/``, ``DESIGN.md``,
+   ``ROADMAP.md`` and ``examples/README.md`` must resolve to an existing
+   file, and every ``#anchor`` must match a heading slug in its target
+   (GitHub slug rules: lowercase, punctuation dropped, spaces → dashes).
+   External ``http(s)`` links are not fetched.
+
+2. **Docstrings** — every public module / class / function / method in
+   ``src/repro/core`` and ``src/repro/dist`` must carry a docstring (the
+   AST mirror of ruff's D100–D103, so the gate also runs where ruff is
+   not installed; CI additionally runs the real ruff D-subset).
+
+Run:  python tools/docs_check.py
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_FILES = ["DESIGN.md", "ROADMAP.md", "examples/README.md"]
+DOCSTRING_ROOTS = ["src/repro/core", "src/repro/dist"]
+
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\s-]", "", h, flags=re.UNICODE)
+    return re.sub(r"\s", "-", h)
+
+
+def _anchors(md_path: str) -> set:
+    with open(md_path, encoding="utf-8") as f:
+        text = f.read()
+    return {_slug(m.group(1)) for m in _HEADING_RE.finditer(text)}
+
+
+def check_links() -> list:
+    files = list(LINK_FILES)
+    docs_dir = os.path.join(REPO, "docs")
+    if os.path.isdir(docs_dir):
+        files += [os.path.join("docs", f) for f in sorted(os.listdir(docs_dir))
+                  if f.endswith(".md")]
+    errors = []
+    for rel in files:
+        path = os.path.join(REPO, rel)
+        if not os.path.exists(path):
+            continue
+        with open(path, encoding="utf-8") as f:
+            text = f.read()
+        for m in _LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, anchor = target.partition("#")
+            if base:
+                dest = os.path.normpath(
+                    os.path.join(os.path.dirname(path), base))
+                if not os.path.exists(dest):
+                    errors.append(f"{rel}: broken link -> {target}")
+                    continue
+            else:
+                dest = path
+            if anchor and dest.endswith(".md"):
+                if _slug(anchor) not in _anchors(dest):
+                    errors.append(f"{rel}: broken anchor -> {target}")
+    return errors
+
+
+def _missing_docstrings(path: str) -> list:
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    rel = os.path.relpath(path, REPO)
+    missing = []
+    if ast.get_docstring(tree) is None:
+        missing.append(f"{rel}: module docstring")
+
+    def visit(node, prefix: str, in_class: bool):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                name = child.name
+                public = not name.startswith("_")
+                qual = f"{prefix}{name}"
+                if public and ast.get_docstring(child) is None:
+                    kind = ("class" if isinstance(child, ast.ClassDef)
+                            else "method" if in_class else "function")
+                    missing.append(f"{rel}: {kind} {qual}")
+                if isinstance(child, ast.ClassDef):
+                    visit(child, qual + ".", True)
+                # nested defs are private implementation detail: skip
+
+    visit(tree, "", False)
+    return missing
+
+
+def check_docstrings() -> list:
+    errors = []
+    for root in DOCSTRING_ROOTS:
+        for dirpath, _, names in os.walk(os.path.join(REPO, root)):
+            for name in sorted(names):
+                if name.endswith(".py"):
+                    errors += _missing_docstrings(os.path.join(dirpath, name))
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_docstrings()
+    for e in errors:
+        print(f"docs-check: {e}")
+    if errors:
+        print(f"docs-check: {len(errors)} problem(s)")
+        return 1
+    print("docs-check: links + docstrings OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
