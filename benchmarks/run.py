@@ -27,7 +27,12 @@ def _ensure_devices(n: int = 4):
 def main() -> None:
     _ensure_devices()
     from benchmarks import artlayer, bandwidth, casestudy, latency, resource
-    from benchmarks import moe_dispatch, roofline_bench, transport_sweep
+    from benchmarks import (
+        moe_dispatch,
+        overlap_pipeline,
+        roofline_bench,
+        transport_sweep,
+    )
 
     suites = [
         ("bandwidth(Fig5)", bandwidth.main),
@@ -37,6 +42,9 @@ def main() -> None:
         ("artlayer(§Perf ART-TP)", artlayer.main),
         ("transport(conduit sweep)", transport_sweep.main),
         ("moe(EP dispatch sweep)", moe_dispatch.main),
+        # after transport/moe: the overlap suite fits the netmodel against
+        # their freshly written measured rows
+        ("overlap(pipeline sweep)", overlap_pipeline.main),
         ("roofline(§Roofline)", roofline_bench.main),
     ]
     failed = []

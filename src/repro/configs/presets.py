@@ -36,6 +36,11 @@ class EPPreset:
     arch: str                 # registry name of the ModelConfig
     expert_axis: int          # recommended ``expert`` mesh-axis extent
     moe_transport: str = "auto"   # TransportPolicy.moe
+    stream_chunks: int = 4    # ART chunks per EP exchange (1: bulk); the
+    #                           streamed dispatch is bit-identical to bulk,
+    #                           so presets default to the overlapped
+    #                           schedule (benchmarks/overlap_pipeline.py
+    #                           records the modeled speedup per preset)
 
     @property
     def config(self) -> ModelConfig:
@@ -49,7 +54,8 @@ class EPPreset:
         from repro.dist.steps import StepConfig, TransportPolicy
 
         return StepConfig(
-            transport=TransportPolicy(moe=self.moe_transport))
+            transport=TransportPolicy(moe=self.moe_transport,
+                                      moe_stream_chunks=self.stream_chunks))
 
 
 #: EP recipes for every MoE arch in the registry.  ``expert_axis`` is the

@@ -4,15 +4,28 @@ Layers (bottom-up):
   netmodel    — analytic QSFP+/ICI performance model (Fig. 5 / Table III)
   pgas        — symmetric heap + one-sided put/get over a mesh axis
   am          — GASNet Active Messages: opcode registry + lax.switch dispatch
-  art         — Automatic Result Transfer: chunked compute/comm overlap
+  pipeline    — the generalized ART scheduler: chunked overlap of any
+                collective with any per-chunk compute (DESIGN §3)
+  art         — Automatic Result Transfer: the paper's entry points, on
+                the shared scheduler
   conduit     — GASNet-style transport registry (xla/ring/bidir + auto
-                cost-model selection) behind one collective API
+                cost-model selection) behind one collective API, with
+                streamed per-chunk schedules
   collectives — extended API (barrier/bcast/AG/RS/AR/a2a), thin wrappers
                 binding the conduit's paper-faithful ring transport
   overlap     — beyond-paper: ART applied to tensor-parallel matmuls
 """
 
-from repro.core import am, art, collectives, conduit, netmodel, overlap, pgas
+from repro.core import (
+    am,
+    art,
+    collectives,
+    conduit,
+    netmodel,
+    overlap,
+    pgas,
+    pipeline,
+)
 from repro.core.conduit import Conduit
 from repro.core.am import (
     HandlerRegistry,
@@ -35,7 +48,7 @@ from repro.core.pgas import GlobalAddressSpace, SymmetricHeap, get, put
 
 __all__ = [
     "am", "art", "collectives", "conduit", "netmodel", "overlap", "pgas",
-    "Conduit",
+    "pipeline", "Conduit",
     "HandlerRegistry", "am_request", "am_request_long", "am_request_medium",
     "am_request_short", "gasnet_get", "gasnet_put", "make_args",
     "art_matmul_reducescatter", "art_send", "bulk_matmul_reducescatter",

@@ -14,6 +14,12 @@ by the compiler.  We express every loop so that the permute of chunk *k*
 never depends on compute *k+1* (and vice versa), which is the structural
 property the scheduler needs.
 
+The loop shape itself lives in ``core/pipeline.py``
+(:func:`repro.core.pipeline.chunk_pipeline` — the *generalized* ART
+scheduler, reused by the streamed conduit collectives, the MoE dispatch
+pipeline and the bucketed gradient sync); this module keeps the
+paper-faithful entry points and binds them to the shared scheduler.
+
 Three entry points:
 
 * :func:`art_send` — generic producer→consumer chunk pipeline: compute a
@@ -38,6 +44,7 @@ from typing import Callable
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.pipeline import chunk_pipeline
 from repro.core.vma import vary
 
 
@@ -63,38 +70,36 @@ def art_send(
     ``rank+shift``; the receiver accumulates (or stacks) them.
 
     Returns a function ``() -> received`` to call inside shard_map.  The loop
-    body keeps the permute of chunk *k−1* independent of compute of chunk
-    *k* so XLA can overlap them (see module docstring).
+    (``pipeline.chunk_pipeline(loop=True)``) keeps the permute of chunk
+    *k−1* independent of compute of chunk *k* so XLA can overlap them (see
+    module docstring).
     """
 
     def run():
         n = lax.axis_size(axis)
         perm = _ring_perm(n, shift)
-        c0 = compute_chunk(jnp.int32(0))
 
-        def body(k, carry):
-            acc, prev = carry
-            # Issue the transfer of the *previous* chunk ...
-            arrived = lax.ppermute(prev, axis, perm)
-            # ... while computing the next one (no data dependence between
-            # these two lines — the ART overlap window).
-            nxt = compute_chunk(k)
-            if accumulate:
-                acc = acc + arrived
-            else:
-                acc = lax.dynamic_update_index_in_dim(acc, arrived, k - 1, 0)
-            return acc, nxt
+        def compute(k):
+            return vary(compute_chunk(k), axis)
+
+        def transfer(k, prev):
+            return lax.ppermute(prev, axis, perm)
 
         if accumulate:
-            acc0 = jnp.zeros_like(c0)
+            def init(c0):
+                return vary(jnp.zeros_like(c0), axis)
+
+            def consume(acc, k, arrived):
+                return acc + arrived
         else:
-            acc0 = jnp.zeros((n_chunks,) + c0.shape, c0.dtype)
-        acc0 = vary(acc0, axis)
-        acc, last = lax.fori_loop(1, n_chunks, body, (acc0, vary(c0, axis)))
-        arrived = lax.ppermute(last, axis, perm)
-        if accumulate:
-            return acc + arrived
-        return lax.dynamic_update_index_in_dim(acc, arrived, n_chunks - 1, 0)
+            def init(c0):
+                return vary(jnp.zeros((n_chunks,) + c0.shape, c0.dtype), axis)
+
+            def consume(acc, k, arrived):
+                return lax.dynamic_update_index_in_dim(acc, arrived, k, 0)
+
+        return chunk_pipeline(n_chunks, compute, transfer, consume,
+                              init=init, loop=True)
 
     return run
 
@@ -157,21 +162,17 @@ def art_matmul_reducescatter(
             block = arrived + col_block(partial_chunk, -(hop + 1))
         return block
 
-    def body(k, carry):
-        acc, partial_prev = carry
-        # Compute chunk k (heavy matmul) — independent of the ring below, so
-        # XLA overlaps it with the in-flight transfer of chunk k−1: ART.
-        partial_cur = compute_chunk(k)
-        done = ring_reduce_scatter(partial_prev)
-        acc = lax.dynamic_update_slice(acc, done, ((k - 1) * rchunk, 0))
-        return acc, partial_cur
-
-    acc0 = vary(jnp.zeros((rows, ccols), jnp.float32), axis)
-    acc, partial_last = lax.fori_loop(
-        1, n_chunks, body, (acc0, vary(compute_chunk(0), axis))
+    # chunk k's heavy sub-matmul is independent of the ring carrying chunk
+    # k−1's partials, so XLA overlaps them: ART, on the shared scheduler.
+    return chunk_pipeline(
+        n_chunks,
+        compute=lambda k: vary(compute_chunk(k), axis),
+        transfer=lambda k, partial: ring_reduce_scatter(partial),
+        consume=lambda acc, k, done: lax.dynamic_update_slice(
+            acc, done, (k * rchunk, 0)),
+        init=vary(jnp.zeros((rows, ccols), jnp.float32), axis),
+        loop=True,
     )
-    done = ring_reduce_scatter(partial_last)
-    return lax.dynamic_update_slice(acc, done, ((n_chunks - 1) * rchunk, 0))
 
 
 def bulk_matmul_reducescatter(

@@ -42,6 +42,14 @@ paper's Fig. 5 message-size × packet-size tradeoff turned into a runtime
 decision.  Small messages resolve to ``xla`` (fewest per-message
 latencies); large messages resolve to ``bidir`` (full-duplex bandwidth).
 
+Every op can also run **streamed** (:meth:`Conduit.streamed`): the payload
+partitioned into chunks, chunk *k*'s collective issued while per-chunk
+work digests chunk *k−1* — the generalized ART schedule of
+``core/pipeline.py``.  :func:`pipeline_estimate` /
+:func:`auto_select_pipeline` are the matching cost model: they price the
+whole pipeline against a ``compute_time`` and pick the chunk count that
+maximizes *hiding* rather than minimizing standalone wire time.
+
 All collective entry points run *inside* ``shard_map`` over the conduit's
 axis, like everything else in ``repro.core``.
 """
@@ -50,13 +58,13 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.core import netmodel as nm
+from repro.core import pipeline as pl
 from repro.core.art import _ring_perm
 
 OPS = (
@@ -112,46 +120,18 @@ def resolve(op: str, name: str) -> Callable:
 
 
 # ---------------------------------------------------------------------------
-# Shared ring engine
+# Shared ring engine + ART chunking helpers (both live in core/pipeline.py —
+# the generalized ART scheduler; kept under their historical names here)
 # ---------------------------------------------------------------------------
 
+_ring_engine = pl.ring_pipeline
 
-def _ring_engine(wire, perms, axis: str, hops: int, body):
-    """The one ring loop every ring/bidir collective below is an instance of.
-
-    ``wire``: tuple of pytrees riding the ring (one entry per direction);
-    ``perms``: matching tuple of static permutations;
-    ``body(hop, arrived) -> (wire', state)`` consumes what the hop delivered.
-    Returns the last ``state``.  The permute of hop *k* never depends on
-    ``body``'s work for hop *k* — the ART overlap window (DESIGN §3).
-    """
-    state = None
-    for hop in range(1, hops + 1):
-        arrived = tuple(
-            jax.tree.map(lambda t, p=p: lax.ppermute(t, axis, p), w)
-            for w, p in zip(wire, perms)
-        )
-        wire, state = body(hop, arrived)
-    return state
-
-
-# ---------------------------------------------------------------------------
-# ART chunking helpers
-# ---------------------------------------------------------------------------
-
-
-def _n_chunks(hop_bytes: int, chunk_bytes: Optional[int], limit: int) -> int:
-    """⌈hop_bytes / chunk_bytes⌉ clamped to the splittable extent."""
-    if not chunk_bytes or hop_bytes <= chunk_bytes:
-        return 1
-    return max(1, min(limit, -(-hop_bytes // chunk_bytes)))
+_n_chunks = pl.n_chunks
 
 
 def _split_cols(x2d: jnp.ndarray, c: int):
     """Static split of axis −1 into ``c`` nearly equal pieces."""
-    f = x2d.shape[-1]
-    cuts = [round(i * f / c) for i in range(c + 1)]
-    return [x2d[..., lo:hi] for lo, hi in zip(cuts, cuts[1:]) if hi > lo]
+    return pl.split(x2d, c, axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -670,6 +650,86 @@ def auto_select(
 
 
 # ---------------------------------------------------------------------------
+# Pipeline-aware cost model (overlap as a selection criterion)
+# ---------------------------------------------------------------------------
+
+#: candidate chunk counts the pipeline auto policy sweeps
+PIPELINE_CHUNKS = (1, 2, 4, 8, 16, 32, 64)
+
+
+def pipeline_estimate(
+    op: str,
+    transport: str,
+    *,
+    size_bytes: int,
+    axis_size: int,
+    n_chunks: int,
+    compute_time: float = 0.0,
+    link: nm.LinkParams = nm.FSHMEM_QSFP,
+    chunk_bytes: Optional[int] = None,
+) -> float:
+    """Modeled wall-clock of a *streamed* schedule of ``op``.
+
+    The payload is split into ``n_chunks`` independent collectives of
+    ``size_bytes / n_chunks`` each, interleaved with ``compute_time`` of
+    per-chunk work (``pipeline.streamed`` / ``chunk_pipeline``): chunk
+    *k*'s collective flies while chunk *k±1*'s compute runs, per
+    :func:`repro.core.netmodel.pipeline_time`.  ``n_chunks=1`` is the bulk
+    baseline (``compute_time`` + :func:`estimate_time`, fully serialized).
+    """
+    c = max(1, int(n_chunks))
+    per_wire = estimate_time(
+        op, transport, size_bytes=max(1, round(size_bytes / c)),
+        axis_size=axis_size, link=link, chunk_bytes=chunk_bytes)
+    if c == 1:
+        return compute_time + per_wire
+    return nm.pipeline_time([compute_time / c] * c, [per_wire] * c)
+
+
+def auto_select_pipeline(
+    op: str,
+    *,
+    size_bytes: int,
+    axis_size: int,
+    compute_time: float = 0.0,
+    link: nm.LinkParams = nm.FSHMEM_QSFP,
+    chunk_bytes: Optional[int] = None,
+    chunk_counts: Sequence[int] = PIPELINE_CHUNKS,
+) -> Tuple[str, Optional[int], int]:
+    """Pick ``(transport, chunk_bytes, n_chunks)`` minimizing
+    :func:`pipeline_estimate`.
+
+    Where :func:`auto_select` minimizes standalone wire time, this policy
+    prices the *whole pipeline*: a chunk count that maximizes hiding can
+    beat the chunk count with the cheapest isolated collective, because
+    per-chunk latency buys overlap with ``compute_time``.  ``n_chunks=1``
+    (bulk) is always a candidate, so the choice never regresses below the
+    bulk schedule *in the model*.
+    """
+    if axis_size <= 1:
+        return "xla", None, 1
+    candidates = (chunk_bytes,) if chunk_bytes else CHUNK_CANDIDATES
+    best: Tuple[float, str, Optional[int], int] = (float("inf"), "xla",
+                                                   None, 1)
+    for name in transports(op):
+        for chunk in candidates:
+            for c in chunk_counts:
+                try:
+                    t = pipeline_estimate(
+                        op, name, size_bytes=size_bytes, axis_size=axis_size,
+                        n_chunks=c, compute_time=compute_time, link=link,
+                        chunk_bytes=chunk)
+                except ValueError:
+                    break                  # unmodeled transport: skip it
+                if t < best[0]:
+                    best = (t, name, chunk, c)
+            else:
+                continue
+            break
+    return best[1], best[2], best[3]
+
+
+# ---------------------------------------------------------------------------
 # The user-facing handle
 # ---------------------------------------------------------------------------
 
@@ -736,6 +796,35 @@ class Conduit:
         goes to rank q, returns the blocks the peers addressed here."""
         return self._call("all_to_all", x)
 
+    # -- streamed (per-chunk) schedules --------------------------------------
+
+    def streamed(self, op: str, payloads, *, work=None, **kw):
+        """Per-chunk schedule of ``op`` instead of one bulk call.
+
+        ``payloads`` is a sequence of independent chunks (an elementwise
+        partition of the bulk payload — e.g. ``pipeline.split``); chunk
+        *k*'s collective is issued while ``work(k−1, arrived)`` digests the
+        previous arrival (``pipeline.streamed``), so the wire hides behind
+        the per-chunk compute — the generalized ART schedule.  Returns the
+        list of per-chunk results, in order.
+
+        Every chunk runs the identical transport schedule on a disjoint
+        slice, so per-chunk results are bit-identical to slices of the
+        bulk call — and concatenating them reassembles the bulk result
+        exactly **when the split axis is orthogonal to the op's
+        rank-blocking layout** (``all_to_all`` split on a non-leading dim,
+        as the MoE dispatch does, or ``all_reduce``/``broadcast`` on any
+        axis).  Splitting ``all_gather``/``reduce_scatter`` payloads on
+        their *blocked leading dim* instead yields (chunk, rank)-ordered
+        blocks that a plain concatenate does not restore — reassemble by
+        block, or split another axis.
+        """
+        return pl.streamed(
+            len(payloads),
+            lambda k: self._call(op, payloads[k], **kw),
+            work,
+        )
+
     # -- fused-matmul flavor (core/overlap.py schedules) --------------------
 
     def matmul_bidirectional(self, size_bytes: int) -> bool:
@@ -760,7 +849,8 @@ class Conduit:
 
 
 __all__ = [
-    "OPS", "LINKS", "CHUNK_CANDIDATES", "Conduit",
+    "OPS", "LINKS", "CHUNK_CANDIDATES", "PIPELINE_CHUNKS", "Conduit",
     "register", "transports", "resolve",
     "estimate_time", "auto_select",
+    "pipeline_estimate", "auto_select_pipeline",
 ]

@@ -236,28 +236,46 @@ def bulk_time(t_compute: float, t_comm: float, t_msg: float) -> float:
     return t_compute + t_msg + t_comm
 
 
+def pipeline_time(compute_times, wire_times) -> float:
+    """Wall-clock of a chunked overlap pipeline (the generalized ART model).
+
+    ``compute_times[k]`` / ``wire_times[k]`` are chunk *k*'s compute and
+    transfer (wire + per-message setup) times.  Chunk *k*'s transfer starts
+    as soon as its compute has finished *and* the link is free — transfers
+    serialize on the link while compute of later chunks proceeds
+    underneath.  The exposed communication is whatever does not fit under
+    the remaining compute, plus the final chunk's transfer, which can never
+    be hidden.
+
+    This is the cost model of ``repro.core.pipeline.chunk_pipeline``; by
+    time-reversal symmetry it also prices the consumer-side pipeline
+    (``pipeline.streamed``: chunk *k* arrives while chunk *k−1* is
+    consumed) with the same arguments swapped, which for the uniform chunks
+    ``conduit.pipeline_estimate`` sweeps is the identical number.
+    """
+    assert len(compute_times) == len(wire_times), (
+        len(compute_times), len(wire_times))
+    link_free = 0.0
+    computed = 0.0
+    for tc, tx in zip(compute_times, wire_times):
+        computed += tc
+        start = max(computed, link_free)
+        link_free = start + tx
+    return link_free
+
+
 def art_time(
     t_compute: float, t_comm: float, t_msg: float, n_chunks: int
 ) -> float:
     """ART: the result is sent in ``n_chunks`` PUTs issued as soon as each
-    chunk of results is valid, overlapping wire time with remaining compute.
-
-    Pipeline model: chunk k's transfer (t_msg + t_comm/n) overlaps compute of
-    chunks k+1..n.  Exposed communication is whatever of the per-chunk
-    transfers does not fit under the remaining compute, plus the final chunk's
-    transfer which can never be hidden.
+    chunk of results is valid, overlapping wire time with remaining compute
+    (the uniform-chunk special case of :func:`pipeline_time`).
     """
     if n_chunks <= 1:
         return bulk_time(t_compute, t_comm, t_msg)
     tc = t_compute / n_chunks
     tx = t_comm / n_chunks + t_msg
-    # time at which chunk k (0-based) finishes computing: (k+1)*tc
-    # transfers serialize on the link: start_k = max(finish_k, link_free)
-    link_free = 0.0
-    for k in range(n_chunks):
-        start = max((k + 1) * tc, link_free)
-        link_free = start + tx
-    return link_free
+    return pipeline_time([tc] * n_chunks, [tx] * n_chunks)
 
 
 def art_speedup(

@@ -29,7 +29,10 @@ equivalent and resolves like ``auto``).
 
 All functions run inside ``shard_map``; the weight stays resident
 (sharded), only activations move — the same locality argument the paper
-makes for keeping data in each FPGA's partition.
+makes for keeping data in each FPGA's partition.  Both schedule families
+are instances of the shared hop-carried loop
+(``repro.core.pipeline.ring_pipeline`` — the generalized ART scheduler,
+DESIGN §3).
 """
 
 from __future__ import annotations
@@ -41,6 +44,7 @@ from jax import lax
 
 from repro.core.art import _ring_perm
 from repro.core.conduit import Conduit
+from repro.core.pipeline import ring_pipeline
 
 
 def _schedule(conduit: Optional[Conduit], axis: Optional[str],
@@ -92,18 +96,23 @@ def allgather_matmul(
 
     if not bidirectional or n == 2:
         perm = _ring_perm(n, 1)
-        cur = x
-        for hop in range(n):
-            if hop > 0:
-                cur_next = lax.ppermute(cur, axis, perm)
-            else:
-                cur_next = cur
-            # matmul of the block in hand overlaps the permute of the next
+        # hop 0: the local block, no permute
+        y0 = jnp.dot(x, w, preferred_element_type=jnp.float32)
+        out = lax.dynamic_update_slice(out, y0, (my * b_loc, 0))
+        if n == 1:
+            return out
+
+        def body(hop, arrived):
+            # the matmul of the block in hand overlaps the permute of the
+            # next (ring_pipeline re-permutes the forwarded wire)
+            nonlocal out
+            (cur,) = arrived
             src = (my - hop) % n
-            y = jnp.dot(cur_next, w, preferred_element_type=jnp.float32)
+            y = jnp.dot(cur, w, preferred_element_type=jnp.float32)
             out = lax.dynamic_update_slice(out, y, (src * b_loc, 0))
-            cur = cur_next
-        return out
+            return (cur,), out
+
+        return ring_pipeline((x,), (perm,), axis, n - 1, body)
 
     # bidirectional: split the local block in two, send halves around
     # counter-rotating rings; each link direction carries half the bytes.
@@ -111,23 +120,29 @@ def allgather_matmul(
     bwd = _ring_perm(n, -1)
     half = b_loc // 2
     lo, hi = x[:half], x[half:]
-    cur_f, cur_b = lo, hi
 
     def place(out, y, src, second_half):
         row = src * b_loc + (half if second_half else 0)
         return lax.dynamic_update_slice(out, y, (row, 0))
 
-    for hop in range(n):
-        if hop > 0:
-            cur_f = lax.ppermute(cur_f, axis, fwd)
-            cur_b = lax.ppermute(cur_b, axis, bwd)
-        src_f = (my - hop) % n
-        src_b = (my + hop) % n
+    out = place(out, jnp.dot(lo, w, preferred_element_type=jnp.float32),
+                my, False)
+    out = place(out, jnp.dot(hi, w, preferred_element_type=jnp.float32),
+                my, True)
+
+    if n == 1:
+        return out
+
+    def body(hop, arrived):
+        nonlocal out
+        (cur_f,), (cur_b,) = arrived
         y_f = jnp.dot(cur_f, w, preferred_element_type=jnp.float32)
         y_b = jnp.dot(cur_b, w, preferred_element_type=jnp.float32)
-        out = place(out, y_f, src_f, False)
-        out = place(out, y_b, src_b, True)
-    return out
+        out = place(out, y_f, (my - hop) % n, False)
+        out = place(out, y_b, (my + hop) % n, True)
+        return ((cur_f,), (cur_b,)), out
+
+    return ring_pipeline(((lo,), (hi,)), (fwd, bwd), axis, n - 1, body)
 
 
 def matmul_reducescatter(
@@ -167,13 +182,18 @@ def matmul_reducescatter(
     if not bidirectional or n == 2:
         perm = _ring_perm(n, 1)
         acc = jnp.dot(row_block(-1), w, preferred_element_type=jnp.float32)
-        for hop in range(1, n):
-            arrived = lax.ppermute(acc, axis, perm)
-            # next sub-matmul overlaps the permute above
-            acc = arrived + jnp.dot(
+        if n == 1:
+            return acc
+
+        def body(hop, arrived):
+            # next sub-matmul overlaps the permute of the accumulator
+            (arr,) = arrived
+            acc = arr + jnp.dot(
                 row_block(-(hop + 1)), w, preferred_element_type=jnp.float32
             )
-        return acc
+            return (acc,), acc
+
+        return ring_pipeline((acc,), (perm,), axis, n - 1, body)
 
     fwd = _ring_perm(n, 1)
     bwd = _ring_perm(n, -1)
@@ -185,11 +205,15 @@ def matmul_reducescatter(
         wpart = w[:, half:] if second_half else w[:, :half]
         return jnp.dot(blk, wpart, preferred_element_type=jnp.float32)
 
-    acc_f = mm(-1, False)
-    acc_b = mm(+1, True)
-    for hop in range(1, n):
-        arr_f = lax.ppermute(acc_f, axis, fwd)
-        arr_b = lax.ppermute(acc_b, axis, bwd)
+    if n == 1:
+        return jnp.concatenate([mm(-1, False), mm(+1, True)], axis=1)
+
+    def body(hop, arrived):
+        (arr_f,), (arr_b,) = arrived
         acc_f = arr_f + mm(-(hop + 1), False)
         acc_b = arr_b + mm(hop + 1, True)
+        return ((acc_f,), (acc_b,)), (acc_f, acc_b)
+
+    acc_f, acc_b = ring_pipeline(((mm(-1, False),), (mm(+1, True),)),
+                                 (fwd, bwd), axis, n - 1, body)
     return jnp.concatenate([acc_f, acc_b], axis=1)

@@ -1,0 +1,202 @@
+"""The generalized ART scheduler: any collective, any per-chunk compute.
+
+The paper's ART (Sec. III-B) streams a producer's results chunk-by-chunk so
+the wire time hides under the remaining compute.  ``core/art.py`` expressed
+that for one pattern (matmul partials into a ring reduce-scatter); this
+module is the pattern itself, factored out so *any* conduit collective can
+interleave with *any* per-chunk compute.
+
+The structural property every scheduler here preserves — and the only thing
+XLA's latency-hiding scheduler needs — is that **the collective of chunk
+*k* is data-independent of the compute of chunk *k+1***.  XLA then emits
+``collective-permute-start``/``-done`` (or ``all-to-all-start``/``-done``)
+pairs and moves the ``done`` past the next chunk's compute: the AM
+sequencer's overlap, played by the compiler.
+
+Three loop shapes, one discipline:
+
+* :func:`chunk_pipeline` — the *producer* pipeline (ART proper): chunk *k*
+  is computed while chunk *k−1*'s transfer is in flight, and a ``consume``
+  hook folds whatever the transfer delivered.  ``loop=True`` rolls the body
+  into ``lax.fori_loop`` (uniform chunks, O(1) trace size — what
+  ``core/art.py`` builds on); the default unrolled form permits uneven
+  chunk shapes.
+* :func:`streamed` — the *consumer* pipeline: chunk *k*'s collective is
+  issued, then chunk *k−1*'s result is consumed while *k* is in flight.
+  ``Conduit.streamed`` binds this to the transport registry; the streamed
+  MoE dispatch (``models/moe_ep.py``) and the bucketed gradient sync
+  (``dist/grad_sync.py``) are both instances.
+* :func:`ring_pipeline` — the hop-carried ring loop every ring/bidir
+  collective of ``core/conduit.py`` (and the fused-matmul schedules of
+  ``core/overlap.py``) is an instance of: the permute of hop *k* never
+  depends on the body's work for hop *k*.
+
+Chunking never changes numerics: :func:`chunk_slices` partitions a payload
+elementwise, every piece runs the identical schedule, and re-concatenation
+restores the bulk result bit-for-bit (the PR-2 discipline, asserted per
+entry point by ``tests/test_pipeline.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# Chunk partitioning (elementwise, order-preserving — numerics-neutral)
+# ---------------------------------------------------------------------------
+
+
+def chunk_slices(total: int, n: int) -> List[Tuple[int, int]]:
+    """``n`` nearly equal, order-preserving ``(lo, hi)`` cuts of ``total``.
+
+    Boundaries are ``round(i·total/n)``; empty cuts (when ``n > total``)
+    are dropped, so the returned list partitions ``range(total)`` exactly.
+    """
+    cuts = [round(i * total / n) for i in range(n + 1)]
+    return [(lo, hi) for lo, hi in zip(cuts, cuts[1:]) if hi > lo]
+
+
+def n_chunks(total_bytes: int, chunk_bytes: Optional[int], limit: int) -> int:
+    """⌈total_bytes / chunk_bytes⌉ clamped to ``[1, limit]`` (the splittable
+    extent); ``None``/oversized ``chunk_bytes`` means one chunk (bulk)."""
+    if not chunk_bytes or total_bytes <= chunk_bytes:
+        return 1
+    return max(1, min(limit, -(-total_bytes // chunk_bytes)))
+
+
+def split(x: jnp.ndarray, n: int, axis: int = 0) -> List[jnp.ndarray]:
+    """Static split of ``x`` along ``axis`` into ≤ ``n`` nearly equal pieces
+    (uneven extents allowed — the last pieces are one element shorter)."""
+    sl = [slice(None)] * x.ndim
+    out = []
+    for lo, hi in chunk_slices(x.shape[axis], n):
+        sl[axis] = slice(lo, hi)
+        out.append(x[tuple(sl)])
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The producer pipeline (ART proper)
+# ---------------------------------------------------------------------------
+
+
+def chunk_pipeline(
+    n: int,
+    compute: Callable[[Any], Any],
+    transfer: Callable[[Any, Any], Any],
+    consume: Callable[[Any, Any, Any], Any],
+    *,
+    init: Any = None,
+    loop: bool = False,
+) -> Any:
+    """Run ``n`` chunks of ``compute`` with each finished chunk's
+    ``transfer`` overlapping the next chunk's compute.
+
+    Per chunk *k*: ``payload_k = compute(k)`` is shipped with
+    ``transfer(k, payload_k)`` and folded by
+    ``state = consume(state, k, arrived_k)``.  The loop is ordered so the
+    transfer of chunk *k−1* is issued *before* compute of chunk *k* and
+    neither depends on the other — the ART overlap window.
+
+    ``init`` seeds the state; a callable ``init`` receives chunk 0's
+    payload (so accumulators can be shaped from it).  ``loop=True`` uses
+    ``lax.fori_loop`` (chunk indices arrive traced; compute/consume must be
+    shape-uniform across chunks); the default unrolls, permitting uneven
+    chunks.  Both orders are identical op-for-op, so the choice never
+    changes numerics.
+    """
+    first = compute(jnp.int32(0) if loop else 0)
+    state = init(first) if callable(init) else init
+    if n <= 1:
+        return consume(state, 0, transfer(0, first))
+
+    if loop:
+        def body(k, carry):
+            state, prev = carry
+            # issue the transfer of the *previous* chunk ...
+            arrived = transfer(k - 1, prev)
+            # ... while computing the next one (no data dependence between
+            # these two lines — the ART overlap window)
+            nxt = compute(k)
+            return consume(state, k - 1, arrived), nxt
+
+        state, last = lax.fori_loop(1, n, body, (state, first))
+        return consume(state, n - 1, transfer(n - 1, last))
+
+    prev = first
+    for k in range(1, n):
+        arrived = transfer(k - 1, prev)     # chunk k−1 in flight ...
+        nxt = compute(k)                    # ... while chunk k computes
+        state = consume(state, k - 1, arrived)
+        prev = nxt
+    return consume(state, n - 1, transfer(n - 1, prev))
+
+
+# ---------------------------------------------------------------------------
+# The consumer pipeline (streamed collectives)
+# ---------------------------------------------------------------------------
+
+
+def streamed(
+    n: int,
+    issue: Callable[[int], Any],
+    consume: Optional[Callable[[int, Any], Any]] = None,
+) -> List[Any]:
+    """Issue ``n`` chunked collectives with each arrival's ``consume``
+    overlapping the next chunk's flight.
+
+    ``issue(k)`` starts chunk *k*'s collective; ``consume(k, arrived)``
+    (identity when ``None``) digests what chunk *k* delivered while chunk
+    *k+1* is in flight — the mirror image of :func:`chunk_pipeline`, for
+    when the wire *feeds* the compute (streamed MoE dispatch: expert FFN on
+    bucket *k−1* while bucket *k*'s all_to_all flies).  Returns the ``n``
+    consumed results in chunk order.
+    """
+    if n <= 0:
+        return []
+    if consume is None:
+        def consume(_k, arrived):
+            return arrived
+    prev = issue(0)
+    outs: List[Any] = []
+    for k in range(1, n):
+        cur = issue(k)                      # chunk k in flight ...
+        outs.append(consume(k - 1, prev))   # ... while chunk k−1 is consumed
+        prev = cur
+    outs.append(consume(n - 1, prev))
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# The hop-carried ring loop (every ring/bidir collective is an instance)
+# ---------------------------------------------------------------------------
+
+
+def ring_pipeline(wire, perms: Sequence, axis: str, hops: int, body) -> Any:
+    """The one ring loop every ring/bidir collective is an instance of.
+
+    ``wire``: tuple of pytrees riding the ring (one entry per direction);
+    ``perms``: matching tuple of static permutations;
+    ``body(hop, arrived) -> (wire', state)`` consumes what the hop
+    delivered.  Returns the last ``state``.  The permute of hop *k* never
+    depends on ``body``'s work for hop *k* — the ART overlap window
+    (DESIGN §3).
+    """
+    state = None
+    for hop in range(1, hops + 1):
+        arrived = tuple(
+            jax.tree.map(lambda t, p=p: lax.ppermute(t, axis, p), w)
+            for w, p in zip(wire, perms)
+        )
+        wire, state = body(hop, arrived)
+    return state
+
+
+__all__ = [
+    "chunk_slices", "n_chunks", "split",
+    "chunk_pipeline", "streamed", "ring_pipeline",
+]

@@ -9,8 +9,15 @@ transport the once-per-step cross-pod gradient all-reduce takes
 (``grad_sync`` — the software analogue of the paper's 2-node case study).
 """
 
-from repro.dist import grad_sync, loss, sharding, steps
-from repro.dist.grad_sync import Int8Conduit, cross_pod_all_reduce, wire_bytes
+from repro.dist import bucketing, grad_sync, loss, sharding, steps
+from repro.dist.bucketing import BucketPlan, bucket_plan
+from repro.dist.grad_sync import (
+    Int8Conduit,
+    bucket_wire_bytes,
+    bucketed_cross_pod_all_reduce,
+    cross_pod_all_reduce,
+    wire_bytes,
+)
 from repro.dist.loss import chunked_ce_loss
 from repro.dist.sharding import (
     MeshAxes,
@@ -31,8 +38,10 @@ from repro.dist.steps import (
 )
 
 __all__ = [
-    "grad_sync", "loss", "sharding", "steps",
-    "Int8Conduit", "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
+    "bucketing", "grad_sync", "loss", "sharding", "steps",
+    "BucketPlan", "bucket_plan",
+    "Int8Conduit", "bucket_wire_bytes", "bucketed_cross_pod_all_reduce",
+    "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
     "MeshAxes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
     "param_pspecs", "to_shardings",
     "StepBundle", "StepConfig", "TransportPolicy", "build_init",

@@ -1,0 +1,132 @@
+"""Size-targeted gradient buckets for streamed reduction and accumulation.
+
+The bulk gradient sync reduces the pytree leaf-by-leaf: thousands of small
+messages, each paying full per-message latency, none overlapping anything.
+The bucketing line of work (Rajbhandari et al., SC'20; torch DDP's
+``bucket_cap_mb``) flattens leaves into a few size-targeted buffers so the
+wire sees large messages *and* each bucket's reduction can launch as soon
+as the bucket is ready — the payload-partitioning half of the generalized
+ART scheduler (``core/pipeline.py``); ``dist/grad_sync.py`` supplies the
+overlap half.
+
+Two invariants keep bucketing numerics-neutral:
+
+* **whole leaves only** — a leaf is never split across buckets, so int8
+  block quantization (``optim/compress.py``) and per-bucket wire
+  accounting (``grad_sync.bucket_wire_bytes``) see the same contiguous
+  payloads no matter how leaves are grouped, and unpacking is a static
+  slice + reshape;
+* **flatten order** — buckets are contiguous runs of the pytree's leaf
+  order, so pack → elementwise op → unpack touches every element exactly
+  once, in place (bucketed microbatch accumulation in ``dist/steps.py`` is
+  bit-identical to the pytree accumulation it replaces).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+#: default bucket size target — large enough to saturate a DCN link,
+#: small enough that several buckets exist to pipeline (torch DDP's
+#: bucket_cap_mb=25 is the same order of magnitude)
+DEFAULT_BUCKET_BYTES = 4 << 20
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """A static partition of a pytree's leaves into size-targeted buckets.
+
+    Hashable and shape-only (no arrays), so it can be closed over by
+    jitted code; build once per (tree structure, target) with
+    :func:`bucket_plan`.
+    """
+
+    treedef: Any
+    leaf_shapes: Tuple[Tuple[int, ...], ...]
+    leaf_dtypes: Tuple[str, ...]
+    buckets: Tuple[Tuple[int, ...], ...]   # leaf indices per bucket
+
+    @property
+    def n_buckets(self) -> int:
+        """Number of buckets in the plan."""
+        return len(self.buckets)
+
+    def leaf_elements(self, i: int) -> int:
+        """Element count of leaf ``i`` (flatten order)."""
+        return math.prod(self.leaf_shapes[i])
+
+    def bucket_elements(self) -> Tuple[int, ...]:
+        """Per-bucket element counts — the sizes ``pack`` buffers will have
+        (and what ``grad_sync.bucket_wire_bytes`` accounts)."""
+        return tuple(sum(self.leaf_elements(i) for i in b)
+                     for b in self.buckets)
+
+
+def bucket_plan(tree, *, target_bytes: int = DEFAULT_BUCKET_BYTES,
+                itemsize: int = 4) -> BucketPlan:
+    """Greedy-fill whole leaves (flatten order) into ≤ ``target_bytes``
+    buckets.
+
+    A leaf larger than the target gets a bucket of its own — leaves are
+    never split (see module invariants).  ``tree`` may hold arrays or
+    ``ShapeDtypeStruct``s; only shapes/dtypes are read.  ``itemsize`` is
+    the on-the-wire element size the target is measured in (4: the fp32
+    accumulation/reduction dtype, regardless of each leaf's at-rest dtype).
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return BucketPlan(treedef, (), (), ())
+    buckets: List[Tuple[int, ...]] = []
+    cur: List[int] = []
+    cur_bytes = 0
+    for i, leaf in enumerate(leaves):
+        nbytes = math.prod(leaf.shape) * itemsize
+        if cur and cur_bytes + nbytes > target_bytes:
+            buckets.append(tuple(cur))
+            cur, cur_bytes = [], 0
+        cur.append(i)
+        cur_bytes += nbytes
+    buckets.append(tuple(cur))
+    return BucketPlan(
+        treedef,
+        tuple(tuple(leaf.shape) for leaf in leaves),
+        tuple(str(jnp.dtype(leaf.dtype)) for leaf in leaves),
+        tuple(buckets),
+    )
+
+
+def pack(tree, plan: BucketPlan, dtype=jnp.float32) -> List[jnp.ndarray]:
+    """Flatten ``tree`` into the plan's buckets: one 1-D ``dtype`` buffer
+    per bucket, leaves raveled and concatenated in flatten order."""
+    leaves = plan.treedef.flatten_up_to(tree)
+    return [
+        jnp.concatenate(
+            [leaves[i].astype(dtype).reshape(-1) for i in bucket])
+        for bucket in plan.buckets
+    ]
+
+
+def unpack(buffers: Sequence[jnp.ndarray], plan: BucketPlan, dtype=None):
+    """Invert :func:`pack`: slice each bucket buffer back into its leaves.
+
+    ``dtype`` casts every leaf (e.g. fp32 gradients); ``None`` restores
+    each leaf's recorded at-rest dtype.
+    """
+    out: List[Any] = [None] * len(plan.leaf_shapes)
+    for buf, bucket in zip(buffers, plan.buckets):
+        off = 0
+        for i in bucket:
+            n = plan.leaf_elements(i)
+            leaf = buf[off:off + n].reshape(plan.leaf_shapes[i])
+            out[i] = leaf.astype(dtype or plan.leaf_dtypes[i])
+            off += n
+    return plan.treedef.unflatten(out)
+
+
+__all__ = ["DEFAULT_BUCKET_BYTES", "BucketPlan", "bucket_plan", "pack",
+           "unpack"]

@@ -25,6 +25,13 @@ Error feedback: the quantization residual ``e' = (g + e) − Q(g + e)`` is
 returned per leaf; re-injecting it next step keeps Adam convergence
 unbiased in practice (Karimireddy et al., 2019).
 
+:func:`bucketed_cross_pod_all_reduce` is the overlapped schedule of the
+same contract: the pytree packs into size-targeted whole-leaf buckets
+(``dist/bucketing.py``) and each bucket's reduction launches as its
+payload is ready — bucket *k*'s collective in flight while bucket *k±1*
+packs/(de)quantizes (``pipeline.streamed``, DESIGN §3) — with
+:func:`bucket_wire_bytes` accounting the wire per bucket.
+
 Layout contract: each leaf's *local shard along the pod axis* is that pod's
 gradient — callers hand this function *per-pod* (not yet pod-reduced)
 gradients, pod-sharded on the leading dim by default (``specs`` overrides
@@ -42,13 +49,15 @@ see DESIGN §6 and the ROADMAP open item.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import pipeline as pl
 from repro.core.conduit import Conduit
+from repro.dist import bucketing
 from repro.optim.compress import (
     compress_8bit,
     compressed_bytes,
@@ -57,13 +66,33 @@ from repro.optim.compress import (
 )
 
 
+def bucket_wire_bytes(bucket_elements: Sequence[int], *,
+                      compressed: bool = False,
+                      block: int = 256) -> Tuple[int, ...]:
+    """Per-bucket cross-pod wire bytes (per hop direction).
+
+    Each bucket is one contiguous payload on the wire: fp32 uncompressed,
+    or int8 + fp32 per-``block`` scales when compressed.  Padding and
+    scale overhead accrue **per bucket** — which is why this is the
+    canonical accounting: a whole-pytree element count run through the
+    old scalar form understates the compressed wire once sync is bucketed
+    (every bucket pads to its own block boundary and ships its own
+    scales).  ``bucket_elements`` is what
+    :meth:`repro.dist.bucketing.BucketPlan.bucket_elements` returns.
+    """
+    if not compressed:
+        return tuple(4 * int(n) for n in bucket_elements)
+    return tuple(compressed_bytes(int(n), block) for n in bucket_elements)
+
+
 def wire_bytes(n_elements: int, *, compressed: bool = False,
                block: int = 256) -> int:
     """Bytes a tensor of ``n_elements`` puts on the cross-pod wire per hop
-    direction: fp32 uncompressed vs int8 payload + fp32 per-block scales."""
-    if not compressed:
-        return 4 * n_elements
-    return compressed_bytes(n_elements, block)
+    direction — the single-bucket wrapper over
+    :func:`bucket_wire_bytes` (kept for callers that account one tensor
+    at a time)."""
+    return bucket_wire_bytes((n_elements,), compressed=compressed,
+                             block=block)[0]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +186,117 @@ def cross_pod_all_reduce(
         body, mesh=mesh,
         in_specs=(specs, ef_specs),
         out_specs=(specs, ef_specs),
+        check_vma=False,
+    )
+    return fn(grads, ef)
+
+
+# ---------------------------------------------------------------------------
+# Bucketed + streamed sync (the generalized-ART schedule for the DCN hop)
+# ---------------------------------------------------------------------------
+
+
+def bucketed_cross_pod_all_reduce(
+    grads,
+    mesh,
+    *,
+    axis: str = "pod",
+    bucket_bytes: int = bucketing.DEFAULT_BUCKET_BYTES,
+    compressed: bool = False,
+    transport: str = "ring",
+    chunk_bytes: Optional[int] = None,
+    ef=None,
+    block: int = 256,
+    specs=None,
+    streamed: bool = True,
+) -> Tuple[object, object]:
+    """All-reduce-mean ``grads`` across ``axis`` in size-targeted buckets.
+
+    The leaf-by-leaf schedule of :func:`cross_pod_all_reduce` puts one
+    message per leaf on the wire — hundreds of small latencies, nothing
+    overlapping.  Here the pytree is packed into ``bucket_bytes`` buckets
+    (``dist/bucketing.py``: whole leaves, flatten order) and each bucket's
+    reduction launches as its payload is ready: with ``streamed=True`` the
+    per-bucket schedule rides ``pipeline.streamed``, so bucket *k*'s
+    conduit collective is in flight while bucket *k−1*'s local compute —
+    int8 dequantize/average when ``compressed``, the mean otherwise — runs
+    underneath (and bucket *k+1*'s quantize behind that).
+    ``streamed=False`` issues the identical per-bucket calls
+    bulk-synchronously — same ops, same order per element, so the two
+    schedules are bit-identical (asserted by
+    ``tests/test_pipeline.py::TestBucketedSync``).
+
+    Compression quantizes each packed bucket as one tensor (per-``block``
+    scales), so the wire carries exactly
+    ``bucket_wire_bytes(plan.bucket_elements(), compressed=True)`` — the
+    per-bucket accounting this schedule makes canonical.  The EF residual
+    keeps the bulk contract: per-leaf fp32, re-injected next step.
+
+    Layout contract and return value match :func:`cross_pod_all_reduce`:
+    per-pod gradients in, ``(synced_mean, ef_residuals)`` out.
+    """
+    if ef is None:
+        ef = ef_init(grads)
+    n = mesh.shape[axis]
+    if n == 1:
+        return grads, ef
+
+    conduit = Conduit(axis=axis, transport=transport, chunk_bytes=chunk_bytes)
+    if specs is None:
+        specs = jax.tree.map(
+            lambda g: P(axis, *([None] * (max(g.ndim, 1) - 1))), grads)
+
+    def body(g_tree, e_tree):
+        plan = bucketing.bucket_plan(g_tree, target_bytes=bucket_bytes)
+        corrected = jax.tree.map(
+            lambda g, e: g.astype(jnp.float32) + e, g_tree, e_tree)
+        bufs = bucketing.pack(corrected, plan)
+
+        if compressed:
+            def issue(k):
+                # quantize bucket k (compute) feeds its gather (wire); the
+                # gather of bucket k flies while bucket k−1 dequantizes
+                q, scale = compress_8bit(bufs[k], block)
+                return (q, scale, conduit.all_gather(q[None]),
+                        conduit.all_gather(scale[None]))
+
+            def consume(k, arrived):
+                q, scale, q_all, s_all = arrived
+                shape = bufs[k].shape
+                acc = jnp.zeros(shape, jnp.float32)
+                for i in range(n):
+                    acc = acc + decompress_8bit(q_all[i], s_all[i], shape,
+                                                block)
+                ef_buf = bufs[k] - decompress_8bit(q, scale, shape, block)
+                return acc / n, ef_buf
+        else:
+            def issue(k):
+                # outstanding EF flushes into the lossless reduction, as in
+                # the bulk path
+                return conduit.all_reduce(bufs[k])
+
+            def consume(k, arrived):
+                return arrived / n, jnp.zeros_like(bufs[k])
+
+        if streamed:
+            outs = pl.streamed(plan.n_buckets, issue, consume)
+        else:
+            outs = [consume(k, issue(k)) for k in range(plan.n_buckets)]
+
+        synced = bucketing.unpack([o[0] for o in outs], plan)
+        synced = jax.tree.map(lambda s, g: s.astype(g.dtype), synced, g_tree)
+        if compressed:
+            ef_new = bucketing.unpack([o[1] for o in outs], plan,
+                                      dtype=jnp.float32)
+        else:
+            ef_new = jax.tree.map(
+                lambda g: jnp.zeros(g.shape, jnp.float32), g_tree)
+        return synced, ef_new
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(specs, specs),
+        out_specs=(specs, specs),
         check_vma=False,
     )
     return fn(grads, ef)

@@ -51,6 +51,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core.conduit import Conduit, transports as conduit_transports
+from repro.dist import bucketing
 from repro.dist.loss import chunked_ce_loss
 from repro.dist.sharding import (
     MeshAxes,
@@ -98,7 +99,12 @@ class TransportPolicy:
     ``compress_cross_pod`` — wrap the cross-pod conduit in EF-int8
                      (``grad_sync.Int8Conduit``);
     ``chunk_bytes`` — ART chunk size handed to every conduit (None: let
-                     ``auto`` pick / transport default).
+                     ``auto`` pick / transport default);
+    ``moe_stream_chunks`` — stream the EP dispatch: split each MoE
+                     exchange into this many ART chunks so expert compute
+                     on bucket *k−1* overlaps bucket *k*'s ``all_to_all``
+                     (``models/moe_ep.py``; bit-identical to the bulk
+                     exchange; None/1 keeps bulk).
     """
 
     tp: str = "xla"
@@ -106,6 +112,7 @@ class TransportPolicy:
     cross_pod: str = "ring"
     compress_cross_pod: bool = False
     chunk_bytes: Optional[int] = None
+    moe_stream_chunks: Optional[int] = None
 
     def __post_init__(self):
         # each traffic class validates against the registry of the op it
@@ -140,6 +147,12 @@ class StepConfig:
     sequence_parallel: bool = True   # shard S of the residual over TP
     art_tp: bool = False             # DEPRECATED: use transport=TransportPolicy
     transport: Optional[TransportPolicy] = None
+    # microbatch grads accumulate into size-targeted flat buckets
+    # (dist/bucketing.py) instead of the leaf pytree: each bucket's add for
+    # microbatch k is independent of microbatch k+1's backward, and the
+    # bucket layout is what a bucketed conduit sync ships.  None: pytree
+    # accumulation (bit-identical either way — asserted in tests).
+    grad_bucket_bytes: Optional[int] = None
     z_loss: float = 1e-4
     moe_aux_weight: float = 1e-2
 
@@ -303,7 +316,8 @@ def _moe_runner(cfg: ModelConfig, mesh,
     if policy.moe == "xla" or cfg.family != "moe":
         return None
     return moe_ep.build_moe_ep_runner(
-        cfg, mesh, transport=policy.moe, chunk_bytes=policy.chunk_bytes)
+        cfg, mesh, transport=policy.moe, chunk_bytes=policy.chunk_bytes,
+        stream_chunks=policy.moe_stream_chunks)
 
 
 # ---------------------------------------------------------------------------
@@ -366,16 +380,42 @@ def build_train_step(cfg: ModelConfig, mesh, scfg: StepConfig,
                 lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
                                     + a.shape[1:]), batch)
 
-            def body(g_acc, mb):
-                (l, met), g = grad_fn(params, mb)
-                g_acc = jax.tree.map(
-                    lambda a, gg: a + gg.astype(jnp.float32), g_acc, g)
-                return g_acc, (l, met)
+            if scfg.grad_bucket_bytes:
+                # bucketed accumulation: grads land in size-targeted flat
+                # buffers; each bucket's add for microbatch k is
+                # independent of microbatch k+1's backward, so the
+                # scheduler can drain buckets under the next backward —
+                # and the layout is the one a bucketed sync would ship.
+                # Per element the fp32 adds are the pytree accumulation's,
+                # so the update is bit-identical.
+                plan = bucketing.bucket_plan(
+                    jax.tree.map(
+                        lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        params),
+                    target_bytes=scfg.grad_bucket_bytes)
 
-            zeros = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params)
-            g_sum, (losses, mets) = lax.scan(body, zeros, micro)
-            grads = jax.tree.map(lambda a: a / n_micro, g_sum)
+                def body(acc, mb):
+                    (l, met), g = grad_fn(params, mb)
+                    packed = bucketing.pack(g, plan)
+                    acc = tuple(a + p for a, p in zip(acc, packed))
+                    return acc, (l, met)
+
+                zeros = tuple(jnp.zeros((m,), jnp.float32)
+                              for m in plan.bucket_elements())
+                bufs, (losses, mets) = lax.scan(body, zeros, micro)
+                grads = bucketing.unpack(
+                    [b / n_micro for b in bufs], plan)
+            else:
+                def body(g_acc, mb):
+                    (l, met), g = grad_fn(params, mb)
+                    g_acc = jax.tree.map(
+                        lambda a, gg: a + gg.astype(jnp.float32), g_acc, g)
+                    return g_acc, (l, met)
+
+                zeros = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                g_sum, (losses, mets) = lax.scan(body, zeros, micro)
+                grads = jax.tree.map(lambda a: a / n_micro, g_sum)
             loss = losses.mean()
             metrics = {k: (v.sum() if k == "tokens" else v.mean())
                        for k, v in mets.items()}

@@ -25,13 +25,21 @@ def make_production_mesh(*, multi_pod: bool = False):
         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
 
 
-def make_host_mesh(data: int = 2, model: int = 2):
-    """Small CPU mesh for tests/examples (requires the host-device flag)."""
-    n = data * model
+def make_host_mesh(data: int = 2, model: int = 2, expert: int = 1):
+    """Small CPU mesh for tests/examples (requires the host-device flag).
+
+    ``expert`` > 1 appends an ``expert`` axis (EP dispatch —
+    ``models/moe_ep.py``); dense archs treat it as one more data axis.
+    """
+    n = data * model * expert
     avail = len(jax.devices())
     assert avail >= n, (
         f"need {n} devices, have {avail}; set "
         f"XLA_FLAGS=--xla_force_host_platform_device_count={n}")
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto, jax.sharding.AxisType.Auto))
+    auto = jax.sharding.AxisType.Auto
+    if expert > 1:
+        return jax.make_mesh((data, model, expert),
+                             ("data", "model", "expert"),
+                             axis_types=(auto, auto, auto))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(auto, auto))

@@ -20,7 +20,20 @@ def main():
     p.add_argument("--seq-len", type=int, default=128)
     p.add_argument("--data-axis", type=int, default=2)
     p.add_argument("--model-axis", type=int, default=2)
+    p.add_argument("--expert-axis", type=int, default=1,
+                   help="expert mesh axis extent (>1 enables EP dispatch "
+                        "for MoE archs when --moe-transport is non-xla)")
     p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--grad-bucket-kb", type=int, default=0,
+                   help="accumulate microbatch grads in size-targeted "
+                        "buckets of this many KiB (0: pytree accumulation; "
+                        "bit-identical update — DESIGN §3)")
+    p.add_argument("--moe-transport", default="xla",
+                   help="TransportPolicy.moe: xla|ring|bidir|auto "
+                        "(non-xla needs an expert mesh axis)")
+    p.add_argument("--moe-stream-chunks", type=int, default=0,
+                   help="stream the EP dispatch in this many ART chunks "
+                        "(0: bulk exchange)")
     p.add_argument("--lr", type=float, default=3e-4)
     p.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     p.add_argument("--ckpt-interval", type=int, default=50)
@@ -28,24 +41,29 @@ def main():
     p.add_argument("--full", dest="reduced", action="store_false")
     args = p.parse_args()
 
-    n_dev = args.data_axis * args.model_axis
+    n_dev = args.data_axis * args.model_axis * args.expert_axis
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
 
     from repro.configs import get_config
     from repro.data import DataConfig, SyntheticLM
-    from repro.dist.steps import StepConfig
+    from repro.dist.steps import StepConfig, TransportPolicy
     from repro.launch.mesh import make_host_mesh
     from repro.runtime.trainer import Trainer, TrainerConfig
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    mesh = make_host_mesh(args.data_axis, args.model_axis,
+                          args.expert_axis)
     scfg = StepConfig(
         microbatches=args.microbatches, peak_lr=args.lr,
         warmup_steps=max(args.steps // 20, 5), total_steps=args.steps,
         seq_chunk=min(2048, args.seq_len),
+        grad_bucket_bytes=(args.grad_bucket_kb << 10) or None,
+        transport=TransportPolicy(
+            moe=args.moe_transport,
+            moe_stream_chunks=args.moe_stream_chunks or None),
     )
     data = SyntheticLM(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq_len + 1,

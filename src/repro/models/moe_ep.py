@@ -33,6 +33,13 @@ the data axes): each rank then differentiates distinct tokens, so the
 and the expert-replicated weights is a true sum of partials — the same
 reason ``models/artblock.py`` only differentiates tp-sharded tensors.
 
+Steps 2–4 can run **streamed** (``stream_chunks`` > 1): the dispatch
+buffer splits into ART chunks along the source-row dim and rides
+``Conduit.streamed`` (the generalized scheduler of ``core/pipeline.py``),
+so the expert FFN of bucket *k−1* — and its reverse ``all_to_all`` home —
+overlaps bucket *k*'s forward exchange, bit-identical to the bulk path
+(DESIGN §3).
+
 Equivalence across transports and odd/even expert-axis sizes is asserted
 by ``tests/test_moe_ep.py``; the dispatch-size crossover is swept into
 ``BENCH_moe.json`` by ``benchmarks/moe_dispatch.py``.
@@ -49,6 +56,7 @@ from jax import lax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core import pipeline as pl
 from repro.core.conduit import Conduit
 from repro.models import layers as L
 
@@ -67,13 +75,22 @@ def supports_moe_ep(cfg: ModelConfig, mesh) -> bool:
 
 
 def moe_ep_ffn(cfg: ModelConfig, x, router, w_up, w_gate, w_down, *,
-               conduit: Conduit):
+               conduit: Conduit, stream_chunks: Optional[int] = None):
     """The routed MoE FFN, manual over the mesh (call inside ``shard_map``).
 
     ``x``: the local (B_loc, S, D) token shard; ``router``: the full (D, E)
     router (replicated); ``w_up``/``w_gate``/``w_down``: this rank's expert
     shard, leading dim E/n.  Returns (B_loc, S, D) in compute dtype — the
     shared expert and the residual add stay outside the region.
+
+    ``stream_chunks`` > 1 replaces the bulk exchange with the *streamed*
+    dispatch pipeline (``Conduit.streamed`` over ``pipeline.streamed``):
+    the dispatch buffer splits into ART chunks along the source-row dim,
+    and the expert FFN of bucket *k−1* (plus its reverse ``all_to_all``
+    home) runs while bucket *k*'s forward ``all_to_all`` is in flight.
+    Chunking slices disjoint token rows through the identical transport
+    schedule, so the result is bit-identical to the bulk exchange
+    (asserted by ``tests/test_moe_ep.py::TestStreamedDispatch``).
     """
     n = lax.axis_size(conduit.axis)
     e = cfg.n_experts
@@ -87,30 +104,46 @@ def moe_ep_ffn(cfg: ModelConfig, x, router, w_up, w_gate, w_down, *,
 
     # bucket per destination expert shard: expert q*e_loc+j lives on rank q
     send = xe.transpose(1, 0, 2, 3).reshape(n, e_loc, b, cap, -1)
-    recv = conduit.all_to_all(send)                       # slot q: from rank q
 
     p_loc = {"w_up": w_up, "w_down": w_down}
     if w_gate is not None:
         p_loc["w_gate"] = w_gate
-    # (n, b, e_loc, cap, D): leading (source rank, source row) batches the
-    # expert einsums exactly like the dense path's (b,) batch
-    ye = L._expert_ffn(cfg, p_loc, recv.transpose(0, 2, 1, 3, 4))
 
-    back = conduit.all_to_all(ye.transpose(0, 2, 1, 3, 4))
+    def ffn_home(recv):
+        # (n, b_k, e_loc, cap, D): leading (source rank, source row) batches
+        # the expert einsums exactly like the dense path's (b,) batch
+        ye = L._expert_ffn(cfg, p_loc, recv.transpose(0, 2, 1, 3, 4))
+        return conduit.all_to_all(ye.transpose(0, 2, 1, 3, 4))
+
+    c = max(1, min(int(stream_chunks or 1), b))
+    if c == 1:
+        recv = conduit.all_to_all(send)                   # slot q: from rank q
+        back = ffn_home(recv)
+    else:
+        backs = conduit.streamed(
+            "all_to_all", pl.split(send, c, axis=2),
+            work=lambda k, recv: ffn_home(recv))
+        back = jnp.concatenate(backs, axis=2)
+
     ye_full = back.reshape(e, b, cap, -1).transpose(1, 0, 2, 3)
     return L.moe_combine(ye_full, dst, keep, weights)
 
 
-def _ep_gated(cfg, x, router, w_up, w_gate, w_down, *, conduit):
-    return moe_ep_ffn(cfg, x, router, w_up, w_gate, w_down, conduit=conduit)
+def _ep_gated(cfg, x, router, w_up, w_gate, w_down, *, conduit,
+              stream_chunks=None):
+    return moe_ep_ffn(cfg, x, router, w_up, w_gate, w_down, conduit=conduit,
+                      stream_chunks=stream_chunks)
 
 
-def _ep_ungated(cfg, x, router, w_up, w_down, *, conduit):
-    return moe_ep_ffn(cfg, x, router, w_up, None, w_down, conduit=conduit)
+def _ep_ungated(cfg, x, router, w_up, w_down, *, conduit,
+                stream_chunks=None):
+    return moe_ep_ffn(cfg, x, router, w_up, None, w_down, conduit=conduit,
+                      stream_chunks=stream_chunks)
 
 
 def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
-                        chunk_bytes: Optional[int] = None
+                        chunk_bytes: Optional[int] = None,
+                        stream_chunks: Optional[int] = None
                         ) -> Optional[Callable]:
     """MoE-layer runner routing expert dispatch through the conduit.
 
@@ -120,6 +153,11 @@ def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
     expert-parallel path (the step then keeps the dense GSPMD layer).
     A batch that does not divide the mesh falls back per call, so prefill
     or eval shapes never fail to trace.
+
+    ``stream_chunks`` streams the exchange: the dispatch payload splits
+    into that many ART chunks (clamped to the local row extent) and expert
+    compute on bucket *k−1* overlaps bucket *k*'s ``all_to_all`` — see
+    :func:`moe_ep_ffn`.  ``None``/1 keeps the bulk exchange.
 
     On meshes that also carry ``data``/``model`` axes, the region's weight
     specs (``P("expert", None, None)``) regather each expert shard's full
@@ -145,13 +183,15 @@ def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
         w_gate = p.get("w_gate")
         if w_gate is not None:
             fn = jax.shard_map(
-                functools.partial(_ep_gated, cfg_, conduit=conduit),
+                functools.partial(_ep_gated, cfg_, conduit=conduit,
+                                  stream_chunks=stream_chunks),
                 mesh=mesh, in_specs=(act, rspec, wspec, wspec, wspec),
                 out_specs=act, check_vma=False)
             y = fn(x, p["router"], p["w_up"], w_gate, p["w_down"])
         else:
             fn = jax.shard_map(
-                functools.partial(_ep_ungated, cfg_, conduit=conduit),
+                functools.partial(_ep_ungated, cfg_, conduit=conduit,
+                                  stream_chunks=stream_chunks),
                 mesh=mesh, in_specs=(act, rspec, wspec, wspec),
                 out_specs=act, check_vma=False)
             y = fn(x, p["router"], p["w_up"], p["w_down"])

@@ -230,6 +230,100 @@ class TestTiledAllToAll:
 
 
 # ---------------------------------------------------------------------------
+# streamed dispatch: the chunked pipeline ≡ the bulk exchange, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+class TestStreamedDispatch:
+    def _outs(self, cfg, mesh, transport, stream_chunks, *, batch=8, seed=8):
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(seed),
+                              (batch, 8, cfg.d_model))
+        runner = moe_ep.build_moe_ep_runner(
+            cfg, mesh, transport=transport, stream_chunks=stream_chunks)
+        assert runner is not None
+        return np.asarray(jax.jit(lambda p, v: runner(cfg, p, v))(moe_p, x))
+
+    @pytest.mark.parametrize("transport", ("xla", "ring", "bidir"))
+    @pytest.mark.parametrize("chunks", (2, 3))
+    def test_streamed_equals_bulk(self, transport, chunks):
+        """Per transport, including a chunk count that does not divide the
+        local row extent (b=4 rows over 2 shards → chunks of 1/2/1)."""
+        cfg = get_config("grok-1-314b").reduced()
+        mesh = _expert_mesh(2)
+        bulk = self._outs(cfg, mesh, transport, None)
+        got = self._outs(cfg, mesh, transport, chunks)
+        np.testing.assert_array_equal(got, bulk)
+
+    def test_odd_expert_axis(self):
+        """3 expert shards through the streamed path (the ring schedules'
+        hard case), chunk count not dividing the row extent either."""
+        cfg = dataclasses.replace(get_config("grok-1-314b").reduced(),
+                                  n_experts=6)
+        mesh = _expert_mesh(3)
+        bulk = self._outs(cfg, mesh, "ring", None, batch=9)
+        got = self._outs(cfg, mesh, "ring", 2, batch=9)
+        np.testing.assert_array_equal(got, bulk)
+
+    def test_oversized_chunk_count_clamps_to_rows(self):
+        """stream_chunks beyond the local row extent degenerates cleanly
+        (clamped — at most one row per bucket), still ≡ bulk."""
+        cfg = get_config("grok-1-314b").reduced()
+        mesh = _expert_mesh(2)
+        bulk = self._outs(cfg, mesh, "ring", None)
+        got = self._outs(cfg, mesh, "ring", 1000)
+        np.testing.assert_array_equal(got, bulk)
+
+    def test_streamed_grads_equal_bulk(self):
+        cfg = get_config("grok-1-314b").reduced()
+        moe_p = _moe_layer(cfg)
+        x = jax.random.normal(jax.random.PRNGKey(9), (4, 8, cfg.d_model))
+        grads = {}
+        for chunks in (None, 2):
+            runner = moe_ep.build_moe_ep_runner(
+                cfg, _expert_mesh(2), transport="ring",
+                stream_chunks=chunks)
+            grads[chunks] = jax.jit(jax.grad(
+                lambda p: (runner(cfg, p, x) ** 2).sum()))(moe_p)
+        for a, b in zip(jax.tree.leaves(grads[None]),
+                        jax.tree.leaves(grads[2])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_streamed_issues_same_total_traffic_as_bulk(self):
+        """Counting probe on the registry: the streamed dispatch makes
+        ``2 × stream_chunks`` smaller conduit calls whose element total is
+        exactly the bulk exchange's (nothing sent twice, nothing skipped).
+        """
+        calls = []
+
+        @conduit.register("all_to_all", "probe")
+        def _probe(v, *, axis, chunk_bytes=None):
+            calls.append(int(v.size))
+            return conduit.resolve("all_to_all", "ring")(
+                v, axis=axis, chunk_bytes=chunk_bytes)
+
+        try:
+            cfg = get_config("grok-1-314b").reduced()
+            moe_p = _moe_layer(cfg)
+            x = jax.random.normal(jax.random.PRNGKey(10),
+                                  (4, 8, cfg.d_model))
+            totals = {}
+            for chunks in (None, 2):
+                calls.clear()
+                runner = moe_ep.build_moe_ep_runner(
+                    cfg, _expert_mesh(2), transport="probe",
+                    stream_chunks=chunks)
+                jax.jit(lambda p, v, r=runner: r(cfg, p, v))(moe_p, x)
+                totals[chunks] = (len(calls), sum(calls))
+            assert totals[None][0] == 2            # there and back
+            assert totals[2][0] == 4               # 2 chunks × (there+back)
+            assert totals[2][1] == totals[None][1]
+        finally:
+            del conduit._REGISTRY[("all_to_all", "probe")]
+
+
+# ---------------------------------------------------------------------------
 # the train step: TransportPolicy.moe selects EP, update matches dense
 # ---------------------------------------------------------------------------
 
@@ -264,12 +358,45 @@ class TestEPTrainStep:
             np.testing.assert_allclose(outs["xla"][2], outs[moe_t][2],
                                        rtol=1e-5)
 
+    def test_streamed_bucketed_step_matches_baseline(self):
+        """The full overlapped step — streamed EP dispatch + bucketed
+        microbatch accumulation — produces bit-identical metrics and
+        params to the same step with both pipelines off."""
+        cfg = get_config("grok-1-314b").reduced()
+        mesh = _expert_mesh(2, data=2)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=17,
+                                      global_batch=8))
+        batch = data.global_batch(0)
+        bshape = batch_specs(16, 8, cfg.vocab_size)
+        outs = {}
+        for overlapped in (False, True):
+            scfg = StepConfig(
+                microbatches=2, seq_chunk=8, warmup_steps=2, total_steps=10,
+                grad_bucket_bytes=(1 << 12) if overlapped else None,
+                transport=TransportPolicy(
+                    moe="ring",
+                    moe_stream_chunks=2 if overlapped else None))
+            bundle = build_train_step(cfg, mesh, scfg, bshape)
+            init_fn, _ = build_init(cfg, mesh, scfg)
+            params, opt = init_fn(jax.random.PRNGKey(0))
+            p2, _, m = bundle.fn(params, opt, batch, jnp.int32(0))
+            outs[overlapped] = (m, p2)
+        m0, m1 = outs[False][0], outs[True][0]
+        for k in m0:
+            assert float(m0[k]) == float(m1[k]), (k, m0[k], m1[k])
+        for a, b in zip(jax.tree.leaves(outs[False][1]),
+                        jax.tree.leaves(outs[True][1])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
     def test_ep_presets_build(self):
         """Every shipped EP preset wires a valid policy end to end
-        (get_ep_preset validates arch family / expert-axis divisibility)."""
+        (get_ep_preset validates arch family / expert-axis divisibility,
+        and the preset policy ships the streamed dispatch)."""
         from repro.configs import EP_PRESET_NAMES
 
         for name in EP_PRESET_NAMES:
             preset = get_ep_preset(name)
-            assert preset.step.resolved_transport().moe == "auto"
+            policy = preset.step.resolved_transport()
+            assert policy.moe == "auto"
+            assert policy.moe_stream_chunks and policy.moe_stream_chunks > 1
             assert preset.config.n_experts % preset.expert_axis == 0

@@ -1,0 +1,63 @@
+"""CI gate over BENCH_overlap.json: streamed must never model slower than bulk.
+
+``benchmarks/overlap_pipeline.py`` writes, per EP preset operating point
+and link model, the modeled bulk and best-streamed wall times.  This gate
+fails (exit 1) if any preset operating point's **best-link** streamed
+schedule regresses below 1.0× of bulk — i.e. if a change to the scheduler,
+the conduit cost model, or the netmodel makes the pipeline the *wrong*
+choice at an operating point the presets actually ship.  (The stronger
+> 1.2× acceptance claim is asserted inside the benchmark itself; the gate
+is the regression floor.)
+
+Usage: ``python tools/bench_gate.py [path-to-BENCH_overlap.json]``
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FLOOR = 1.0
+
+
+def check(path: str) -> int:
+    """Exit code: 0 when every preset operating point clears the floor."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = [r for r in payload.get("rows", [])
+            if r.get("source") == "preset-model"]
+    if not rows:
+        print(f"bench_gate: no preset-model rows in {path}")
+        return 1
+
+    points = {}
+    for r in rows:
+        key = (r["preset"], r["tokens_per_rank"])
+        points.setdefault(key, []).append(r)
+    failures = []
+    for (preset, tokens), rs in sorted(points.items()):
+        best = max(rs, key=lambda r: r["speedup"])
+        status = "ok" if best["speedup"] >= FLOOR else "FAIL"
+        print(f"bench_gate: {preset} @ {tokens} tok/rank: best "
+              f"{best['speedup']:.2f}x on {best['link']} "
+              f"({best['transport']}, {best['stream_chunks']} chunks) "
+              f"[{status}]")
+        if best["speedup"] < FLOOR:
+            failures.append((preset, tokens, best["speedup"]))
+
+    claim = payload.get("claims", {}).get("ep_min_speedup_best_link")
+    print(f"bench_gate: worst best-link speedup across presets: {claim}")
+    if failures:
+        print(f"bench_gate: {len(failures)} operating point(s) below "
+              f"{FLOOR}x: {failures}")
+        return 1
+    print("bench_gate: all preset operating points clear the floor")
+    return 0
+
+
+if __name__ == "__main__":
+    target = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        REPO_ROOT, "BENCH_overlap.json")
+    sys.exit(check(target))
