@@ -31,6 +31,7 @@ def main() -> None:
         moe_dispatch,
         overlap_pipeline,
         roofline_bench,
+        serve_bench,
         transport_sweep,
     )
 
@@ -45,6 +46,7 @@ def main() -> None:
         # after transport/moe: the overlap suite fits the netmodel against
         # their freshly written measured rows
         ("overlap(pipeline sweep)", overlap_pipeline.main),
+        ("serve(streamed serving)", serve_bench.main),
         ("roofline(§Roofline)", roofline_bench.main),
     ]
     failed = []

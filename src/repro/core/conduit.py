@@ -686,6 +686,36 @@ def pipeline_estimate(
     return nm.pipeline_time([compute_time / c] * c, [per_wire] * c)
 
 
+def crossover_bytes(
+    op: str,
+    *,
+    axis_size: int,
+    link: nm.LinkParams = nm.FSHMEM_QSFP,
+    lo: int = 16,
+    hi: int = 1 << 30,
+) -> Optional[int]:
+    """Smallest payload (bytes, power-of-two grid) where :func:`auto_select`
+    leaves ``xla`` for a ring family — the Fig.-5 message-size threshold as
+    one number per (op, axis size, link).
+
+    Serving uses it to place decode-time messages: an EP decode exchange
+    above this size rides the ring transports, below it ``xla`` (and the
+    dense-combine fallback) wins (``benchmarks/serve_bench.py``,
+    docs/serving.md).  Returns ``None`` when ``auto`` never leaves ``xla``
+    in ``[lo, hi]``.
+    """
+    if axis_size <= 1:
+        return None
+    s = lo
+    while s <= hi:
+        name, _ = auto_select(op, size_bytes=s, axis_size=axis_size,
+                              link=link)
+        if name != "xla":
+            return s
+        s *= 2
+    return None
+
+
 def auto_select_pipeline(
     op: str,
     *,
@@ -851,6 +881,6 @@ class Conduit:
 __all__ = [
     "OPS", "LINKS", "CHUNK_CANDIDATES", "PIPELINE_CHUNKS", "Conduit",
     "register", "transports", "resolve",
-    "estimate_time", "auto_select",
+    "estimate_time", "auto_select", "crossover_bytes",
     "pipeline_estimate", "auto_select_pipeline",
 ]

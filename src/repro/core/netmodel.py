@@ -287,6 +287,31 @@ def art_speedup(
     )
 
 
+def serve_prefill_time(
+    link: LinkParams,
+    t_compute: float,
+    cache_bytes: float,
+    n_chunks: int,
+    packet_size: int,
+) -> float:
+    """TTFT model of a (chunked) prefill — the serving half of ART.
+
+    The prompt's forward produces the decode cache; writing it into the
+    (remote / sequence-sharded) cache region is the paper's one-sided bulk
+    ``gasnet_put``.  ``n_chunks = 1`` is bulk prefill: compute fully, then
+    one PUT of ``cache_bytes`` — the first token cannot be sampled before
+    both finish.  ``n_chunks > 1`` is the chunked streamed prefill of
+    ``models/prefill.prefill_chunked``: chunk *k*'s cache PUT rides under
+    chunk *k+1*'s forward (uniform-chunk :func:`pipeline_time`), so TTFT
+    approaches ``t_compute`` + one chunk's PUT.
+    """
+    c = max(1, int(n_chunks))
+    tx = put_time(link, max(1, -(-int(cache_bytes) // c)), packet_size)
+    if c == 1:
+        return t_compute + tx
+    return pipeline_time([t_compute / c] * c, [tx] * c)
+
+
 def best_chunk_count(
     t_compute: float,
     t_comm: float,

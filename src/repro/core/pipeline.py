@@ -20,7 +20,10 @@ Three loop shapes, one discipline:
   hook folds whatever the transfer delivered.  ``loop=True`` rolls the body
   into ``lax.fori_loop`` (uniform chunks, O(1) trace size — what
   ``core/art.py`` builds on); the default unrolled form permits uneven
-  chunk shapes.
+  chunk shapes.  :func:`chunk_pipeline_carried` is the same loop for
+  producers whose computes chain through a carry (chunked prefill: chunk
+  *k* attends to the K/V chunks ``< k`` wrote) while the payload path
+  stays pipelined.
 * :func:`streamed` — the *consumer* pipeline: chunk *k*'s collective is
   issued, then chunk *k−1*'s result is consumed while *k* is in flight.
   ``Conduit.streamed`` binds this to the transport registry; the streamed
@@ -136,6 +139,42 @@ def chunk_pipeline(
     return consume(state, n - 1, transfer(n - 1, prev))
 
 
+def chunk_pipeline_carried(
+    n: int,
+    compute: Callable[[int, Any], Tuple[Any, Any]],
+    transfer: Callable[[int, Any], Any],
+    consume: Callable[[Any, int, Any], Any],
+    *,
+    carry: Any,
+    init: Any = None,
+) -> Tuple[Any, Any]:
+    """:func:`chunk_pipeline` with a sequential carry through the computes.
+
+    ``compute(k, carry) -> (payload_k, carry')`` — for producers whose
+    chunks are *data-dependent in sequence* (chunked prefill: chunk *k*'s
+    attention reads the K/V scratch chunks ``< k`` wrote) but whose
+    **payload path stays pipelined**: the transfer/consume of chunk *k−1*
+    is issued before compute of chunk *k* and depends only on ``payload``,
+    never on ``carry`` — the ART overlap window holds for the wire even
+    though the computes chain.  Unrolled only (the carry chain rules out
+    ``fori_loop`` without shape-uniform chunks; uneven chunks welcome).
+
+    Returns ``(state, carry)`` after all ``n`` chunks.
+    """
+    first, carry = compute(0, carry)
+    state = init(first) if callable(init) else init
+    if n <= 1:
+        return consume(state, 0, transfer(0, first)), carry
+
+    prev = first
+    for k in range(1, n):
+        arrived = transfer(k - 1, prev)     # chunk k−1's payload in flight
+        nxt, carry = compute(k, carry)      # ... while chunk k computes
+        state = consume(state, k - 1, arrived)
+        prev = nxt
+    return consume(state, n - 1, transfer(n - 1, prev)), carry
+
+
 # ---------------------------------------------------------------------------
 # The consumer pipeline (streamed collectives)
 # ---------------------------------------------------------------------------
@@ -198,5 +237,5 @@ def ring_pipeline(wire, perms: Sequence, axis: str, hops: int, body) -> Any:
 
 __all__ = [
     "chunk_slices", "n_chunks", "split",
-    "chunk_pipeline", "streamed", "ring_pipeline",
+    "chunk_pipeline", "chunk_pipeline_carried", "streamed", "ring_pipeline",
 ]

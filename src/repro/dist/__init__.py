@@ -32,8 +32,10 @@ from repro.dist.steps import (
     StepConfig,
     TransportPolicy,
     build_init,
+    build_prefill_chunk_step,
     build_prefill_step,
     build_serve_step,
+    build_slot_write_step,
     build_train_step,
 )
 
@@ -45,5 +47,6 @@ __all__ = [
     "MeshAxes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
     "param_pspecs", "to_shardings",
     "StepBundle", "StepConfig", "TransportPolicy", "build_init",
-    "build_prefill_step", "build_serve_step", "build_train_step",
+    "build_prefill_chunk_step", "build_prefill_step", "build_serve_step",
+    "build_slot_write_step", "build_train_step",
 ]

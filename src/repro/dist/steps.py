@@ -68,7 +68,13 @@ from repro.models import layers as L
 from repro.models import moe_ep
 from repro.models.decode import decode_step, init_cache
 from repro.models.model import init_params
-from repro.models.prefill import prefill
+from repro.models.prefill import (
+    init_prefill_scratch,
+    prefill,
+    prefill_chunk,
+    prefill_chunked,
+    supports_chunked_prefill,
+)
 from repro.models.shardctx import activation_sharding
 from repro.optim import (
     AdamWConfig,
@@ -449,14 +455,34 @@ def build_train_step(cfg: ModelConfig, mesh, scfg: StepConfig,
 
 def build_prefill_step(cfg: ModelConfig, mesh, scfg: StepConfig,
                        batch: int, seq_len: int,
-                       with_frontend: Optional[Tuple[int, int]] = None
-                       ) -> StepBundle:
+                       with_frontend: Optional[Tuple[int, int]] = None,
+                       chunks: Optional[int] = None,
+                       cache_len: Optional[int] = None) -> StepBundle:
     """``fn(params, tokens[, frontend_embeds]) -> (cache, logits)``:
-    forward over the prompt that also materializes the decode cache."""
+    forward over the prompt that also materializes the decode cache.
+
+    ``chunks`` > 1 builds the **chunked streamed prefill** instead: the
+    prompt runs as that many ART chunks through
+    ``pipeline.chunk_pipeline_carried`` so chunk *k*'s forward overlaps
+    chunk *k−1*'s cache write (``models/prefill.prefill_chunked``) —
+    bit-identical cache and logits to the bulk program (archs outside
+    ``supports_chunked_prefill`` fall back to bulk).
+
+    ``cache_len`` sizes the ring buffer independently of the prompt
+    (default: the prompt length) — the server's per-slot admission prefill
+    sizes it to the batched cache's ``max_seq``."""
     params_shape, _ = _state_shapes(cfg, scfg)
     pspecs = param_pspecs(cfg, mesh, params_shape)
     constrain = _constraint_fn(cfg, mesh, scfg)
     dp = dp_axes(mesh)
+    n_chunks = int(chunks or 1)
+    cap = cache_len or seq_len
+
+    def run(params, tokens, fe=None):
+        if n_chunks > 1:
+            return prefill_chunked(cfg, params, tokens, fe,
+                                   cache_len=cap, n_chunks=n_chunks)
+        return prefill(cfg, params, tokens, fe, cache_len=cap)
 
     arg_shapes = [jax.ShapeDtypeStruct((batch, seq_len), jnp.int32)]
     arg_specs = [P(fit_axis(mesh, dp, batch), None)]
@@ -468,18 +494,18 @@ def build_prefill_step(cfg: ModelConfig, mesh, scfg: StepConfig,
 
     if with_frontend is None:
         def raw(params, tokens):
-            return prefill(cfg, params, tokens, cache_len=seq_len)
+            return run(params, tokens)
 
         def fwd(params, tokens):
             with activation_sharding(constrain):
-                return prefill(cfg, params, tokens, cache_len=seq_len)
+                return run(params, tokens)
     else:
         def raw(params, tokens, fe):
-            return prefill(cfg, params, tokens, fe, cache_len=seq_len)
+            return run(params, tokens, fe)
 
         def fwd(params, tokens, fe):
             with activation_sharding(constrain):
-                return prefill(cfg, params, tokens, fe, cache_len=seq_len)
+                return run(params, tokens, fe)
 
     cache_shape, logits_shape = jax.eval_shape(raw, params_shape, *arg_shapes)
     cspecs = cache_pspecs(cfg, mesh, cache_shape)
@@ -499,10 +525,47 @@ def build_prefill_step(cfg: ModelConfig, mesh, scfg: StepConfig,
     )
 
 
+def _moe_decode_runner(cfg: ModelConfig, mesh, policy: TransportPolicy,
+                       batch: int) -> Optional[Callable]:
+    """The latency-mode EP decode runner, or None (dense-combine decode).
+
+    ``policy.moe`` non-``xla`` with a usable ``expert`` axis batches the
+    step's B decode tokens across the expert shards through
+    ``Conduit("expert").all_to_all`` (``models/moe_ep.py`` with
+    ``decode=True``).  Batches the mesh cannot split keep dense-combine —
+    the weight-bound small-batch fallback."""
+    if policy.moe == "xla" or cfg.family != "moe":
+        return None
+    if batch % mesh.size:
+        warnings.warn(
+            f"TransportPolicy.moe={policy.moe!r} requested but the serve "
+            f"batch ({batch}) does not divide the mesh ({mesh.size}); "
+            f"decode keeps the dense-combine fallback", stacklevel=3)
+        return None
+    return moe_ep.build_moe_ep_runner(
+        cfg, mesh, transport=policy.moe, chunk_bytes=policy.chunk_bytes,
+        decode=True)
+
+
 def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
-                     batch: int, max_seq: int) -> StepBundle:
-    """``fn(params, cache, tokens) -> (cache, logits)``: one batched decode
-    step against the ring-buffer cache (continuous-batching inner loop)."""
+                     batch: int, max_seq: int, *,
+                     sample: bool = False) -> StepBundle:
+    """``fn(params, cache, tokens) -> (cache, logits | token_ids)``: one
+    batched decode step against the ring-buffer cache (continuous-batching
+    inner loop; every cache row advances at its own per-slot position).
+
+    The cache is **donated** — in/out shardings match leaf-for-leaf, so on
+    backends with donation the step updates the ring buffers in place
+    instead of copying the whole cache every token.
+
+    ``sample=True`` returns greedy-sampled ``(B,)`` int32 token ids instead
+    of the (B, V) logits: argmax runs on device and the server fetches one
+    stacked id vector per step instead of syncing per-slot logits.
+
+    ``TransportPolicy.moe`` ≠ ``xla`` (with an ``expert`` mesh axis and a
+    mesh-divisible batch) swaps the dense-combine MoE decode for the
+    expert-parallel conduit dispatch — see :func:`_moe_decode_runner`.
+    """
     params_shape, _ = _state_shapes(cfg, scfg)
     pspecs = param_pspecs(cfg, mesh, params_shape)
     cache_shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
@@ -510,10 +573,16 @@ def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
     dp = dp_axes(mesh)
     b_entry = fit_axis(mesh, dp, batch)
     tok_spec = P(b_entry)
-    logit_spec = P(b_entry, None)
+    out_spec = P(b_entry) if sample else P(b_entry, None)
+    moe_runner = _moe_decode_runner(cfg, mesh, scfg.resolved_transport(),
+                                    batch)
 
     def fn_(params, cache, tokens):
-        return decode_step(cfg, params, cache, tokens)
+        cache, logits = decode_step(cfg, params, cache, tokens,
+                                    moe_runner=moe_runner)
+        if sample:
+            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return cache, logits
 
     fn = jax.jit(
         fn_,
@@ -521,16 +590,102 @@ def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
                       to_shardings(mesh, cspecs),
                       NamedSharding(mesh, tok_spec)),
         out_shardings=(to_shardings(mesh, cspecs),
-                       NamedSharding(mesh, logit_spec)))
+                       NamedSharding(mesh, out_spec)),
+        donate_argnums=(1,))
     return StepBundle(
         fn=fn,
         in_specs=(pspecs, cspecs, tok_spec),
-        out_specs=(cspecs, logit_spec),
+        out_specs=(cspecs, out_spec),
         aux={"params_shape": params_shape, "cache_shape": cache_shape},
+    )
+
+
+def build_prefill_chunk_step(cfg: ModelConfig, mesh, scfg: StepConfig,
+                             batch: int, prompt_len: int,
+                             lo: int, chunk_len: int) -> StepBundle:
+    """``fn(params, scratch, tokens) -> (scratch, logits)``: one incremental
+    prefill chunk at static offset ``lo`` (the server's admission step).
+
+    The scratch is **donated** (same spec in and out), so each chunk
+    updates the K/V buffers in place; the final chunk's logits seed the
+    request's first decode token.  Requires
+    ``models/prefill.supports_chunked_prefill(cfg)``.
+    """
+    assert supports_chunked_prefill(cfg), cfg.name
+    params_shape, _ = _state_shapes(cfg, scfg)
+    pspecs = param_pspecs(cfg, mesh, params_shape)
+    constrain = _constraint_fn(cfg, mesh, scfg)
+    scratch_shape = jax.eval_shape(
+        lambda: init_prefill_scratch(cfg, batch, prompt_len))
+    sspecs = cache_pspecs(cfg, mesh, scratch_shape)
+    dp = dp_axes(mesh)
+    b_entry = fit_axis(mesh, dp, batch)
+    tok_spec = P(b_entry, None)
+    logit_spec = P(b_entry, None)
+
+    def fn_(params, scratch, tokens):
+        with activation_sharding(constrain):
+            return prefill_chunk(cfg, params, scratch, tokens, lo)
+
+    fn = jax.jit(
+        fn_,
+        in_shardings=(to_shardings(mesh, pspecs),
+                      to_shardings(mesh, sspecs),
+                      NamedSharding(mesh, tok_spec)),
+        out_shardings=(to_shardings(mesh, sspecs),
+                       NamedSharding(mesh, logit_spec)),
+        donate_argnums=(1,))
+    return StepBundle(
+        fn=fn,
+        in_specs=(pspecs, sspecs, tok_spec),
+        out_specs=(sspecs, logit_spec),
+        aux={"params_shape": params_shape, "scratch_shape": scratch_shape,
+             "lo": lo, "chunk_len": chunk_len},
+    )
+
+
+def build_slot_write_step(cfg: ModelConfig, mesh, batch: int,
+                          max_seq: int) -> StepBundle:
+    """``fn(cache, slot_cache, i) -> cache``: write a single-request cache
+    (batch 1) into row ``i`` of every leaf of the batched decode cache —
+    the per-slot admission PUT of the continuous-batching server.  The
+    batched cache is **donated**; only row ``i`` moves."""
+    full_shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    one_shape = jax.eval_shape(lambda: init_cache(cfg, 1, max_seq))
+    # the batch axis of each leaf, found structurally (it differs per
+    # family: (L, B, ...) stacks vs (B, ...) bookkeeping)
+    two_shape = jax.eval_shape(lambda: init_cache(cfg, 2, max_seq))
+    baxes = {
+        k: next(i for i, (a, b) in enumerate(
+            zip(two_shape[k].shape, one_shape[k].shape)) if a != b)
+        for k in one_shape
+    }
+    cspecs = cache_pspecs(cfg, mesh, full_shape)
+    sspecs = cache_pspecs(cfg, mesh, one_shape)
+
+    def fn_(cache, slot, i):
+        return {
+            k: lax.dynamic_update_slice_in_dim(
+                cache[k], slot[k].astype(cache[k].dtype), i, axis=baxes[k])
+            for k in cache
+        }
+
+    fn = jax.jit(
+        fn_,
+        in_shardings=(to_shardings(mesh, cspecs),
+                      to_shardings(mesh, sspecs), _scalar_sharding(mesh)),
+        out_shardings=to_shardings(mesh, cspecs),
+        donate_argnums=(0,))
+    return StepBundle(
+        fn=fn,
+        in_specs=(cspecs, sspecs, P()),
+        out_specs=cspecs,
+        aux={"cache_shape": full_shape, "batch_axes": baxes},
     )
 
 
 __all__ = [
     "StepConfig", "StepBundle", "TransportPolicy", "build_init",
-    "build_train_step", "build_prefill_step", "build_serve_step", "MeshAxes",
+    "build_train_step", "build_prefill_step", "build_serve_step",
+    "build_prefill_chunk_step", "build_slot_write_step", "MeshAxes",
 ]

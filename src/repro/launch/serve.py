@@ -1,8 +1,12 @@
 """Serving launcher: ``python -m repro.launch.serve --arch smollm-360m``.
 
-Continuous-batching decode over a CPU mesh with reduced configs; the
-production path is identical modulo mesh + config size (dry-run covers the
-full-scale lowering).
+Continuous batching with chunked streamed prefill over a CPU mesh with
+reduced configs; the production path is identical modulo mesh + config
+size (dry-run covers the full-scale lowering).  ``--prefill-chunk 0``
+falls back to bulk per-slot admission (the head-of-line-blocking
+baseline the chunked scheduler exists to kill); ``--expert-axis`` +
+``--moe-transport`` route MoE decode through the expert-parallel conduit
+dispatch (``docs/serving.md``).
 """
 
 from __future__ import annotations
@@ -14,7 +18,7 @@ import numpy as np
 
 
 def main():
-    p = argparse.ArgumentParser()
+    p = argparse.ArgumentParser(description=__doc__)
     p.add_argument("--arch", default="smollm-360m")
     p.add_argument("--requests", type=int, default=16)
     p.add_argument("--prompt-len", type=int, default=16)
@@ -22,38 +26,63 @@ def main():
     p.add_argument("--max-batch", type=int, default=4)
     p.add_argument("--data-axis", type=int, default=2)
     p.add_argument("--model-axis", type=int, default=2)
+    p.add_argument("--expert-axis", type=int, default=1,
+                   help="EP decode: expert mesh-axis extent (MoE archs)")
+    p.add_argument("--moe-transport", default="xla",
+                   help="TransportPolicy.moe for EP decode "
+                        "(xla|ring|bidir|auto)")
+    p.add_argument("--prefill-chunk", type=int, default=8,
+                   help="tokens per admitted prefill chunk (0: bulk "
+                        "per-slot admission)")
+    p.add_argument("--arrive-every", type=int, default=0,
+                   help="synthetic arrivals: submit one request every N "
+                        "scheduler steps (0: all upfront)")
     args = p.parse_args()
 
-    n_dev = args.data_axis * args.model_axis
+    n_dev = args.data_axis * args.model_axis * args.expert_axis
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={n_dev}")
 
     import jax
     from repro.configs import get_config
     from repro.dist.sharding import param_pspecs, to_shardings
+    from repro.dist.steps import StepConfig, TransportPolicy
     from repro.launch.mesh import make_host_mesh
     from repro.models.model import init_params
-    from repro.runtime.server import Server, ServerConfig
+    from repro.runtime.server import Server, ServerConfig, drive_arrivals
 
     cfg = get_config(args.arch).reduced()
-    mesh = make_host_mesh(args.data_axis, args.model_axis)
+    mesh = make_host_mesh(args.data_axis, args.model_axis, args.expert_axis)
     params_shape = jax.eval_shape(
         lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
     psh = to_shardings(mesh, param_pspecs(cfg, mesh, params_shape))
     params = jax.jit(lambda k: init_params(cfg, k), out_shardings=psh)(
         jax.random.PRNGKey(0))
 
-    srv = Server(cfg, params, mesh, srv=ServerConfig(
-        max_batch=args.max_batch, max_seq=256, max_new_tokens=args.max_new))
+    scfg = StepConfig(transport=TransportPolicy(moe=args.moe_transport))
+    srv = Server(cfg, params, mesh, scfg=scfg, srv=ServerConfig(
+        max_batch=args.max_batch, max_seq=256, max_new_tokens=args.max_new,
+        prefill_chunk=args.prefill_chunk or None))
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        srv.submit(rng.integers(0, cfg.vocab_size, size=args.prompt_len))
-    steps = srv.run()
+    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+               for _ in range(args.requests)]
+
+    if args.arrive_every:
+        steps = drive_arrivals(srv, prompts, args.arrive_every)
+    else:
+        for pr in prompts:
+            srv.submit(pr)
+        steps = srv.run()
+
     stats = srv.stats()
-    print(f"[serve] {stats['requests']} requests, {stats['tokens']} tokens "
-          f"in {steps} steps; {stats['throughput_tok_s']:.1f} tok/s, "
+    mode = (f"chunked({args.prefill_chunk})" if srv.chunked_admission
+            else "bulk")
+    print(f"[serve:{mode}] {stats['requests']} requests, "
+          f"{stats['tokens']} tokens in {steps} steps; "
+          f"{stats['throughput_tok_s']:.1f} tok/s, "
           f"mean latency {stats['mean_latency_s']*1e3:.1f} ms, "
-          f"ttft {stats['mean_ttft_s']*1e3:.1f} ms")
+          f"ttft {stats['mean_ttft_s']*1e3:.1f} ms, "
+          f"itl {stats['mean_itl_s']*1e3:.2f} ms")
 
 
 if __name__ == "__main__":

@@ -5,9 +5,14 @@ new token against a populated cache), never ``train_step``.
 
 Cache design notes (these drive the decode-shape roofline memory term):
 
+* Positions are **per slot**: ``cache["pos"]`` is ``(B,)`` and
+  ``slot_pos`` is ``(B, S_buf)``, so every batch row of the cache advances
+  independently — the continuous-batching server admits a freshly
+  prefilled request into one row while the other rows keep decoding at
+  their own positions (``runtime/server.py``).
 * GQA: ring-buffer K/V — ``S_buf = min(max_seq, window)``; for h2o-danube's
   4096-token sliding window the long_500k cache is 4096 slots, not 500k
-  (the reason the arch runs that shape at all).  A shared ``slot_pos``
+  (the reason the arch runs that shape at all).  A per-row ``slot_pos``
   array maps buffer slots to absolute positions; masking validates
   ``pos - window < slot_pos <= pos``.
 * MLA (minicpm3): caches the 256-d latent + 32-d shared rope key instead of
@@ -39,7 +44,20 @@ def _cd(cfg):
     return jnp.dtype(cfg.compute_dtype)
 
 
-def _kv_buf(cfg: ModelConfig, max_seq: int) -> int:
+#: decoder self-attention ring cap for encdec archs (whisper-style)
+ENCDEC_DECODER_CAP = 4096
+
+
+def kv_buf_len(cfg: ModelConfig, max_seq: int) -> int:
+    """Ring-buffer extent of the K/V cache for ``max_seq`` positions.
+
+    The one owner of the sizing rule — ``init_cache``, both prefill paths
+    (``models/prefill.py``), and the step builders all call it: the SWA
+    window caps the buffer (h2o-danube keeps 4096 slots at 500k context),
+    and encdec decoders cap at :data:`ENCDEC_DECODER_CAP`.
+    """
+    if cfg.family == "encdec":
+        return min(max_seq, ENCDEC_DECODER_CAP)
     return min(max_seq, cfg.window) if cfg.window else max_seq
 
 
@@ -53,17 +71,17 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                params: Optional[Params] = None) -> Cache:
     dt = jnp.dtype(cfg.param_dtype)
     hd = cfg.resolved_head_dim if cfg.n_heads else 0
-    sb = _kv_buf(cfg, max_seq)
-    cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
+    sb = kv_buf_len(cfg, max_seq)
+    cache: Cache = {"pos": jnp.zeros((batch,), jnp.int32)}
 
     if cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla":
         cache["k"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sb, hd), dt)
         cache["v"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sb, hd), dt)
-        cache["slot_pos"] = jnp.full((sb,), -1, jnp.int32)
+        cache["slot_pos"] = jnp.full((batch, sb), -1, jnp.int32)
     elif cfg.attn_type == "mla":
         cache["ckv"] = jnp.zeros((cfg.n_layers, batch, sb, cfg.kv_lora_rank), dt)
         cache["krope"] = jnp.zeros((cfg.n_layers, batch, sb, cfg.qk_rope_dim), dt)
-        cache["slot_pos"] = jnp.full((sb,), -1, jnp.int32)
+        cache["slot_pos"] = jnp.full((batch, sb), -1, jnp.int32)
     elif cfg.family == "ssm":
         cache.update(_ssm_cache(cfg, cfg.n_layers, batch, dt))
     elif cfg.family == "hybrid":
@@ -71,12 +89,12 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
         n_apps = cfg.n_layers // cfg.hybrid_period
         cache["attn_k"] = jnp.zeros((n_apps, batch, cfg.n_kv_heads, sb, hd), dt)
         cache["attn_v"] = jnp.zeros((n_apps, batch, cfg.n_kv_heads, sb, hd), dt)
-        cache["slot_pos"] = jnp.full((sb,), -1, jnp.int32)
+        cache["slot_pos"] = jnp.full((batch, sb), -1, jnp.int32)
     elif cfg.family == "encdec":
-        sdec = min(max_seq, 4096)
+        sdec = kv_buf_len(cfg, max_seq)
         cache["k"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sdec, hd), dt)
         cache["v"] = jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, sdec, hd), dt)
-        cache["slot_pos"] = jnp.full((sdec,), -1, jnp.int32)
+        cache["slot_pos"] = jnp.full((batch, sdec), -1, jnp.int32)
         if enc_out is not None:
             assert params is not None
             def xkv(lp):
@@ -115,13 +133,31 @@ def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
 # ---------------------------------------------------------------------------
 
 
-def _masked_softmax_attend(scores, vcache, slot_pos, pos, window):
-    """scores: (B, Hkv, G, S_buf) fp32; vcache: (B, Hkv, S_buf, hd)."""
+def _valid_slots(slot_pos, pos, window):
+    """Per-row key validity: ``slot_pos`` (B, S_buf) against ``pos`` (B,)."""
     valid = slot_pos >= 0
-    valid &= slot_pos <= pos
+    valid &= slot_pos <= pos[:, None]
     if window is not None:
-        valid &= slot_pos > pos - window
-    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+        valid &= slot_pos > (pos - window)[:, None]
+    return valid
+
+
+def _row_update(buf, new, slot):
+    """Write ``new`` (B, ..., 1, d) into ``buf`` (B, ..., S_buf, d) at the
+    per-row ring slot ``slot`` (B,) — the vmapped dynamic-update the shared
+    scalar position used to do in one call."""
+    def one(b, n, s):
+        start = (0,) * (b.ndim - 2) + (s, 0)
+        return lax.dynamic_update_slice(b, n, start)
+
+    return jax.vmap(one)(buf, new.astype(buf.dtype), slot)
+
+
+def _masked_softmax_attend(scores, vcache, slot_pos, pos, window):
+    """scores: (B, Hkv, G, S_buf) fp32; vcache: (B, Hkv, S_buf, hd);
+    ``slot_pos`` (B, S_buf) / ``pos`` (B,) are per batch row."""
+    valid = _valid_slots(slot_pos, pos, window)
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
     m = scores.max(-1, keepdims=True)
     p = jnp.where(scores <= -1e29, 0.0, jnp.exp(scores - m))
     denom = jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
@@ -133,7 +169,8 @@ def attention_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                      kc: jnp.ndarray, vc: jnp.ndarray,
                      slot_pos_new: jnp.ndarray, pos: jnp.ndarray,
                      rope: bool = True, window: Optional[int] = None):
-    """x: (B, D) single token.  Returns (out (B, D), kc, vc)."""
+    """x: (B, D) single token; ``pos`` (B,) per-row.  Returns
+    (out (B, D), kc, vc)."""
     b, _ = x.shape
     hd = cfg.resolved_head_dim
     hkv, hq = cfg.n_kv_heads, cfg.n_heads
@@ -146,15 +183,13 @@ def attention_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     k = (xc @ p["wk"].astype(cd)).reshape(b, hkv, hd)
     v = (xc @ p["wv"].astype(cd)).reshape(b, hkv, hd)
     if rope:
-        posv = pos[None]
+        posv = pos[:, None, None]
         q = L.apply_rope(q[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
         k = L.apply_rope(k[:, :, None, :], posv, cfg.rope_theta)[:, :, 0]
 
     slot = pos % sb
-    kc = lax.dynamic_update_slice(kc, k[:, :, None, :].astype(kc.dtype),
-                                  (0, 0, slot, 0))
-    vc = lax.dynamic_update_slice(vc, v[:, :, None, :].astype(vc.dtype),
-                                  (0, 0, slot, 0))
+    kc = _row_update(kc, k[:, :, None, :], slot)
+    vc = _row_update(vc, v[:, :, None, :], slot)
     qg = q.reshape(b, hkv, g, hd).astype(jnp.float32) * hd ** -0.5
     scores = jnp.einsum("bkgd,bksd->bkgs", qg, kc.astype(jnp.float32))
     out = _masked_softmax_attend(scores, vc, slot_pos_new, pos, window)
@@ -183,7 +218,8 @@ def cross_attention_decode(cfg, p, x, kc, vc, n_valid: int):
 def mla_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
                ckv: jnp.ndarray, krope: jnp.ndarray,
                slot_pos_new: jnp.ndarray, pos: jnp.ndarray):
-    """Absorbed MLA decode.  x: (B, D); ckv: (B, S_buf, r); krope: (B, S_buf, dr)."""
+    """Absorbed MLA decode.  x: (B, D); ckv: (B, S_buf, r);
+    krope: (B, S_buf, dr); ``pos`` (B,) per-row."""
     b, _ = x.shape
     h, dn, dr, dv = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     r = cfg.kv_lora_rank
@@ -194,26 +230,25 @@ def mla_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
     q_lat = L.rms_norm(p["q_norm"], xc @ p["w_dq"].astype(cd), cfg.norm_eps)
     q = (q_lat @ p["w_uq"].astype(cd)).reshape(b, h, dn + dr)
     q_nope, q_rope = q[..., :dn], q[..., dn:]
-    q_rope = L.apply_rope(q_rope[:, :, None, :], pos[None], cfg.rope_theta)[:, :, 0]
+    q_rope = L.apply_rope(q_rope[:, :, None, :], pos[:, None, None],
+                          cfg.rope_theta)[:, :, 0]
     w_uk = p["w_uk"].astype(cd).reshape(r, h, dn)
     q_eff = jnp.einsum("bhd,rhd->bhr", q_nope, w_uk)      # absorb W_uk
 
     dkv = xc @ p["w_dkv"].astype(cd)
     c_new = L.rms_norm(p["kv_norm"], dkv[:, :r], cfg.norm_eps)
-    kr_new = L.apply_rope(dkv[:, None, None, r:], pos[None],
+    kr_new = L.apply_rope(dkv[:, None, None, r:], pos[:, None, None],
                           cfg.rope_theta)[:, 0, 0]
     slot = pos % sb
-    ckv = lax.dynamic_update_slice(ckv, c_new[:, None, :].astype(ckv.dtype),
-                                   (0, slot, 0))
-    krope = lax.dynamic_update_slice(krope, kr_new[:, None, :].astype(krope.dtype),
-                                     (0, slot, 0))
+    ckv = _row_update(ckv, c_new[:, None, :], slot)
+    krope = _row_update(krope, kr_new[:, None, :], slot)
     scale = (dn + dr) ** -0.5
     scores = (jnp.einsum("bhr,bsr->bhs", q_eff.astype(jnp.float32),
                          ckv.astype(jnp.float32))
               + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
                            krope.astype(jnp.float32))) * scale
-    valid = (slot_pos_new >= 0) & (slot_pos_new <= pos)
-    scores = jnp.where(valid[None, None, :], scores, -1e30)
+    valid = _valid_slots(slot_pos_new, pos, None)
+    scores = jnp.where(valid[:, None, :], scores, -1e30)
     m = scores.max(-1, keepdims=True)
     pr = jnp.where(scores <= -1e29, 0.0, jnp.exp(scores - m))
     pr = pr / jnp.maximum(pr.sum(-1, keepdims=True), 1e-30)
@@ -266,14 +301,25 @@ def mamba2_decode(cfg: ModelConfig, p: Params, x: jnp.ndarray,
 
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
-                tokens: jnp.ndarray) -> Tuple[Cache, jnp.ndarray]:
-    """tokens: (B,) int32 — returns (cache', logits (B, V))."""
+                tokens: jnp.ndarray, *,
+                moe_runner: Optional[Any] = None) -> Tuple[Cache, jnp.ndarray]:
+    """tokens: (B,) int32 — returns (cache', logits (B, V)).
+
+    Every cache row advances at its own ``pos`` (continuous batching).
+
+    ``moe_runner`` (optional) replaces the dense-combine MoE layer with an
+    expert-parallel dispatch runner (``models/moe_ep.py`` — the latency-mode
+    EP decode: the step's B tokens batched across expert shards through the
+    conduit ``all_to_all``).  ``None`` keeps dense-combine, which stays the
+    small-batch fallback (weight-bound at decode shapes).
+    """
     pos = cache["pos"]
+    b = tokens.shape[0]
     x = jnp.take(params["embed"], tokens, axis=0)  # (B, D)
 
     if "slot_pos" in cache:
-        sb = cache["slot_pos"].shape[0]
-        slot_pos_new = cache["slot_pos"].at[pos % sb].set(pos)
+        sb = cache["slot_pos"].shape[1]
+        slot_pos_new = cache["slot_pos"].at[jnp.arange(b), pos % sb].set(pos)
     else:
         slot_pos_new = None
 
@@ -286,8 +332,11 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
             h = h + a
             normed2 = L.apply_norm(cfg, lp["ln2"], h)
             if cfg.family == "moe":
-                f = L.moe(cfg, lp["moe"], normed2[:, None, :],
-                          dense_combine=True)[:, 0]
+                if moe_runner is not None:
+                    f = moe_runner(cfg, lp["moe"], normed2[:, None, :])[:, 0]
+                else:
+                    f = L.moe(cfg, lp["moe"], normed2[:, None, :],
+                              dense_combine=True)[:, 0]
             else:
                 f = L.mlp(cfg, lp["mlp"], normed2)
             return h + f, (kc, vc)

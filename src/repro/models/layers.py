@@ -130,11 +130,13 @@ def sinusoidal_positions(seq: int, dim: int) -> jnp.ndarray:
 
 
 def _block_ranges(sq: int, skv: int, q_chunk: int, kv_chunk: int,
-                  causal: bool, window: Optional[int], skip: bool):
+                  causal: bool, window: Optional[int], skip: bool,
+                  offset: Optional[int] = None):
     """Static kv-block range visible to each q block."""
     n_q = -(-sq // q_chunk)
     n_kv = -(-skv // kv_chunk)
-    offset = skv - sq  # decode/prefill alignment: q row i is abs pos offset+i
+    if offset is None:
+        offset = skv - sq  # decode/prefill alignment: q row i is abs pos offset+i
     out = []
     for i in range(n_q):
         lo, hi = 0, n_kv
@@ -160,6 +162,7 @@ def blockwise_attention(
     q_chunk: int = 2048,
     kv_chunk: int = 2048,
     causal_skip: bool = True,
+    q_offset: Optional[int] = None,
 ) -> jnp.ndarray:
     """Flash-style online-softmax attention in pure jnp.
 
@@ -167,6 +170,16 @@ def blockwise_attention(
     only its *visible* kv range (``causal_skip``: drops the ~2× wasted FLOPs
     a dense causal mask pays — a measured lever in EXPERIMENTS §Perf); inner
     loop is ``lax.scan`` over kv chunks with running (m, l, acc).
+
+    ``q_offset`` pins q row 0 to an explicit absolute position instead of
+    the default right-aligned ``skv - sq`` convention — the chunked-prefill
+    path (``models/prefill.py``) attends a mid-sequence chunk of rows
+    against a full-length K/V scratch, so row ``i`` sits at ``q_offset + i``
+    with valid keys only in ``[0, q_offset + sq)``.  Keys at or beyond the
+    written prefix are excluded by the causal mask alone, and masked kv
+    blocks are exact no-ops of the online softmax (``alpha == 1``, zero
+    contributions), which is what keeps a chunked pass bit-identical to the
+    bulk pass per row.
     """
     b, hq, sq, dk = q.shape
     _, hkv, skv, _ = k.shape
@@ -175,7 +188,7 @@ def blockwise_attention(
     scale = scale if scale is not None else dk ** -0.5
     q_chunk = min(q_chunk, sq)
     kv_chunk = min(kv_chunk, skv)
-    offset = skv - sq
+    offset = skv - sq if q_offset is None else q_offset
 
     qg = q.reshape(b, hkv, group, sq, dk).astype(jnp.float32) * scale
     kf = k.astype(jnp.float32)
@@ -194,7 +207,7 @@ def blockwise_attention(
 
     outs = []
     for (i, lo, hi) in _block_ranges(sq, skv, q_chunk, kv_chunk, causal,
-                                     window, causal_skip):
+                                     window, causal_skip, offset):
         qi = lax.dynamic_slice_in_dim(qg, i * q_chunk, q_chunk, axis=3)
         rows = offset + i * q_chunk + jnp.arange(q_chunk)
 
@@ -244,21 +257,24 @@ def attention_core(
     cfg: ModelConfig,
     q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     *, causal: bool = True, window: Optional[int] = None,
-    scale: Optional[float] = None,
+    scale: Optional[float] = None, q_offset: Optional[int] = None,
 ) -> jnp.ndarray:
     impl = resolve_attn_impl(cfg)
-    if impl == "pallas" and q.shape[-1] == v.shape[-1]:
+    aligned = q_offset is None or q_offset == k.shape[2] - q.shape[2]
+    if impl == "pallas" and q.shape[-1] == v.shape[-1] and aligned:
         from repro.kernels.flash_attention import flash_attention
 
         return flash_attention(q, k, v, causal=causal, window=window, scale=scale)
-    if impl == "ref":
+    if impl == "ref" and aligned:
         from repro.kernels.flash_attention.ref import attention_ref
 
         return attention_ref(q, k, v, causal=causal, window=window, scale=scale)
+    # mid-sequence q offsets (chunked prefill) only exist in the blockwise
+    # path — the kernels keep the right-aligned convention
     return blockwise_attention(
         q, k, v, causal=causal, window=window, scale=scale,
         q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
-        causal_skip=cfg.causal_block_skip,
+        causal_skip=cfg.causal_block_skip, q_offset=q_offset,
     )
 
 

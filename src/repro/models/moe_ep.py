@@ -143,8 +143,8 @@ def _ep_ungated(cfg, x, router, w_up, w_down, *, conduit,
 
 def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
                         chunk_bytes: Optional[int] = None,
-                        stream_chunks: Optional[int] = None
-                        ) -> Optional[Callable]:
+                        stream_chunks: Optional[int] = None,
+                        decode: bool = False) -> Optional[Callable]:
     """MoE-layer runner routing expert dispatch through the conduit.
 
     Returns ``runner(cfg, moe_params, x) -> y`` — a drop-in for
@@ -153,6 +153,15 @@ def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
     expert-parallel path (the step then keeps the dense GSPMD layer).
     A batch that does not divide the mesh falls back per call, so prefill
     or eval shapes never fail to trace.
+
+    ``decode=True`` builds the **latency-mode EP decode** runner
+    (``dist/steps.build_serve_step``): ``x`` is the step's (B, 1, D) token
+    batch, and the B in-flight slots are batched across the expert shards
+    through the same conduit ``all_to_all`` — per-token capacity is exactly
+    one slot per routed expert (``s = 1``), so nothing drops and the layer
+    matches the dense-combine decode path.  Indivisible batches fall back
+    to dense-combine (the weight-bound small-batch path) instead of the
+    dispatch einsums.
 
     ``stream_chunks`` streams the exchange: the dispatch payload splits
     into that many ART chunks (clamped to the local row extent) and expert
@@ -179,7 +188,9 @@ def build_moe_ep_runner(cfg: ModelConfig, mesh, *, transport: str,
 
     def runner(cfg_: ModelConfig, p, x):
         if x.shape[0] % mesh.size:
-            return L.moe(cfg_, p, x)        # indivisible batch: dense path
+            # indivisible batch: dense path (decode keeps dense-combine —
+            # the weight-bound small-batch fallback)
+            return L.moe(cfg_, p, x, dense_combine=decode)
         w_gate = p.get("w_gate")
         if w_gate is not None:
             fn = jax.shard_map(

@@ -5,22 +5,38 @@
 ``decode.init_cache`` exactly, so ``decode_step`` continues from a prefill
 without reshaping (asserted by tests/test_serving.py).
 
-Ring-buffer fill: the cache keeps the last ``sb`` positions.  Position
-``p`` lives at slot ``p % sb``; for ``S >= sb`` the slots hold positions
-``[S−sb, S)`` as the permutation ``slot j ← pos S−sb+((j−S) mod sb)``, and
-for ``S < sb`` slots ``[S, sb)`` stay empty (``slot_pos = −1`` masks them).
+Ring-buffer fill: the cache keeps the last ``sb`` positions
+(``sb = decode.kv_buf_len(cfg, cap)``).  Position ``p`` lives at slot
+``p % sb``; for ``S >= sb`` the slots hold positions ``[S−sb, S)`` as the
+permutation ``slot j ← pos S−sb+((j−S) mod sb)``, and for ``S < sb`` slots
+``[S, sb)`` stay empty (``slot_pos = −1`` masks them).
+
+**Chunked streamed prefill** (:func:`prefill_chunked`): the prompt is split
+into fixed-size chunks driven by ``core/pipeline.chunk_pipeline_carried``
+— chunk *k*'s forward overlaps chunk *k−1*'s cache write (the paper's bulk
+``gasnet_put`` of the prompt cache turned into an ART stream; on a
+sequence-sharded cache the per-chunk ring scatter *is* the wire transfer).
+Each chunk attends against a full-length K/V scratch with the chunk's
+absolute ``q_offset``, so every row runs the exact bulk blockwise-softmax
+recipe and the resulting cache is **bit-identical** to :func:`prefill`
+(asserted by tests/test_serving.py, odd chunk sizes included).  The
+incremental flavor (:func:`prefill_chunk` over :func:`init_prefill_scratch`
+/ :func:`scratch_to_cache`) is what the continuous-batching server admits
+between decode steps.
 """
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core import pipeline as pl
 from repro.models import layers as L
+from repro.models.decode import kv_buf_len
 from repro.models.model import (
     _lm_logits,
     _maybe_remat,
@@ -208,14 +224,13 @@ def prefill(
 
     if cfg.family == "encdec":
         s = tokens.shape[1]
-        sb = min(cache_len or s, 4096)
+        sb = kv_buf_len(cfg, cache_len or s)
         x, cache = _prefill_encdec(cfg, params, tokens, frontend_embeds, sb)
         s_total = s
     else:
         x = constrain(_embed(cfg, params, tokens, frontend_embeds), "residual")
         s_total = x.shape[1]
-        cap = cache_len or s_total
-        sb = min(cap, cfg.window) if cfg.window else cap
+        sb = kv_buf_len(cfg, cache_len or s_total)
         positions = jnp.arange(s_total)
         if cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla":
             x, cache = _prefill_gqa(cfg, params, x, positions, sb)
@@ -232,5 +247,230 @@ def prefill(
     x = L.apply_norm(cfg, params["final_norm"], x)
     last = constrain(x[:, -1:, :], "logit_hidden")
     logits = _lm_logits(cfg, params, last)[:, 0]
-    cache["pos"] = jnp.asarray(s_total, jnp.int32)
-    return cache, logits
+    return _finish_cache(cache, tokens.shape[0], s_total), logits
+
+
+def _finish_cache(cache: Cache, batch: int, s_total: int) -> Cache:
+    """Stamp the per-slot position bookkeeping (every row at ``s_total``)."""
+    cache["pos"] = jnp.full((batch,), s_total, jnp.int32)
+    if "slot_pos" in cache:
+        cache["slot_pos"] = jnp.broadcast_to(
+            cache["slot_pos"], (batch,) + cache["slot_pos"].shape[-1:])
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# chunked streamed prefill (the ART schedule on the prompt hot path)
+# ---------------------------------------------------------------------------
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Whether the arch can take the chunked streamed prefill path.
+
+    Requires the GQA ring-buffer cache (dense/vlm non-MLA families; MoE
+    capacity is bookkept per call, so chunking would change its drop set)
+    and the blockwise attention impl (the ``q_offset`` convention only
+    exists there).  Everything else falls back to bulk :func:`prefill` —
+    same numerics, one chunk.
+    """
+    return (cfg.family in ("dense", "vlm") and cfg.attn_type != "mla"
+            and L.resolve_attn_impl(cfg) == "jnp")
+
+
+def prefill_chunk_cuts(s_total: int, chunk_len: Optional[int] = None,
+                       n_chunks: Optional[int] = None
+                       ) -> List[Tuple[int, int]]:
+    """Static ``(lo, hi)`` chunk boundaries over a prompt of ``s_total``.
+
+    ``chunk_len`` cuts fixed-size chunks (ragged tail); ``n_chunks``
+    delegates to ``pipeline.chunk_slices`` (near-equal cuts).  Neither
+    (or a chunk covering the prompt) means one bulk chunk.
+    """
+    if chunk_len:
+        c = max(1, int(chunk_len))
+        return [(lo, min(lo + c, s_total)) for lo in range(0, s_total, c)]
+    return pl.chunk_slices(s_total, max(1, int(n_chunks or 1)))
+
+
+def init_prefill_scratch(cfg: ModelConfig, batch: int,
+                         prompt_len: int) -> Cache:
+    """Full-length K/V scratch one incremental prefill writes into.
+
+    Compute-dtype (the cast to the cache's param dtype happens at the ring
+    fill, exactly where bulk prefill casts), allocated at the prompt length
+    so chunked attention reduces over the same key extent as bulk — the
+    structural bit-identity argument of this module's docstring.
+    """
+    assert supports_chunked_prefill(cfg), cfg.name
+    hd = cfg.resolved_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    shape = (cfg.n_layers, batch, cfg.n_kv_heads, prompt_len, hd)
+    return {"k": jnp.zeros(shape, cd), "v": jnp.zeros(shape, cd),
+            "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _chunk_attention(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                     kbuf: jnp.ndarray, vbuf: jnp.ndarray, lo: int):
+    """The chunk-rows flavor of ``layers.attention``: q from the chunk,
+    K/V written into (and attended against) the full-length scratch at the
+    static offset ``lo`` — per-row the exact bulk recipe."""
+    b, c, _ = x.shape
+    hd = cfg.resolved_head_dim
+    cd = jnp.dtype(cfg.compute_dtype)
+    xc = x.astype(cd)
+    positions = lo + jnp.arange(c)
+    q = jnp.einsum("bsd,dh->bsh", xc, p["wq"].astype(cd))
+    q = q.reshape(b, c, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = jnp.einsum("bsd,dh->bsh", xc, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dh->bsh", xc, p["wv"].astype(cd))
+    k = k.reshape(b, c, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, c, cfg.n_kv_heads, hd).transpose(0, 2, 1, 3)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    kbuf = lax.dynamic_update_slice_in_dim(kbuf, k, lo, axis=2)
+    vbuf = lax.dynamic_update_slice_in_dim(vbuf, v, lo, axis=2)
+    out = L.attention_core(cfg, q, kbuf, vbuf, causal=True,
+                           window=cfg.window, q_offset=lo)
+    out = out.transpose(0, 2, 1, 3).reshape(b, c, cfg.n_heads * hd)
+    y = jnp.einsum("bsh,hd->bsd", out,
+                   p["wo"].astype(cd)).astype(x.dtype)
+    return y, kbuf, vbuf
+
+
+def _chunk_body(cfg: ModelConfig, params: Params, ks: jnp.ndarray,
+                vs: jnp.ndarray, x: jnp.ndarray, lo: int):
+    """One chunk's forward through every layer.  ``ks``/``vs``:
+    (L, B, Hkv, S, hd) compute-dtype scratch; ``x``: (B, C, D) embedded
+    chunk rows at absolute positions ``[lo, lo+C)``.  Returns
+    ``(ks', vs', h)`` with the chunk's K/V written in."""
+    def body(h, layer):
+        lp, kbuf, vbuf = layer
+        normed = L.apply_norm(cfg, lp["ln1"], h)
+        a, kbuf, vbuf = _chunk_attention(cfg, lp["attn"], normed,
+                                         kbuf, vbuf, lo)
+        h = h + a
+        h = h + L.mlp(cfg, lp["mlp"], L.apply_norm(cfg, lp["ln2"], h))
+        return constrain(h, "residual"), (kbuf, vbuf)
+
+    h, (ks, vs) = lax.scan(_maybe_remat(cfg, body), x,
+                           (params["layers"], ks, vs))
+    return ks, vs, h
+
+
+def _chunk_logits(cfg: ModelConfig, params: Params,
+                  h: jnp.ndarray) -> jnp.ndarray:
+    x = L.apply_norm(cfg, params["final_norm"], h)
+    last = constrain(x[:, -1:, :], "logit_hidden")
+    return _lm_logits(cfg, params, last)[:, 0]
+
+
+def prefill_chunk(cfg: ModelConfig, params: Params, scratch: Cache,
+                  tokens: jnp.ndarray, lo: int
+                  ) -> Tuple[Cache, jnp.ndarray]:
+    """One incremental prefill chunk (the server's admission step).
+
+    ``tokens``: (B, C) — the prompt slice ``[lo, lo+C)``; ``lo`` is static
+    (each (chunk shape, offset) pair is its own jitted program, which is
+    what keeps the path bit-identical to bulk).  Returns the updated
+    scratch and the chunk's next-token logits (meaningful once the final
+    chunk has run).
+    """
+    from repro.models.model import _embed
+
+    x = constrain(_embed(cfg, params, tokens, None), "residual")
+    ks, vs, h = _chunk_body(cfg, params, scratch["k"], scratch["v"], x, lo)
+    hi = lo + tokens.shape[1]
+    new = {"k": ks, "v": vs,
+           "pos": jnp.full_like(scratch["pos"], hi)}
+    return new, _chunk_logits(cfg, params, h)
+
+
+def scratch_to_cache(cfg: ModelConfig, scratch: Cache,
+                     cache_len: Optional[int] = None) -> Cache:
+    """Ring-fill a *completed* prefill scratch into the decode-cache layout
+    — bit-identical to the cache bulk :func:`prefill` builds."""
+    dt = jnp.dtype(cfg.param_dtype)
+    s = scratch["k"].shape[3]
+    batch = scratch["k"].shape[1]
+    sb = kv_buf_len(cfg, cache_len or s)
+    kc, _ = _ring_fill(scratch["k"], sb, seq_axis=3)
+    vc, _ = _ring_fill(scratch["v"], sb, seq_axis=3)
+    slot_pos, _ = _slot_map(s, sb)
+    cache = {"k": kc.astype(dt), "v": vc.astype(dt), "slot_pos": slot_pos}
+    return _finish_cache(cache, batch, s)
+
+
+def prefill_chunked(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,                       # (B, S)
+    frontend_embeds: Optional[jnp.ndarray] = None,
+    *,
+    cache_len: Optional[int] = None,
+    chunk_len: Optional[int] = None,
+    n_chunks: Optional[int] = None,
+) -> Tuple[Cache, jnp.ndarray]:
+    """Chunked streamed prefill: :func:`prefill`, as an ART pipeline.
+
+    The prompt runs in fixed-size chunks through
+    ``pipeline.chunk_pipeline_carried``: chunk *k*'s forward (the carried
+    compute) overlaps chunk *k−1*'s ring-cache scatter (the transfer — on a
+    sequence-sharded cache that scatter is the wire write, the bulk
+    ``gasnet_put`` of the paper's serving shape split into ART chunks).
+    Cache and logits are bit-identical to bulk :func:`prefill` — every row
+    runs the same blockwise recipe against the same key extent (module
+    docstring) — asserted across odd chunk sizes by tests/test_serving.py.
+
+    Archs outside :func:`supports_chunked_prefill` fall back to bulk.
+    """
+    from repro.models.model import _embed
+
+    s_total = (tokens.shape[1] + (cfg.frontend_tokens
+                                  if cfg.frontend and cfg.family == "vlm"
+                                  else 0))
+    cuts = prefill_chunk_cuts(s_total, chunk_len, n_chunks)
+    if len(cuts) <= 1 or not supports_chunked_prefill(cfg):
+        return prefill(cfg, params, tokens, frontend_embeds,
+                       cache_len=cache_len)
+
+    batch = tokens.shape[0]
+    dt = jnp.dtype(cfg.param_dtype)
+    sb = kv_buf_len(cfg, cache_len or s_total)
+    x_full = constrain(_embed(cfg, params, tokens, frontend_embeds),
+                       "residual")
+    scratch = init_prefill_scratch(cfg, batch, s_total)
+
+    def compute(k, carry):
+        ks, vs = carry
+        lo, hi = cuts[k]
+        ks, vs, h = _chunk_body(cfg, params, ks, vs, x_full[:, lo:hi], lo)
+        # the payload the "wire" carries: this chunk's K/V slab (+ the
+        # residual tail that only the final chunk's logits consume)
+        return (ks[:, :, :, lo:hi], vs[:, :, :, lo:hi], h), (ks, vs)
+
+    def consume(state, k, arrived):
+        ring_k, ring_v, _ = state
+        ck, cv, h = arrived
+        lo, hi = cuts[k]
+        # ring slots of positions [lo, hi); a chunk longer than the ring
+        # keeps only its last sb positions (earlier ones would be
+        # overwritten within the chunk anyway)
+        first = max(lo, hi - sb)
+        slots = jnp.asarray([p % sb for p in range(first, hi)], jnp.int32)
+        ring_k = ring_k.at[:, :, :, slots].set(
+            ck[:, :, :, first - lo:].astype(dt))
+        ring_v = ring_v.at[:, :, :, slots].set(
+            cv[:, :, :, first - lo:].astype(dt))
+        return ring_k, ring_v, h
+
+    hd = cfg.resolved_head_dim
+    ring_shape = (cfg.n_layers, batch, cfg.n_kv_heads, sb, hd)
+    init = (jnp.zeros(ring_shape, dt), jnp.zeros(ring_shape, dt), None)
+    (ring_k, ring_v, h_last), _ = pl.chunk_pipeline_carried(
+        len(cuts), compute, lambda k, payload: payload, consume,
+        carry=(scratch["k"], scratch["v"]), init=init)
+
+    slot_pos, _ = _slot_map(s_total, sb)
+    cache = _finish_cache(
+        {"k": ring_k, "v": ring_v, "slot_pos": slot_pos}, batch, s_total)
+    return cache, _chunk_logits(cfg, params, h_last)

@@ -1,15 +1,31 @@
-"""Serving runtime: continuous-batching decode loop over a prefilled cache.
+"""Serving runtime: continuous batching with chunked streamed prefill.
 
-The serving analogue of the paper's case study: requests arrive, are
-prefilled (one-sided bulk transfer of the prompt into the cache — the
-gasnet_put), then decode steps stream tokens with the batched ``serve_step``
-(the ART pattern: many small result transfers instead of one big one).
+The serving analogue of the paper's case study: prefill is the one-sided
+bulk transfer of the prompt into the cache (the ``gasnet_put``), decode is
+the ART pattern of many small transfers.  PR 5 rebuilds both on the
+pipeline scheduler:
 
-Batching model: a fixed-size slot table (``max_batch``).  Requests occupy a
-slot until EOS/len-limit; new requests fill free slots between decode steps
-(continuous batching).  Each slot has its own ring cache region because the
-cache is batched on axis 1 of every leaf — slot admission just writes that
-row (a per-slot prefill into a batch-row is itself a PUT).
+* **Admission** is per slot: a request's prompt is prefilled into a
+  full-length K/V scratch by incremental *chunk steps*
+  (``dist/steps.build_prefill_chunk_step`` over
+  ``models/prefill.prefill_chunk``), at most one chunk per server step, so
+  prefill work interleaves with decode steps instead of blocking them —
+  chunked prefill admission kills the head-of-line blocking a long prompt
+  used to impose on every decoding request.  The finished scratch is
+  ring-filled into a single-request cache and written into its batch row
+  with one donated ``dynamic_update_slice`` per leaf
+  (``build_slot_write_step`` — the per-slot PUT).  Archs outside
+  ``supports_chunked_prefill`` (and ``prefill_chunk=None``) admit with one
+  bulk per-slot prefill instead — same numerics, whole-prompt latency.
+* **Decode** runs the donated ``build_serve_step`` with ``sample=True``:
+  per-slot positions let every cache row advance independently, argmax
+  runs on device, and the server fetches one stacked ``(B,)`` id vector
+  per step instead of per-slot logits syncs.
+
+TTFT accounting: ``Request.first_token`` is stamped when the request's
+first *decode token id* has actually been sampled and fetched — never at
+prefill completion — and stays correct under chunked admission because the
+stamp rides the token append, not the scheduler phase.
 """
 
 from __future__ import annotations
@@ -23,96 +39,248 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.dist.steps import StepConfig, build_serve_step
+from repro.dist.steps import (
+    StepConfig,
+    build_prefill_chunk_step,
+    build_prefill_step,
+    build_serve_step,
+    build_slot_write_step,
+)
 from repro.models.decode import init_cache
+from repro.models.prefill import (
+    init_prefill_scratch,
+    prefill_chunk_cuts,
+    scratch_to_cache,
+    supports_chunked_prefill,
+)
 
 
 @dataclasses.dataclass
 class ServerConfig:
+    """Continuous-batching knobs (see docs/serving.md)."""
+
     max_batch: int = 8
     max_seq: int = 256
     max_new_tokens: int = 32
     eos_id: int = -1               # -1: disabled (synthetic workloads)
     greedy: bool = True
+    #: tokens per admitted prefill chunk (the streamed-prefill ART chunk);
+    #: None/0 admits with one bulk per-slot prefill instead
+    prefill_chunk: Optional[int] = 16
 
 
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray             # (S,) int32
+    frontend_embeds: Optional[np.ndarray] = None   # frontend (vlm) archs
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     submitted: float = 0.0
     first_token: Optional[float] = None
     finished: Optional[float] = None
+    # scheduler state (not part of the public result surface)
+    phase: str = "queued"          # queued | prefill | decode
+    _scratch: Optional[dict] = None
+    _cursor: int = 0               # next prompt position to prefill
 
 
 class Server:
+    """Fixed-slot continuous-batching server over the serve step bundles."""
+
     def __init__(self, cfg: ModelConfig, params, mesh, scfg=None,
                  srv: ServerConfig = ServerConfig()):
         self.cfg, self.params, self.srv = cfg, params, srv
-        scfg = scfg or StepConfig()
-        self.bundle = build_serve_step(cfg, mesh, scfg,
+        self.mesh = mesh
+        self.scfg = scfg or StepConfig()
+        assert srv.greedy, "only greedy sampling is implemented"
+        self.bundle = build_serve_step(cfg, mesh, self.scfg,
                                        batch=srv.max_batch,
-                                       max_seq=srv.max_seq)
+                                       max_seq=srv.max_seq, sample=True)
+        self.writer = build_slot_write_step(cfg, mesh, srv.max_batch,
+                                            srv.max_seq)
         from repro.dist.sharding import to_shardings
-        csh = to_shardings(mesh, self.bundle.in_specs[1])
+        self._cache_sh = to_shardings(mesh, self.bundle.in_specs[1])
+        self._slot_sh = to_shardings(mesh, self.writer.in_specs[1])
         self.cache = jax.jit(
             lambda: init_cache(cfg, srv.max_batch, srv.max_seq),
-            out_shardings=csh)()
+            out_shardings=self._cache_sh)()
+        self._chunkable = (supports_chunked_prefill(cfg)
+                           and not cfg.frontend
+                           and bool(srv.prefill_chunk))
+        self._chunk_bundles: Dict[tuple, object] = {}   # (S, lo, C) -> bundle
+        self._bulk_bundles: Dict[int, object] = {}      # S -> fn
+        self._scratch_inits: Dict[int, object] = {}     # S -> jitted init
+        self._finish_fns: Dict[int, object] = {}        # S -> jitted convert
         self.slots: List[Optional[Request]] = [None] * srv.max_batch
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self._next_tok = np.zeros((srv.max_batch,), np.int32)
 
-    # -- request intake --------------------------------------------------------
+    @property
+    def chunked_admission(self) -> bool:
+        """Whether admission actually runs as streamed prefill chunks
+        (archs outside ``supports_chunked_prefill`` — and frontend archs —
+        admit with one bulk per-slot prefill regardless of
+        ``ServerConfig.prefill_chunk``)."""
+        return self._chunkable
 
-    def submit(self, prompt: np.ndarray) -> int:
+    # -- request intake -------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray,
+               frontend_embeds: Optional[np.ndarray] = None) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        eff = prompt.size + (self.cfg.frontend_tokens
+                             if self.cfg.frontend else 0)
+        assert prompt.ndim == 1 and 0 < eff <= self.srv.max_seq, (
+            prompt.shape, self.srv.max_seq)
+        if self.cfg.frontend:
+            assert self.cfg.family != "encdec", \
+                "encdec serving is not implemented"
+            assert frontend_embeds is not None, (
+                f"{self.cfg.name} requires frontend embeddings per request")
+            frontend_embeds = np.asarray(frontend_embeds, np.float32)
+            assert frontend_embeds.shape == (self.cfg.frontend_tokens,
+                                             self.cfg.frontend_dim), \
+                frontend_embeds.shape
         rid = len(self.queue) + len(self.done) + sum(s is not None
                                                      for s in self.slots)
-        req = Request(rid=rid, prompt=np.asarray(prompt, np.int32),
+        req = Request(rid=rid, prompt=prompt,
+                      frontend_embeds=frontend_embeds,
                       submitted=time.perf_counter())
         self.queue.append(req)
         return rid
 
     def _admit(self):
-        """Fill free slots (continuous batching).  The shared ``pos`` counter
-        makes this a synchronous-batch simplification: slots admitted
-        together decode together; production would keep per-slot positions
-        (noted in DESIGN §6)."""
+        """Assign queued requests to free slots (state only — their prompts
+        are prefilled chunk-by-chunk between the following decode steps)."""
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
                 req = self.queue.pop(0)
+                req.phase = "prefill"
+                req._cursor = 0
+                if self._chunkable:
+                    req._scratch = self._scratch_init(int(req.prompt.size))()
                 self.slots[i] = req
-                # teacher-forced prompt: feed prompt tokens step by step
-                req._prompt_cursor = 0
-                self._next_tok[i] = req.prompt[0]
 
-    # -- decode loop ------------------------------------------------------------
+    # -- prefill scheduling ---------------------------------------------------
+
+    def _chunk_bundle(self, s: int, lo: int, c: int):
+        key = (s, lo, c)
+        if key not in self._chunk_bundles:
+            self._chunk_bundles[key] = build_prefill_chunk_step(
+                self.cfg, self.mesh, self.scfg, batch=1, prompt_len=s,
+                lo=lo, chunk_len=c)
+        return self._chunk_bundles[key]
+
+    def _scratch_init(self, s: int):
+        """Jitted scratch allocator, sharded like the chunk step's input
+        (committed arrays must match the bundle's in-sharding exactly)."""
+        if s not in self._scratch_inits:
+            from repro.dist.sharding import to_shardings
+            bundle = self._chunk_bundle(s, 0, min(
+                self.srv.prefill_chunk or s, s))
+            cfg = self.cfg
+            self._scratch_inits[s] = jax.jit(
+                lambda: init_prefill_scratch(cfg, 1, s),
+                out_shardings=to_shardings(self.mesh, bundle.in_specs[1]))
+        return self._scratch_inits[s]
+
+    def _bulk_fn(self, s: int):
+        if s not in self._bulk_bundles:
+            wf = ((self.cfg.frontend_tokens, self.cfg.frontend_dim)
+                  if self.cfg.frontend else None)
+            self._bulk_bundles[s] = build_prefill_step(
+                self.cfg, self.mesh, self.scfg, batch=1, seq_len=s,
+                with_frontend=wf, cache_len=self.srv.max_seq).fn
+        return self._bulk_bundles[s]
+
+    def _finish_fn(self, s: int):
+        """Jitted scratch→ring-cache conversion, sharded like the slot
+        writer's slot-cache input."""
+        if s not in self._finish_fns:
+            cfg, max_seq = self.cfg, self.srv.max_seq
+            self._finish_fns[s] = jax.jit(
+                lambda scr: scratch_to_cache(cfg, scr, cache_len=max_seq),
+                out_shardings=self._slot_sh)
+        return self._finish_fns[s]
+
+    def _emit_first_token(self, i: int, req: Request, logits):
+        """Sample the request's first decode token from the final prefill
+        logits and move the slot to the decode phase.  ``first_token`` is
+        stamped *here* — after the id has been computed and fetched, i.e.
+        at the first decode token, not at prefill completion."""
+        tok = int(jnp.argmax(logits[0], axis=-1))
+        req.first_token = time.perf_counter()
+        req.out_tokens.append(tok)
+        req.phase = "decode"
+        self._next_tok[i] = tok
+        if (len(req.out_tokens) >= self.srv.max_new_tokens
+                or tok == self.srv.eos_id):
+            self._retire(i, req)
+
+    def _prefill_tick(self):
+        """Run at most one prefill chunk (or one bulk per-slot prefill) for
+        the earliest-admitted slot still in the prefill phase — the
+        admission work a server step interleaves between decode steps."""
+        pending = [(req.rid, i, req) for i, req in enumerate(self.slots)
+                   if req is not None and req.phase == "prefill"]
+        if not pending:
+            return
+        _, i, req = min(pending)
+        s = int(req.prompt.size)
+        toks = jnp.asarray(req.prompt[None, :])
+
+        if not self._chunkable:
+            args = (self.params, toks)
+            if self.cfg.frontend:
+                args += (jnp.asarray(req.frontend_embeds[None, :]),)
+            cache1, logits = self._bulk_fn(s)(*args)
+            self.cache = self.writer.fn(self.cache, cache1, jnp.int32(i))
+            self._emit_first_token(i, req, logits)
+            return
+
+        cuts = prefill_chunk_cuts(s, chunk_len=self.srv.prefill_chunk)
+        lo, hi = cuts[req._cursor]
+        fn = self._chunk_bundle(s, lo, hi - lo).fn
+        req._scratch, logits = fn(self.params, req._scratch,
+                                  toks[:, lo:hi])
+        req._cursor += 1
+        if req._cursor < len(cuts):
+            return                          # more chunks; decode proceeds
+        cache1 = self._finish_fn(s)(req._scratch)
+        req._scratch = None
+        self.cache = self.writer.fn(self.cache, cache1, jnp.int32(i))
+        self._emit_first_token(i, req, logits)
+
+    def _retire(self, i: int, req: Request,
+                now: Optional[float] = None):
+        req.finished = time.perf_counter() if now is None else now
+        req.phase = "done"
+        self.done.append(req)
+        self.slots[i] = None
+
+    # -- decode loop ----------------------------------------------------------
 
     def step(self):
+        """One scheduler tick: admit, run one prefill chunk, decode."""
         self._admit()
+        self._prefill_tick()
+        if not any(r is not None and r.phase == "decode"
+                   for r in self.slots):
+            return
         toks = jnp.asarray(self._next_tok)
-        self.cache, logits = self.bundle.fn(self.params, self.cache, toks)
-        choice = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.cache, ids = self.bundle.fn(self.params, self.cache, toks)
+        choice = np.asarray(ids)            # ONE stacked host transfer
         now = time.perf_counter()
         for i, req in enumerate(self.slots):
-            if req is None:
-                continue
-            cur = getattr(req, "_prompt_cursor", 0)
-            if cur + 1 < len(req.prompt):       # still consuming the prompt
-                req._prompt_cursor = cur + 1
-                self._next_tok[i] = req.prompt[cur + 1]
+            if req is None or req.phase != "decode":
                 continue
             tok = int(choice[i])
-            if req.first_token is None:
-                req.first_token = now
             req.out_tokens.append(tok)
             self._next_tok[i] = tok
             if (len(req.out_tokens) >= self.srv.max_new_tokens
                     or tok == self.srv.eos_id):
-                req.finished = now
-                self.done.append(req)
-                self.slots[i] = None
+                self._retire(i, req, now)
 
     def run(self, max_steps: int = 10_000):
         steps = 0
@@ -122,11 +290,15 @@ class Server:
             steps += 1
         return steps
 
-    # -- metrics -----------------------------------------------------------------
+    # -- metrics ---------------------------------------------------------------
 
     def stats(self) -> Dict[str, float]:
         lat = [r.finished - r.submitted for r in self.done if r.finished]
-        ttft = [r.first_token - r.submitted for r in self.done if r.first_token]
+        ttft = [r.first_token - r.submitted for r in self.done
+                if r.first_token]
+        itl = [(r.finished - r.first_token) / (len(r.out_tokens) - 1)
+               for r in self.done
+               if r.finished and r.first_token and len(r.out_tokens) > 1]
         toks = sum(len(r.out_tokens) for r in self.done)
         wall = (max(r.finished for r in self.done)
                 - min(r.submitted for r in self.done)) if self.done else 0.0
@@ -136,4 +308,26 @@ class Server:
             "throughput_tok_s": toks / wall if wall else 0.0,
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
+            "mean_itl_s": float(np.mean(itl)) if itl else 0.0,
         }
+
+
+def drive_arrivals(server: Server, prompts, every: int,
+                   max_steps: int = 10_000) -> int:
+    """Run ``server`` under synthetic arrivals: one prompt up front, one
+    more every ``every`` scheduler ticks, until the queue drains.  The one
+    arrival loop both the CLI (``launch/serve.py --arrive-every``) and the
+    measured benchmark section (``benchmarks/serve_bench.py``) drive, so
+    they always measure the same workload.  Returns the tick count.
+    """
+    pending = list(prompts)
+    server.submit(pending.pop(0))
+    steps = 0
+    while ((pending or server.queue
+            or any(s is not None for s in server.slots))
+           and steps < max_steps):
+        server.step()
+        steps += 1
+        if pending and steps % max(1, every) == 0:
+            server.submit(pending.pop(0))
+    return steps

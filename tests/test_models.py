@@ -74,7 +74,8 @@ class TestArchSmoke:
         cache, logits = decode_step(cfg, params, cache, tokens[:, 0])
         assert logits.shape == (2, cfg.vocab_size)
         assert not np.any(np.isnan(np.asarray(logits)))
-        assert int(cache["pos"]) == 1
+        # per-slot positions: every row advanced independently to 1
+        assert np.asarray(cache["pos"]).tolist() == [1, 1]
 
 
 @pytest.mark.parametrize("name", ["smollm-360m", "minicpm3-4b",

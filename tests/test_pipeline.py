@@ -114,6 +114,37 @@ class TestChunkPipeline:
         empty gradient pytree reaches the streamed sync as 0 buckets)."""
         assert pl.streamed(0, lambda k: 1 / 0, None) == []
 
+    @pytest.mark.parametrize("n", [1, 2, 5])
+    def test_carried_equals_sequential_reference(self, n):
+        """chunk_pipeline_carried == the naive sequential fold: carry
+        chains through computes, payload path unchanged (chunked prefill's
+        loop shape)."""
+        order = []
+
+        def compute(k, carry):
+            order.append(("c", k))
+            return carry + k, carry + k        # payload_k, carry'
+
+        def transfer(k, payload):
+            order.append(("t", k))
+            return payload * 10
+
+        def consume(state, k, arrived):
+            order.append(("f", k))
+            return state + [arrived]
+
+        state, carry = pl.chunk_pipeline_carried(
+            n, compute, transfer, consume, carry=0, init=[])
+        prefix = [sum(range(k + 1)) for k in range(n)]   # running carries
+        assert state == [p * 10 for p in prefix]
+        assert carry == prefix[-1]
+        if n > 1:
+            # the ART window: transfer of k−1 precedes compute of k,
+            # which precedes consume of k−1
+            i_t0 = order.index(("t", 0))
+            assert order.index(("c", 1)) > i_t0
+            assert order.index(("f", 0)) > order.index(("c", 1))
+
 
 class TestConduitStreamed:
     """Conduit.streamed == bulk call, and same total wire traffic."""

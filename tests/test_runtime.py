@@ -1,6 +1,8 @@
 """Runtime: fault-tolerant trainer (restart, preemption, watchdog),
 elastic re-meshing, continuous-batching server."""
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -110,7 +112,7 @@ class TestElastic:
 
 
 class TestServer:
-    def _server(self, mesh):
+    def _server(self, mesh, **kw):
         from repro.dist.sharding import param_pspecs, to_shardings
         from repro.models.model import init_params
         cfg = get_config("smollm-360m").reduced()
@@ -120,7 +122,7 @@ class TestServer:
         params = jax.jit(lambda k: init_params(cfg, k),
                          out_shardings=psh)(jax.random.PRNGKey(0))
         return cfg, params, Server(cfg, params, mesh, srv=ServerConfig(
-            max_batch=2, max_seq=64, max_new_tokens=4))
+            max_batch=2, max_seq=64, max_new_tokens=4, **kw))
 
     def test_all_requests_complete(self, mesh22):
         cfg, params, srv = self._server(mesh22)
@@ -134,27 +136,66 @@ class TestServer:
         assert s["tokens"] == 20 and s["throughput_tok_s"] > 0
 
     def test_output_matches_unbatched_greedy(self, mesh22):
-        """Continuous batching must not change any request's tokens."""
-        from repro.models.decode import decode_step, init_cache
-        cfg, params, srv = self._server(mesh22)
+        """Continuous batching must not change any request's tokens —
+        including with mixed prompt lengths in flight (per-slot positions)
+        and chunked prefill admission."""
+        from repro.models.decode import decode_step
+        from repro.models.prefill import prefill
+        cfg, params, srv = self._server(mesh22, prefill_chunk=4)
         rng = np.random.default_rng(1)
-        prompts = [rng.integers(0, cfg.vocab_size, size=6) for _ in range(3)]
+        prompts = [rng.integers(0, cfg.vocab_size, size=s)
+                   for s in (6, 9, 5)]
         for p in prompts:
             srv.submit(p)
         srv.run()
 
         params_local = jax.device_get(params)
-        for req in srv.done:
-            cache = init_cache(cfg, 1, 64)
-            toks = list(req.prompt)
-            logits = None
-            for t in toks:
-                cache, logits = decode_step(cfg, params_local, cache,
-                                            jnp.asarray([t], jnp.int32))
+        by_rid = {r.rid: r for r in srv.done}
+        for rid, p in enumerate(prompts):
+            cache, logits = prefill(cfg, params_local,
+                                    jnp.asarray(p[None, :]), cache_len=64)
             out = []
             for _ in range(4):
                 nxt = int(jnp.argmax(logits, -1)[0])
                 out.append(nxt)
                 cache, logits = decode_step(cfg, params_local, cache,
                                             jnp.asarray([nxt], jnp.int32))
-            assert out == req.out_tokens, (out, req.out_tokens)
+            assert out == by_rid[rid].out_tokens, (out, by_rid[rid])
+
+    def test_chunked_admission_equals_bulk(self, mesh22):
+        """Chunked prefill admission must be token-identical to bulk
+        per-slot admission (the bit-identity claim at the scheduler
+        level)."""
+        outs = {}
+        rng = np.random.default_rng(2)
+        prompts = [rng.integers(0, 1000, size=s) for s in (11, 4, 7)]
+        for chunk in (None, 3):
+            cfg, params, srv = self._server(mesh22, prefill_chunk=chunk)
+            for p in prompts:
+                srv.submit(p % cfg.vocab_size)
+            srv.run()
+            outs[chunk] = {r.rid: r.out_tokens for r in srv.done}
+        assert outs[None] == outs[3]
+
+    def test_ttft_stamped_at_first_decode_token(self, mesh22):
+        """``first_token`` stamps when the first decode token id exists —
+        not at prefill completion, and never before the final prefill
+        chunk under chunked admission."""
+        cfg, params, srv = self._server(mesh22, prefill_chunk=3)
+        rng = np.random.default_rng(3)
+        srv.submit(rng.integers(0, cfg.vocab_size, size=8))  # 3 chunks
+        # two ticks run two prefill chunks; no token exists yet
+        srv.step()
+        srv.step()
+        req = srv.slots[0]
+        assert req is not None and req.phase == "prefill"
+        assert req.first_token is None and not req.out_tokens
+        before = time.perf_counter()
+        srv.step()          # final chunk: first token sampled here
+        assert req.out_tokens and req.first_token is not None
+        assert req.first_token >= before
+        srv.run()
+        assert req.finished is not None
+        assert req.submitted <= req.first_token <= req.finished
+        s = srv.stats()
+        assert s["mean_ttft_s"] > 0 and s["mean_itl_s"] >= 0

@@ -1,0 +1,427 @@
+"""Streamed serving: chunked prefill ≡ bulk (bitwise), EP decode ≡
+dense-combine per transport, donation-clean step builders, and the
+ring-buffer wraparound properties the scheduler relies on.
+
+The bit-identity discipline (PR 2): a streamed schedule partitions the
+bulk payload and runs the identical per-row recipe, so results must be
+*bit*-equal, not allclose — asserted here per entry point, odd chunk
+sizes and ring wraparound included.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs import get_config
+from repro.dist.steps import (
+    StepConfig,
+    TransportPolicy,
+    build_prefill_chunk_step,
+    build_prefill_step,
+    build_serve_step,
+    build_slot_write_step,
+)
+from repro.models.decode import decode_step, init_cache, kv_buf_len
+from repro.models.model import init_params
+from repro.models.prefill import (
+    init_prefill_scratch,
+    prefill,
+    prefill_chunk,
+    prefill_chunk_cuts,
+    prefill_chunked,
+    scratch_to_cache,
+    supports_chunked_prefill,
+)
+
+
+def _setup(name, **overrides):
+    cfg = get_config(name).reduced()
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _tokens(cfg, b, s, key=1):
+    return jax.random.randint(jax.random.PRNGKey(key), (b, s), 0,
+                              cfg.vocab_size)
+
+
+def _assert_tree_equal(a, b, msg=""):
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                      err_msg=f"{msg} leaf {k!r}")
+
+
+class TestChunkedPrefill:
+    """prefill_chunked ≡ prefill, bit for bit — cache and logits."""
+
+    @pytest.mark.parametrize("n_chunks", [2, 3, 5, 13])
+    def test_bit_identical_odd_chunks(self, n_chunks):
+        cfg, params = _setup("smollm-360m")
+        toks = _tokens(cfg, 2, 13)
+        bulk_cache, bulk_logits = prefill(cfg, params, toks, cache_len=32)
+        cache, logits = prefill_chunked(cfg, params, toks, cache_len=32,
+                                        n_chunks=n_chunks)
+        _assert_tree_equal(bulk_cache, cache, f"n_chunks={n_chunks}")
+        np.testing.assert_array_equal(np.asarray(bulk_logits),
+                                      np.asarray(logits))
+
+    def test_windowed_ring_wraparound(self):
+        """Chunk boundaries crossing the SWA ring (sb < S) stay exact."""
+        cfg, params = _setup("h2o-danube-1.8b")
+        assert cfg.window and cfg.window < 17
+        toks = _tokens(cfg, 1, 17)
+        bulk_cache, bulk_logits = prefill(cfg, params, toks, cache_len=17)
+        cache, logits = prefill_chunked(cfg, params, toks, cache_len=17,
+                                        n_chunks=5)
+        assert cache["k"].shape[3] == cfg.window     # ring, not 17
+        _assert_tree_equal(bulk_cache, cache, "windowed")
+        np.testing.assert_array_equal(np.asarray(bulk_logits),
+                                      np.asarray(logits))
+
+    def test_incremental_scratch_path(self):
+        """The server's chunk-step flavor reassembles the bulk cache."""
+        cfg, params = _setup("smollm-360m")
+        toks = _tokens(cfg, 2, 11)
+        bulk_cache, bulk_logits = prefill(cfg, params, toks, cache_len=24)
+        scratch = init_prefill_scratch(cfg, 2, 11)
+        logits = None
+        for lo, hi in prefill_chunk_cuts(11, chunk_len=4):
+            scratch, logits = prefill_chunk(cfg, params, scratch,
+                                            toks[:, lo:hi], lo)
+        cache = scratch_to_cache(cfg, scratch, cache_len=24)
+        _assert_tree_equal(bulk_cache, cache, "incremental")
+        np.testing.assert_array_equal(np.asarray(bulk_logits),
+                                      np.asarray(logits))
+
+    def test_decode_continues_identically(self):
+        """Decoding from a chunked-prefill cache == from the bulk cache."""
+        cfg, params = _setup("smollm-360m")
+        toks = _tokens(cfg, 2, 9)
+        ca, la = prefill(cfg, params, toks, cache_len=16)
+        cb, lb = prefill_chunked(cfg, params, toks, cache_len=16,
+                                 n_chunks=4)
+        nxt = jnp.argmax(la, -1).astype(jnp.int32)
+        ca, la2 = decode_step(cfg, params, ca, nxt)
+        cb, lb2 = decode_step(cfg, params, cb, nxt)
+        np.testing.assert_array_equal(np.asarray(la2), np.asarray(lb2))
+
+    def test_unsupported_family_falls_back_to_bulk(self):
+        cfg, params = _setup("mamba2-2.7b")
+        assert not supports_chunked_prefill(cfg)
+        toks = _tokens(cfg, 1, 8)
+        ca, la = prefill(cfg, params, toks, cache_len=16)
+        cb, lb = prefill_chunked(cfg, params, toks, cache_len=16,
+                                 n_chunks=4)
+        _assert_tree_equal(ca, cb, "fallback")
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_cuts_partition_exactly(self):
+        assert prefill_chunk_cuts(10, chunk_len=4) == [(0, 4), (4, 8),
+                                                       (8, 10)]
+        for s in (1, 7, 16):
+            for c in (1, 3, 5, 20):
+                cuts = prefill_chunk_cuts(s, chunk_len=c)
+                assert cuts[0][0] == 0 and cuts[-1][1] == s
+                assert all(a[1] == b[0] for a, b in zip(cuts, cuts[1:]))
+
+
+class TestChunkedPrefillStep:
+    """The jitted, sharded flavors (dist/steps.py) keep bit-identity."""
+
+    @pytest.mark.parametrize("chunks", [3, 4])
+    def test_prefill_step_chunks_bit_identical(self, mesh22, chunks):
+        """With a fixed residual sharding (SP off) the chunked and bulk
+        jitted programs are bit-identical; SP resharding (seq % tp differs
+        per chunk) perturbs GSPMD reduction placement at the float-ulp
+        level, so that flavor asserts tightly instead."""
+        cfg = get_config("smollm-360m").reduced()
+        from repro.dist.steps import build_init
+        for sp, exact in ((False, True), (True, False)):
+            scfg = StepConfig(sequence_parallel=sp)
+            init_fn, _ = build_init(cfg, mesh22, scfg)
+            params, _ = init_fn(jax.random.PRNGKey(0))
+            toks = _tokens(cfg, 4, 16, key=2)
+            bulk = build_prefill_step(cfg, mesh22, scfg, batch=4,
+                                      seq_len=16)
+            chunked = build_prefill_step(cfg, mesh22, scfg, batch=4,
+                                         seq_len=16, chunks=chunks)
+            ca, la = bulk.fn(params, toks)
+            cb, lb = chunked.fn(params, toks)
+            if exact:
+                _assert_tree_equal(jax.device_get(ca), jax.device_get(cb),
+                                   f"chunks={chunks}")
+                np.testing.assert_array_equal(np.asarray(la),
+                                              np.asarray(lb))
+            else:
+                for k in ca:
+                    np.testing.assert_allclose(
+                        np.asarray(ca[k]), np.asarray(cb[k]),
+                        rtol=1e-5, atol=1e-5, err_msg=k)
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=1e-5, atol=1e-5)
+
+    def test_chunk_step_and_slot_write(self, mesh22):
+        """build_prefill_chunk_step + build_slot_write_step reproduce a
+        row of the batched cache exactly — against the *sharded* bulk
+        prefill step (sharded-vs-unsharded differs by TP partial-sum
+        order; SP off fixes the residual sharding across chunk shapes)."""
+        cfg = get_config("smollm-360m").reduced()
+        scfg = StepConfig(sequence_parallel=False)
+        from repro.dist.sharding import to_shardings
+        from repro.dist.steps import build_init
+        init_fn, _ = build_init(cfg, mesh22, scfg)
+        params, _ = init_fn(jax.random.PRNGKey(0))
+        prompt = _tokens(cfg, 1, 10, key=3)
+
+        writer = build_slot_write_step(cfg, mesh22, batch=4, max_seq=32)
+        cache = jax.jit(lambda: init_cache(cfg, 4, 32),
+                        out_shardings=to_shardings(
+                            mesh22, writer.in_specs[0]))()
+
+        scratch = None
+        logits = None
+        for lo, hi in prefill_chunk_cuts(10, chunk_len=4):
+            bundle = build_prefill_chunk_step(cfg, mesh22, scfg, batch=1,
+                                              prompt_len=10, lo=lo,
+                                              chunk_len=hi - lo)
+            if scratch is None:
+                scratch = jax.jit(
+                    lambda: init_prefill_scratch(cfg, 1, 10),
+                    out_shardings=to_shardings(mesh22,
+                                               bundle.in_specs[1]))()
+            scratch, logits = bundle.fn(params, scratch,
+                                        prompt[:, lo:hi])
+        slot_cache = jax.jit(
+            lambda s: scratch_to_cache(cfg, s, cache_len=32),
+            out_shardings=to_shardings(mesh22, writer.in_specs[1]))(scratch)
+        cache = writer.fn(cache, slot_cache, jnp.int32(2))
+
+        # reference: the sharded bulk prefill step.  The chunk path runs as
+        # *separate* jitted programs (per chunk + convert + write), and
+        # GSPMD partitions each program's einsum reductions independently,
+        # so cross-program equality is ulp-tight, not bitwise (the bitwise
+        # claims live in TestChunkedPrefill, same-program).
+        ref_bundle = build_prefill_step(cfg, mesh22, scfg, batch=1,
+                                        seq_len=10, cache_len=32)
+        ref_cache, ref_logits = ref_bundle.fn(params, prompt)
+        got = jax.device_get(cache)
+        ref = jax.device_get(ref_cache)
+        np.testing.assert_allclose(np.asarray(got["k"][:, 2]),
+                                   np.asarray(ref["k"][:, 0]),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(got["slot_pos"][2]),
+                                      np.asarray(ref["slot_pos"][0]))
+        assert int(got["pos"][2]) == 10
+        # untouched rows stay empty
+        assert int(got["pos"][0]) == 0
+        assert np.all(np.asarray(got["slot_pos"][0]) == -1)
+        np.testing.assert_allclose(np.asarray(logits),
+                                   np.asarray(ref_logits),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestPerSlotDecode:
+    """Per-slot positions: cache rows advance independently."""
+
+    def test_rows_decode_at_different_positions(self):
+        """A batch whose rows were prefilled to different lengths decodes
+        each row exactly as its own single-request run."""
+        cfg, params = _setup("smollm-360m")
+        pa = _tokens(cfg, 1, 5, key=4)
+        pb = _tokens(cfg, 1, 9, key=5)
+        ca, la = prefill(cfg, params, pa, cache_len=16)
+        cb, lb = prefill(cfg, params, pb, cache_len=16)
+        # merge the two single-request caches into one 2-row cache
+        merged = {}
+        for k in ca:
+            ax = 0 if k in ("pos", "slot_pos") else 1
+            merged[k] = jnp.concatenate([ca[k], cb[k]], axis=ax)
+        toks = jnp.concatenate([jnp.argmax(la, -1),
+                                jnp.argmax(lb, -1)]).astype(jnp.int32)
+        for _ in range(3):
+            merged, lm = decode_step(cfg, params, merged, toks)
+            ca, la1 = decode_step(cfg, params, ca, toks[:1])
+            cb, lb1 = decode_step(cfg, params, cb, toks[1:])
+            assert np.asarray(merged["pos"]).tolist() == \
+                [int(ca["pos"][0]), int(cb["pos"][0])]
+            toks = jnp.argmax(lm, -1).astype(jnp.int32)
+            # batched rows match the single-request argmax choices
+            assert int(toks[0]) == int(jnp.argmax(la1, -1)[0])
+            assert int(toks[1]) == int(jnp.argmax(lb1, -1)[0])
+
+
+EP_TRANSPORTS = ("ring", "bidir", "auto")
+
+
+class TestEPDecode:
+    """Latency-mode EP decode over the conduit all_to_all."""
+
+    def _mesh_ep(self):
+        return jax.make_mesh((4,), ("expert",),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+
+    def _setup_grok(self, mesh):
+        from repro.dist.sharding import param_pspecs, to_shardings
+        cfg = get_config("grok-1-314b").reduced()
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        psh = to_shardings(mesh, param_pspecs(cfg, mesh, shape))
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=psh)(jax.random.PRNGKey(0))
+        return cfg, params
+
+    def _decode_logits(self, cfg, params, mesh, transport, steps=2):
+        scfg = StepConfig(transport=TransportPolicy(moe=transport))
+        bundle = build_serve_step(cfg, mesh, scfg, batch=4, max_seq=32)
+        from repro.dist.sharding import to_shardings
+        cache = jax.jit(lambda: init_cache(cfg, 4, 32),
+                        out_shardings=to_shardings(
+                            mesh, bundle.in_specs[1]))()
+        toks = jnp.asarray([1, 7, 3, 5], jnp.int32)
+        for _ in range(steps):
+            cache, logits = bundle.fn(params, cache, toks)
+            toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        return np.asarray(logits)
+
+    def test_ep_decode_matches_dense_combine(self):
+        mesh = self._mesh_ep()
+        cfg, params = self._setup_grok(mesh)
+        dense = self._decode_logits(cfg, params, mesh, "xla")
+        ep = self._decode_logits(cfg, params, mesh, "ring")
+        np.testing.assert_allclose(ep, dense, rtol=2e-4, atol=2e-4)
+
+    @pytest.mark.parametrize("transport", ["bidir", "auto"])
+    def test_ep_decode_bitwise_across_transports(self, transport):
+        """Per PR-2 discipline: every conduit transport carries the same
+        payload — EP decode results are bit-identical across them."""
+        mesh = self._mesh_ep()
+        cfg, params = self._setup_grok(mesh)
+        ref = self._decode_logits(cfg, params, mesh, "ring")
+        got = self._decode_logits(cfg, params, mesh, transport)
+        np.testing.assert_array_equal(got, ref)
+
+    def test_indivisible_batch_keeps_dense_combine(self, mesh22):
+        """Without a usable expert axis (or batch), the serve step keeps
+        the dense-combine fallback and still runs."""
+        from repro.dist.sharding import param_pspecs, to_shardings
+        cfg = get_config("grok-1-314b").reduced()
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        psh = to_shardings(mesh22, param_pspecs(cfg, mesh22, shape))
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=psh)(jax.random.PRNGKey(0))
+        scfg = StepConfig(transport=TransportPolicy(moe="ring"))
+        bundle = build_serve_step(cfg, mesh22, scfg, batch=3, max_seq=16)
+        cache = jax.jit(lambda: init_cache(cfg, 3, 16),
+                        out_shardings=to_shardings(
+                            mesh22, bundle.in_specs[1]))()
+        cache, logits = bundle.fn(params, cache,
+                                  jnp.asarray([1, 2, 3], jnp.int32))
+        assert logits.shape == (3, cfg.vocab_size)
+
+
+class TestFrontendServing:
+    def test_vlm_requests_carry_embeds(self, mesh22):
+        """Frontend (vlm) archs serve through real per-slot prefill with
+        per-request embeddings (bulk admission; the chunk path is
+        text-only)."""
+        from repro.dist.sharding import param_pspecs, to_shardings
+        from repro.runtime.server import Server, ServerConfig
+        cfg = get_config("internvl2-2b").reduced()
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        psh = to_shardings(mesh22, param_pspecs(cfg, mesh22, shape))
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=psh)(jax.random.PRNGKey(0))
+        srv = Server(cfg, params, mesh22, srv=ServerConfig(
+            max_batch=2, max_seq=64, max_new_tokens=2))
+        rng = np.random.default_rng(0)
+        for _ in range(2):
+            srv.submit(rng.integers(0, cfg.vocab_size, size=6),
+                       frontend_embeds=rng.normal(
+                           size=(cfg.frontend_tokens, cfg.frontend_dim)))
+        srv.run()
+        assert len(srv.done) == 2
+        assert all(len(r.out_tokens) == 2 for r in srv.done)
+        with pytest.raises(AssertionError):
+            srv.submit(rng.integers(0, cfg.vocab_size, size=6))
+
+
+class TestSampledServeStep:
+    def test_sample_ids_equal_argmax_logits(self, mesh22):
+        cfg = get_config("smollm-360m").reduced()
+        scfg = StepConfig()
+        from repro.dist.sharding import to_shardings
+        from repro.dist.steps import build_init
+        init_fn, _ = build_init(cfg, mesh22, scfg)
+        params, _ = init_fn(jax.random.PRNGKey(0))
+        logit_b = build_serve_step(cfg, mesh22, scfg, batch=4, max_seq=16)
+        sample_b = build_serve_step(cfg, mesh22, scfg, batch=4,
+                                    max_seq=16, sample=True)
+        toks = jnp.asarray([3, 1, 4, 1], jnp.int32)
+        c1 = jax.jit(lambda: init_cache(cfg, 4, 16),
+                     out_shardings=to_shardings(
+                         mesh22, logit_b.in_specs[1]))()
+        c2 = jax.jit(lambda: init_cache(cfg, 4, 16),
+                     out_shardings=to_shardings(
+                         mesh22, sample_b.in_specs[1]))()
+        c1, logits = logit_b.fn(params, c1, toks)
+        c2, ids = sample_b.fn(params, c2, toks)
+        assert ids.dtype == jnp.int32 and ids.shape == (4,)
+        np.testing.assert_array_equal(
+            np.asarray(ids), np.asarray(jnp.argmax(logits, -1)))
+        _assert_tree_equal(jax.device_get(c1), jax.device_get(c2),
+                           "sampled step cache")
+
+
+class TestRingBufferProperties:
+    """Hypothesis: slot_pos masking exactly at and across the window
+    boundary, and chunked ≡ bulk across drawn odd chunk sizes."""
+
+    @settings(max_examples=12, deadline=None)
+    @given(s=st.integers(1, 20), d=st.integers(0, 6))
+    def test_slot_pos_tracks_last_sb_positions(self, s, d):
+        """After prefilling ``s`` tokens and decoding ``d`` more, the ring
+        holds exactly the last ``min(pos, sb)`` positions — wraparound at
+        and across the ``window`` boundary included."""
+        cfg, params = _setup("h2o-danube-1.8b")
+        sb = kv_buf_len(cfg, 24)
+        toks = _tokens(cfg, 1, s + d + 1, key=6)
+        cache, _ = prefill(cfg, params, toks[:, :s], cache_len=24)
+        for t in range(d):
+            cache, _ = decode_step(cfg, params, cache, toks[:, s + t])
+        pos = s + d
+        slot_pos = np.asarray(cache["slot_pos"][0])
+        expect = np.full((sb,), -1, np.int64)
+        for p in range(max(0, pos - sb), pos):
+            expect[p % sb] = p
+        np.testing.assert_array_equal(slot_pos, expect)
+
+    @settings(max_examples=8, deadline=None)
+    @given(s=st.integers(2, 14), n=st.integers(2, 7))
+    def test_chunked_equals_bulk_drawn_sizes(self, s, n):
+        cfg, params = _setup("smollm-360m")
+        toks = _tokens(cfg, 1, s, key=100 + s)
+        ca, la = prefill(cfg, params, toks, cache_len=16)
+        cb, lb = prefill_chunked(cfg, params, toks, cache_len=16,
+                                 n_chunks=n)
+        _assert_tree_equal(ca, cb, f"s={s} n={n}")
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+    def test_window_masks_exactly_at_boundary(self):
+        """A key exactly ``window`` back is masked; ``window−1`` back is
+        visible (the ``slot_pos > pos − window`` edge)."""
+        from repro.models.decode import _valid_slots
+        w = 4
+        pos = jnp.asarray([10])
+        slot_pos = jnp.asarray([[6, 7, 8, 9, 10, -1]])
+        valid = np.asarray(_valid_slots(slot_pos, pos, w)[0])
+        # pos-w = 6 masked (> is strict), 7..10 visible, empty masked
+        assert valid.tolist() == [False, True, True, True, True, False]

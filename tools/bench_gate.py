@@ -1,15 +1,22 @@
-"""CI gate over BENCH_overlap.json: streamed must never model slower than bulk.
+"""CI gate over the modeled perf artifacts: streamed must never lose.
 
-``benchmarks/overlap_pipeline.py`` writes, per EP preset operating point
-and link model, the modeled bulk and best-streamed wall times.  This gate
-fails (exit 1) if any preset operating point's **best-link** streamed
-schedule regresses below 1.0× of bulk — i.e. if a change to the scheduler,
-the conduit cost model, or the netmodel makes the pipeline the *wrong*
-choice at an operating point the presets actually ship.  (The stronger
-> 1.2× acceptance claim is asserted inside the benchmark itself; the gate
-is the regression floor.)
+Two artifacts, one floor:
 
-Usage: ``python tools/bench_gate.py [path-to-BENCH_overlap.json]``
+* ``BENCH_overlap.json`` (``benchmarks/overlap_pipeline.py``) — per EP
+  preset operating point, the best-link streamed EP schedule must model
+  ≥ 1.0× of bulk (the stronger > 1.2× acceptance claim is asserted inside
+  the benchmark itself; the gate is the regression floor).
+* ``BENCH_serve.json`` (``benchmarks/serve_bench.py``) — per serve preset
+  operating point (arch × prompt length), the best-link chunked-prefill
+  TTFT must model ≥ 1.0× of bulk prefill (the ≥ 1.3× QSFP acceptance
+  claim lives in the benchmark).
+
+The gate fails (exit 1) if any preset operating point regresses below the
+floor — i.e. if a change to the scheduler, the conduit cost model, or the
+netmodel makes the pipeline the *wrong* choice at an operating point the
+presets actually ship.
+
+Usage: ``python tools/bench_gate.py [overlap.json [serve.json]]``
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ FLOOR = 1.0
 
 
 def check(path: str) -> int:
-    """Exit code: 0 when every preset operating point clears the floor."""
+    """Overlap gate: every EP preset operating point clears the floor."""
     with open(path) as f:
         payload = json.load(f)
     rows = [r for r in payload.get("rows", [])
@@ -57,7 +64,44 @@ def check(path: str) -> int:
     return 0
 
 
+def check_serve(path: str) -> int:
+    """Serve gate: every chunked-prefill operating point clears the floor."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = [r for r in payload.get("rows", [])
+            if r.get("suite") == "chunked_prefill"]
+    if not rows:
+        print(f"bench_gate: no chunked_prefill rows in {path}")
+        return 1
+
+    points = {}
+    for r in rows:
+        points.setdefault((r["arch"], r["prompt_len"]), []).append(r)
+    failures = []
+    for (arch, s), rs in sorted(points.items()):
+        best = max(rs, key=lambda r: r["speedup"])
+        status = "ok" if best["speedup"] >= FLOOR else "FAIL"
+        print(f"bench_gate: {arch} @ {s} prompt: TTFT "
+              f"{best['speedup']:.2f}x on {best['link']} "
+              f"({best['n_chunks']} chunks) [{status}]")
+        if best["speedup"] < FLOOR:
+            failures.append((arch, s, best["speedup"]))
+
+    claim = payload.get("claims", {}).get("ttft_max_speedup_qsfp")
+    print(f"bench_gate: best qsfp TTFT speedup: {claim}")
+    if failures:
+        print(f"bench_gate: {len(failures)} serve operating point(s) "
+              f"below {FLOOR}x: {failures}")
+        return 1
+    print("bench_gate: all serve operating points clear the floor")
+    return 0
+
+
 if __name__ == "__main__":
-    target = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+    overlap = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
         REPO_ROOT, "BENCH_overlap.json")
-    sys.exit(check(target))
+    serve = sys.argv[2] if len(sys.argv) > 2 else os.path.join(
+        REPO_ROOT, "BENCH_serve.json")
+    rc = check(overlap)
+    rc = check_serve(serve) or rc
+    sys.exit(rc)
