@@ -17,12 +17,20 @@ The perf artifact of the streamed serving path (PR 5).  Three sections:
   the smallest b where the policy leaves ``xla`` for a ring family is the
   decode-message-size crossover the serve ``TransportPolicy.moe="auto"``
   acts on (dense-combine stays the fallback below it).
+* **paged-pool prefix cache (modeled, PR 6)** — the ``paged_prefix``
+  suite: disaggregated admission pushes the prefill cache as per-block
+  one-sided PUTs, and a prefix-cache hit replaces the resident fraction of
+  the prompt with block-table map writes (one *short* PUT per shared
+  block) plus the suffix-only chunked prefill
+  (``netmodel.prefix_hit_ttft``).  The ``block_push`` suite sweeps block
+  sizes for the PUT-efficiency guidance docs/serving.md quotes.
 * **measured CPU walls** — the real ``runtime/server.py`` under synthetic
-  arrivals on a host mesh, chunked admission vs bulk admission: TTFT,
-  inter-token latency, tokens/s (functional walls only — no async DMA on
-  CPU, the modeled columns are the decision surface), plus the bit-
-  identity asserts: chunked prefill ≡ bulk prefill cache/logits, and
-  chunked-admission server tokens ≡ bulk-admission tokens.
+  arrivals on a host mesh, chunked admission vs bulk admission vs the
+  paged block pool: TTFT, inter-token latency, tokens/s (functional walls
+  only — no async DMA on CPU, the modeled columns are the decision
+  surface), plus the bit-identity asserts: chunked prefill ≡ bulk prefill
+  cache/logits, and chunked / paged server tokens ≡ bulk tokens, with
+  prefix-cache hits firing on the shared-prefix workload.
 
 Writes ``BENCH_serve.json`` at the repo root; ``tools/bench_gate.py``
 gates CI on its preset rows.  ``--model-only`` skips the measured section.
@@ -30,7 +38,9 @@ gates CI on its preset rows.  ``--model-only`` skips the measured section.
 Internal assertions (a failed claim is a failed run):
   * chunked prefill models ≥ 1.3× TTFT over bulk at ≥ 1 preset operating
     point on the QSFP-class link (the acceptance bar);
-  * every measured chunked schedule is bit-identical to its bulk
+  * prefix-cache hits model ≥ 1.3× TTFT at ≥ 1 preset operating point on
+    the QSFP-class link (the PR 6 acceptance bar);
+  * every measured chunked/paged schedule is token-identical to its bulk
     counterpart.
 """
 
@@ -133,6 +143,76 @@ def model_ttft_rows():
     return rows
 
 
+#: prefix-cache hit depths swept by the paged_prefix suite (fraction of
+#: the prompt resident as shared full blocks)
+HIT_FRACS = (0.25, 0.5, 0.75)
+
+
+def model_prefix_rows():
+    """Paged-pool suite: disaggregated admission (per-block PUTs) and the
+    prefix-cache hit TTFT, against the same cold chunked admission the
+    ``chunked_prefill`` suite prices."""
+    from repro.configs import get_config
+    from repro.core import netmodel as nm
+
+    rows = []
+    for arch in SERVE_ARCHS:
+        cfg = get_config(arch)
+        per_tok = _kv_write_bytes_per_token(cfg)
+        for s in PROMPT_LENS:
+            cache_bytes = per_tok * s
+            for link_name, link in (("qsfp", nm.FSHMEM_QSFP),
+                                    ("ici", nm.TPU_ICI)):
+                packet = max(link.packet_overhead_bytes)
+                if link_name == "ici":
+                    tc = _prefill_flops(cfg, s) / TPU_V5E_FLOPS
+                else:
+                    tc = cache_bytes / link.peak_bandwidth
+                cold, c = min(
+                    ((nm.serve_prefill_time(link, tc, cache_bytes, cc,
+                                            packet), cc)
+                     for cc in CHUNK_COUNTS))
+                blk_tokens = -(-s // c)          # block = one chunk's KV
+                blk_bytes = per_tok * blk_tokens
+                for hf in HIT_FRACS:
+                    n_shared = int(hf * s) // blk_tokens
+                    hit = nm.prefix_hit_ttft(link, tc, cache_bytes, c,
+                                             packet, hf, n_shared)
+                    rows.append({
+                        "source": "preset-model", "suite": "paged_prefix",
+                        "arch": arch, "link": link_name, "prompt_len": s,
+                        "hit_frac": hf, "block_tokens": blk_tokens,
+                        "block_bytes": blk_bytes,
+                        "n_shared_blocks": n_shared,
+                        "block_push_us": 1e6 * nm.block_push_time(
+                            link, blk_bytes, -(-s // blk_tokens), packet),
+                        "cold_ttft_us": 1e6 * cold,
+                        "hit_ttft_us": 1e6 * hit,
+                        "speedup": cold / hit,
+                    })
+    return rows
+
+
+def model_block_push_rows():
+    """Block-size guidance sweep: PUT efficiency per block size and link —
+    the netmodel curve docs/serving.md quotes (small blocks pay the
+    per-message latency, big blocks lose sharing granularity)."""
+    from repro.core import netmodel as nm
+
+    rows = []
+    for link_name, link in (("qsfp", nm.FSHMEM_QSFP), ("ici", nm.TPU_ICI)):
+        packet = max(link.packet_overhead_bytes)
+        for blk_bytes in (1 << p for p in range(9, 21)):
+            rows.append({
+                "source": "preset-model", "suite": "block_push",
+                "link": link_name, "block_bytes": blk_bytes,
+                "put_us": 1e6 * nm.put_time(link, blk_bytes, packet),
+                "efficiency": nm.block_push_efficiency(link, blk_bytes,
+                                                       packet),
+            })
+    return rows
+
+
 def model_ep_decode_rows():
     from repro.configs import EP_PRESETS
     from repro.core import conduit
@@ -176,6 +256,14 @@ def claims_from(rows) -> dict:
                        if r["arch"] == arch and r["prompt_len"] == s)
             worst = best if worst is None else min(worst, best)
     claims["ttft_min_best_link_speedup"] = worst
+
+    paged = [r for r in rows if r["suite"] == "paged_prefix"]
+    if paged:
+        hit_best = max(r["speedup"] for r in paged if r["link"] == "qsfp")
+        claims["prefix_hit_max_speedup_qsfp"] = hit_best
+        assert hit_best >= 1.3, (
+            f"prefix-cache hits must model >= 1.3x TTFT at some preset "
+            f"point on the QSFP-class link (best: {hit_best:.2f}x)")
 
     ep = [r for r in rows if r["suite"] == "ep_decode"]
     for name in {r["preset"] for r in ep}:
@@ -237,36 +325,51 @@ def measured_server_rows():
     np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
 
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, size=12) for _ in range(6)]
+    sys_prefix = rng.integers(0, cfg.vocab_size, size=8)
+    prompts = [np.concatenate([
+        sys_prefix, rng.integers(0, cfg.vocab_size, size=4)])
+        for _ in range(6)]
     rows, outs = [], {}
-    for chunk in (4, None):
+    for mode, chunk, paged in (("chunked(4)", 4, False), ("bulk", None,
+                                                          False),
+                               ("paged(4,blk4)", 4, True)):
         srv = Server(cfg, params, mesh, srv=ServerConfig(
             max_batch=2, max_seq=64, max_new_tokens=4,
-            prefill_chunk=chunk))
+            prefill_chunk=chunk, paged=paged, block_size=4))
         t0 = time.perf_counter()
         steps = drive_arrivals(srv, prompts, every=2)
         wall = time.perf_counter() - t0
         stats = srv.stats()
-        outs[chunk] = {r.rid: r.out_tokens for r in srv.done}
-        rows.append({
+        outs[mode] = {r.rid: r.out_tokens for r in srv.done}
+        row = {
             "source": "measured-cpu-mesh", "suite": "server_arrivals",
-            "arch": cfg.name, "mode": f"chunked({chunk})" if chunk
-            else "bulk", "requests": stats["requests"],
+            "arch": cfg.name, "mode": mode,
+            "requests": stats["requests"],
             "tokens": stats["tokens"], "steps": steps,
             "wall_s": wall,
             "mean_ttft_ms": 1e3 * stats["mean_ttft_s"],
             "mean_itl_ms": 1e3 * stats["mean_itl_s"],
             "tok_s": stats["throughput_tok_s"],
-        })
-    assert outs[4] == outs[None], \
+        }
+        if paged:
+            srv.pool.check_conservation()
+            row["prefix_hits"] = stats["prefix_hits"]
+            row["prefix_misses"] = stats["prefix_misses"]
+        rows.append(row)
+    assert outs["chunked(4)"] == outs["bulk"], \
         "chunked-admission tokens != bulk-admission tokens"
+    assert outs["paged(4,blk4)"] == outs["bulk"], \
+        "paged-pool tokens != contiguous-cache tokens"
+    assert rows[-1]["prefix_hits"] > 0, \
+        "shared-prefix workload produced no prefix-cache hits"
     return rows
 
 
 def main(model_only: bool = False) -> dict:
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
-    rows = model_ttft_rows() + model_ep_decode_rows()
+    rows = (model_ttft_rows() + model_prefix_rows()
+            + model_block_push_rows() + model_ep_decode_rows())
     claims = claims_from(rows)
     if not model_only:
         rows += measured_server_rows()

@@ -312,6 +312,75 @@ def serve_prefill_time(
     return pipeline_time([t_compute / c] * c, [tx] * c)
 
 
+def block_push_time(
+    link: LinkParams,
+    block_bytes: float,
+    n_blocks: int,
+    packet_size: int,
+) -> float:
+    """Wire cost of PUTting ``n_blocks`` fixed-size KV blocks one-sided.
+
+    The paged-pool admission path: every finished block is its own long
+    PUT into the owner rank's pool segment (``core/pgas.BlockSegment``
+    resolves the address), so the total pays per-message setup once per
+    block — the block-size U-curve the serving docs quote (small blocks
+    waste latency, huge blocks waste prefix-sharing granularity).
+    """
+    return max(1, int(n_blocks)) * put_time(
+        link, max(1, int(block_bytes)), packet_size)
+
+
+def block_push_efficiency(
+    link: LinkParams, block_bytes: float, packet_size: int
+) -> float:
+    """Fraction of a block PUT spent moving payload (vs per-message setup)
+    — the netmodel's block-size guidance knob."""
+    wire = max(1, int(block_bytes)) / link.peak_bandwidth
+    return wire / put_time(link, max(1, int(block_bytes)), packet_size)
+
+
+def prefix_hit_ttft(
+    link: LinkParams,
+    t_compute: float,
+    cache_bytes: float,
+    n_chunks: int,
+    packet_size: int,
+    hit_frac: float,
+    n_shared_blocks: int,
+) -> float:
+    """TTFT of an admission whose leading ``hit_frac`` of the prompt is
+    resident in the prefix cache.
+
+    The shared prefix is neither recomputed nor re-sent: admission maps the
+    ``n_shared_blocks`` resident block ids into the slot's table — one
+    *short* PUT each (header-only, the paper's 0.21 µs class) — then runs
+    the chunked prefill of the remaining suffix
+    (:func:`serve_prefill_time` over the surviving compute and cache
+    bytes).  ``hit_frac = 0`` degenerates to the full admission.
+    """
+    assert 0.0 <= hit_frac < 1.0, hit_frac
+    suffix = serve_prefill_time(
+        link, t_compute * (1.0 - hit_frac),
+        cache_bytes * (1.0 - hit_frac), n_chunks, packet_size)
+    return n_shared_blocks * link.latency.put_short + suffix
+
+
+def prefix_hit_speedup(
+    link: LinkParams,
+    t_compute: float,
+    cache_bytes: float,
+    n_chunks: int,
+    packet_size: int,
+    hit_frac: float,
+    n_shared_blocks: int,
+) -> float:
+    """Cold-admission TTFT over prefix-hit TTFT (the BENCH_serve claim)."""
+    cold = serve_prefill_time(link, t_compute, cache_bytes, n_chunks,
+                              packet_size)
+    return cold / prefix_hit_ttft(link, t_compute, cache_bytes, n_chunks,
+                                  packet_size, hit_frac, n_shared_blocks)
+
+
 def best_chunk_count(
     t_compute: float,
     t_comm: float,

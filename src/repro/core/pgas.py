@@ -103,6 +103,46 @@ class SymmetricHeap:
         return jnp.zeros((self.size,), self.dtype)
 
 
+@dataclasses.dataclass
+class BlockSegment:
+    """Block-granular view of a symmetric-heap symbol.
+
+    The paged KV pool treats one heap symbol as an array of fixed-size
+    blocks, globally numbered ``0 .. n_blocks-1`` and striped across ranks
+    owner-major: rank ``r`` owns blocks ``[r*blocks_per_rank,
+    (r+1)*blocks_per_rank)``.  :meth:`addr` is the shared-to-physical
+    address translation of PGAS address-mapping hardware — a global block
+    id resolves to ``(owner rank, local word offset)`` with two integer
+    ops, so it composes with traced values inside a jitted PUT.
+    """
+
+    symbol: Symbol
+    block_words: int
+    blocks_per_rank: int
+    n_ranks: int
+
+    @property
+    def n_blocks(self) -> int:
+        """Total blocks across all ranks."""
+        return self.blocks_per_rank * self.n_ranks
+
+    def owner(self, bid):
+        """Rank owning global block ``bid`` (int or traced array)."""
+        return bid // self.blocks_per_rank
+
+    def local_index(self, bid):
+        """Owner-local block index of global block ``bid``."""
+        return bid % self.blocks_per_rank
+
+    def local_offset(self, bid):
+        """Word offset of ``bid`` inside the owner's partition."""
+        return self.symbol.offset + self.local_index(bid) * self.block_words
+
+    def addr(self, bid):
+        """Translate a global block id to ``(owner_rank, local_offset)``."""
+        return self.owner(bid), self.local_offset(bid)
+
+
 # ---------------------------------------------------------------------------
 # One-sided primitives (call inside shard_map)
 # ---------------------------------------------------------------------------
@@ -260,6 +300,42 @@ class GlobalAddressSpace:
             return put(heap, payload, sym.offset, axis=self.axis, perm=perm)
 
         return self.run(_w, extra_in_specs=(P(self.axis),))
+
+    def block_segment(self, name: str, block_words: int) -> BlockSegment:
+        """Block-granular view of symbol ``name``: the symbol on each rank
+        is split into ``size // block_words`` fixed-size blocks, globally
+        numbered owner-major across the axis."""
+        sym = self.heap.symbol(name)
+        if sym.size % block_words:
+            raise ValueError(
+                f"symbol {name!r} size {sym.size} not a multiple of "
+                f"block_words {block_words}"
+            )
+        return BlockSegment(
+            symbol=sym,
+            block_words=int(block_words),
+            blocks_per_rank=sym.size // int(block_words),
+            n_ranks=self.n_ranks,
+        )
+
+    def write_block(self, name: str, block_words: int, *, perm: Perm) -> Callable:
+        """A jitted ``f(global_heap, payload, bid)`` PUTting one block into
+        the segment of symbol ``name`` on the peers named by ``perm``.
+
+        ``bid`` is a traced global block id; the segment translates it to a
+        local offset on the destination, so one closure serves every block
+        the static ``perm`` destination owns.  The caller must route each
+        ``bid`` to its owner — ``segment.owner(bid)`` must equal the ``dst``
+        of the pair delivering it (the one-sided contract: the sender, not
+        the receiver, resolves the global address).
+        """
+        seg = self.block_segment(name, block_words)
+
+        def _w(heap, payload, bid):
+            off = seg.local_offset(jnp.asarray(bid, jnp.int32))
+            return put(heap, payload, off, axis=self.axis, perm=perm)
+
+        return self.run(_w, extra_in_specs=(P(self.axis), P()))
 
     def read_symbol(self, name: str, *, perm: Perm) -> Callable:
         """A jitted ``f(global_heap) -> (heap, chunk)`` GETting symbol

@@ -31,6 +31,7 @@ from repro.dist.steps import (
     StepBundle,
     StepConfig,
     TransportPolicy,
+    build_block_write_step,
     build_init,
     build_prefill_chunk_step,
     build_prefill_step,
@@ -46,7 +47,8 @@ __all__ = [
     "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
     "MeshAxes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
     "param_pspecs", "to_shardings",
-    "StepBundle", "StepConfig", "TransportPolicy", "build_init",
+    "StepBundle", "StepConfig", "TransportPolicy",
+    "build_block_write_step", "build_init",
     "build_prefill_chunk_step", "build_prefill_step", "build_serve_step",
     "build_slot_write_step", "build_train_step",
 ]

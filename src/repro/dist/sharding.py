@@ -187,8 +187,8 @@ def cache_pspecs(cfg: ModelConfig, mesh, cache,
     specs: Dict[str, P] = {}
     for key, leaf in cache.items():
         shape = tuple(leaf.shape)
-        if key in ("pos", "slot_pos") or len(shape) < 2:
-            specs[key] = P()
+        if key in ("pos", "slot_pos", "block_ids") or len(shape) < 2:
+            specs[key] = P()                    # bookkeeping: replicate
             continue
         entries: list = [None] * len(shape)
         entries[1] = fit_axis(mesh, d, shape[1])          # (stack, batch, ...)

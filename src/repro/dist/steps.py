@@ -66,7 +66,12 @@ from repro.dist.sharding import (
 from repro.models import artblock
 from repro.models import layers as L
 from repro.models import moe_ep
-from repro.models.decode import decode_step, init_cache
+from repro.models.decode import (
+    decode_step,
+    init_cache,
+    init_paged_cache,
+    paged_slot_blocks,
+)
 from repro.models.model import init_params
 from repro.models.prefill import (
     init_prefill_scratch,
@@ -549,7 +554,9 @@ def _moe_decode_runner(cfg: ModelConfig, mesh, policy: TransportPolicy,
 
 def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
                      batch: int, max_seq: int, *,
-                     sample: bool = False) -> StepBundle:
+                     sample: bool = False,
+                     block_size: int | None = None,
+                     n_blocks: int | None = None) -> StepBundle:
     """``fn(params, cache, tokens) -> (cache, logits | token_ids)``: one
     batched decode step against the ring-buffer cache (continuous-batching
     inner loop; every cache row advances at its own per-slot position).
@@ -562,13 +569,28 @@ def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
     of the (B, V) logits: argmax runs on device and the server fetches one
     stacked id vector per step instead of syncing per-slot logits.
 
+    ``block_size`` ≠ None switches the cache template to the paged block
+    pool (``models/decode.init_paged_cache``): decode gathers each row's
+    ring through its ``block_ids`` table and scatters the new row back into
+    the pool — bit-identical to the contiguous path when every table fully
+    backs the ring.  ``n_blocks`` defaults to parking blocks plus a full
+    private table per row.
+
     ``TransportPolicy.moe`` ≠ ``xla`` (with an ``expert`` mesh axis and a
     mesh-divisible batch) swaps the dense-combine MoE decode for the
     expert-parallel conduit dispatch — see :func:`_moe_decode_runner`.
     """
     params_shape, _ = _state_shapes(cfg, scfg)
     pspecs = param_pspecs(cfg, mesh, params_shape)
-    cache_shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
+    if block_size is not None:
+        npb = paged_slot_blocks(cfg, max_seq, block_size)
+        if n_blocks is None:
+            n_blocks = batch * (1 + npb)
+        cache_shape = jax.eval_shape(
+            lambda: init_paged_cache(cfg, batch, max_seq, block_size,
+                                     n_blocks))
+    else:
+        cache_shape = jax.eval_shape(lambda: init_cache(cfg, batch, max_seq))
     cspecs = cache_pspecs(cfg, mesh, cache_shape)
     dp = dp_axes(mesh)
     b_entry = fit_axis(mesh, dp, batch)
@@ -684,8 +706,56 @@ def build_slot_write_step(cfg: ModelConfig, mesh, batch: int,
     )
 
 
+def build_block_write_step(cfg: ModelConfig, mesh, batch: int,
+                           max_seq: int, block_size: int, n_blocks: int,
+                           n_write: int) -> StepBundle:
+    """``fn(cache, bk, bv, dst, table_row, slot_pos_row, pos, i) -> cache``:
+    push ``n_write`` finished prefill blocks into the paged pool and install
+    row ``i``'s block table — the block-granular admission PUT.
+
+    ``bk``/``bv`` are ``(L, n_write, Hkv, blk, hd)`` block stacks (from
+    ``models/prefill.scratch_to_blocks``), ``dst`` the ``(n_write,)`` global
+    pool ids they land in, ``table_row`` the full ``(S_buf/blk,)`` table for
+    the slot (private ids plus any ref-counted shared-prefix ids, which are
+    *not* rewritten — copy-on-write sharing).  The pool cache is **donated**;
+    only the written blocks and row ``i``'s bookkeeping move.  One bundle
+    per ``n_write`` — the server caches them per distinct prefix-hit depth.
+    """
+    full_shape = jax.eval_shape(
+        lambda: init_paged_cache(cfg, batch, max_seq, block_size, n_blocks))
+    cspecs = cache_pspecs(cfg, mesh, full_shape)
+
+    def fn_(cache, bk, bv, dst, table_row, slot_pos_row, pos, i):
+        out = dict(cache)
+        out["kp"] = cache["kp"].at[:, dst].set(bk.astype(cache["kp"].dtype))
+        out["vp"] = cache["vp"].at[:, dst].set(bv.astype(cache["vp"].dtype))
+        out["block_ids"] = lax.dynamic_update_slice_in_dim(
+            cache["block_ids"], table_row[None], i, axis=0)
+        out["slot_pos"] = lax.dynamic_update_slice_in_dim(
+            cache["slot_pos"], slot_pos_row[None], i, axis=0)
+        out["pos"] = lax.dynamic_update_slice_in_dim(
+            cache["pos"], pos[None], i, axis=0)
+        return out
+
+    # payload inputs keep whatever sharding prefill left them with (the
+    # scatter re-lays them out); only the donated pool is pinned.
+    fn = jax.jit(
+        fn_,
+        in_shardings=(to_shardings(mesh, cspecs),) + (None,) * 7,
+        out_shardings=to_shardings(mesh, cspecs),
+        donate_argnums=(0,))
+    return StepBundle(
+        fn=fn,
+        in_specs=(cspecs, P(), P(), P(), P(), P(), P(), P()),
+        out_specs=cspecs,
+        aux={"cache_shape": full_shape, "n_write": n_write,
+             "block_size": block_size},
+    )
+
+
 __all__ = [
     "StepConfig", "StepBundle", "TransportPolicy", "build_init",
     "build_train_step", "build_prefill_step", "build_serve_step",
-    "build_prefill_chunk_step", "build_slot_write_step", "MeshAxes",
+    "build_prefill_chunk_step", "build_slot_write_step",
+    "build_block_write_step", "MeshAxes",
 ]

@@ -37,6 +37,16 @@ def main():
     p.add_argument("--arrive-every", type=int, default=0,
                    help="synthetic arrivals: submit one request every N "
                         "scheduler steps (0: all upfront)")
+    p.add_argument("--paged", action="store_true",
+                   help="paged KV block pool + prefix cache (token-"
+                        "identical to the contiguous cache)")
+    p.add_argument("--block-size", type=int, default=16,
+                   help="KV positions per pool block (--paged only); must "
+                        "divide the ring extent and, for prefix caching, "
+                        "be a multiple of --prefill-chunk")
+    p.add_argument("--dump-tokens", default=None, metavar="PATH",
+                   help="write {rid: out_tokens} JSON (CI diffs paged vs "
+                        "contiguous runs)")
     args = p.parse_args()
 
     n_dev = args.data_axis * args.model_axis * args.expert_axis
@@ -62,7 +72,8 @@ def main():
     scfg = StepConfig(transport=TransportPolicy(moe=args.moe_transport))
     srv = Server(cfg, params, mesh, scfg=scfg, srv=ServerConfig(
         max_batch=args.max_batch, max_seq=256, max_new_tokens=args.max_new,
-        prefill_chunk=args.prefill_chunk or None))
+        prefill_chunk=args.prefill_chunk or None,
+        paged=args.paged, block_size=args.block_size))
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
                for _ in range(args.requests)]
@@ -77,12 +88,24 @@ def main():
     stats = srv.stats()
     mode = (f"chunked({args.prefill_chunk})" if srv.chunked_admission
             else "bulk")
+    if args.paged:
+        mode += f"+paged(blk{args.block_size})"
     print(f"[serve:{mode}] {stats['requests']} requests, "
           f"{stats['tokens']} tokens in {steps} steps; "
           f"{stats['throughput_tok_s']:.1f} tok/s, "
           f"mean latency {stats['mean_latency_s']*1e3:.1f} ms, "
           f"ttft {stats['mean_ttft_s']*1e3:.1f} ms, "
           f"itl {stats['mean_itl_s']*1e3:.2f} ms")
+    if args.paged:
+        print(f"[serve:{mode}] prefix hits {stats['prefix_hits']:.0f} / "
+              f"misses {stats['prefix_misses']:.0f}, "
+              f"pool evictions {stats['pool_evictions']:.0f}, "
+              f"free blocks {stats['pool_free_blocks']:.0f}")
+    if args.dump_tokens:
+        import json
+        with open(args.dump_tokens, "w") as f:
+            json.dump({str(r.rid): r.out_tokens for r in srv.done}, f,
+                      sort_keys=True)
 
 
 if __name__ == "__main__":

@@ -22,6 +22,21 @@ Cache design notes (these drive the decode-shape roofline memory term):
 * hybrid: SSM states for all 81 layers + one K/V cache per *application*
   of the shared attention block (weights are shared; caches are not).
 * encdec: decoder self-attention ring + precomputed cross K/V per layer.
+
+**Paged KV block pool** (PR 6): :func:`init_paged_cache` replaces the
+per-row contiguous ring with fixed-size blocks drawn from one shared pool
+(``kp``/``vp``: (L, N_blocks, Hkv, blk, hd)) plus a per-slot block table
+(``block_ids`` (B, S_buf/blk)).  ``block_size`` must divide
+``kv_buf_len`` so ring slot ``j`` lives in block ``j // blk`` at offset
+``j % blk`` — the block-table gather then reconstructs *exactly* the
+contiguous layout, the attention math is byte-for-byte the contiguous
+recipe, and only the new row is scattered back — which is what makes
+paged decode bit-identical to the contiguous path (asserted by
+tests/test_serving.py across block sizes, ring wraparound, and
+shared-prefix aliasing).  Blocks ``[0, batch)`` are per-row *parking*
+blocks: rows whose slot is idle keep writing into their own parking
+block, so a retired row can never clobber a block the allocator
+(``runtime/server.BlockPool``) has handed to someone else.
 """
 
 from __future__ import annotations
@@ -118,6 +133,87 @@ def _ssm_cache(cfg: ModelConfig, n_layers: int, batch: int, dt) -> Cache:
             jnp.float32),
         "conv_state": jnp.zeros((n_layers, batch, cfg.ssm_conv - 1, conv_ch), dt),
     }
+
+
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Whether the arch can decode against the paged KV block pool.
+
+    Requires the GQA ring-buffer cache (dense/vlm/moe non-MLA) — the
+    families whose ``k``/``v`` leaves the block table indirects.  MLA
+    latents, SSM state and the encdec cross-cache stay contiguous.
+    """
+    return cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla"
+
+
+def paged_slot_blocks(cfg: ModelConfig, max_seq: int, block_size: int) -> int:
+    """Blocks per slot: ``kv_buf_len / block_size``.
+
+    ``block_size`` must divide the ring extent — that is the invariant
+    that keeps ring slot ``j`` at block ``j // blk`` offset ``j % blk``,
+    i.e. the gathered view *is* the contiguous layout (bit-identity).
+    """
+    sb = kv_buf_len(cfg, max_seq)
+    if sb % block_size:
+        raise ValueError(
+            f"block_size {block_size} must divide kv_buf_len {sb}")
+    return sb // block_size
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, max_seq: int,
+                     block_size: int, n_blocks: int) -> Cache:
+    """A paged decode cache: shared block pool + per-slot block tables.
+
+    Layout (vs the contiguous ``init_cache``): ``k``/``v``
+    (L, B, Hkv, S_buf, hd) become ``kp``/``vp`` (L, n_blocks, Hkv,
+    block_size, hd), and ``block_ids`` (B, S_buf/block_size) maps each
+    slot's logical block to a pool block.  Blocks ``[0, batch)`` are the
+    per-row parking blocks; every row's table starts parked on its own
+    (``block_ids[b, :] = b``), so idle rows write garbage only into
+    their private parking block.  ``pos``/``slot_pos`` bookkeeping is
+    unchanged from the contiguous contract.
+    """
+    assert supports_paged(cfg), cfg.name
+    dt = jnp.dtype(cfg.param_dtype)
+    hd = cfg.resolved_head_dim
+    sb = kv_buf_len(cfg, max_seq)
+    npb = paged_slot_blocks(cfg, max_seq, block_size)
+    if n_blocks < batch:
+        raise ValueError(
+            f"n_blocks {n_blocks} < batch {batch}: every row needs a "
+            f"parking block")
+    shape = (cfg.n_layers, n_blocks, cfg.n_kv_heads, block_size, hd)
+    return {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "slot_pos": jnp.full((batch, sb), -1, jnp.int32),
+        "kp": jnp.zeros(shape, dt),
+        "vp": jnp.zeros(shape, dt),
+        "block_ids": jnp.broadcast_to(
+            jnp.arange(batch, dtype=jnp.int32)[:, None], (batch, npb)),
+    }
+
+
+def gather_blocks(pool: jnp.ndarray, block_ids: jnp.ndarray) -> jnp.ndarray:
+    """Block-table gather: pool (N, Hkv, blk, hd) + table (B, npb) →
+    the contiguous-layout view (B, Hkv, npb·blk, hd).  A pure gather —
+    the bits are exactly the contiguous cache's, so everything computed
+    from the view is bit-identical to the contiguous path."""
+    g = jnp.take(pool, block_ids, axis=0)          # (B, npb, Hkv, blk, hd)
+    b, npb, hkv, blk, hd = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, hkv, npb * blk, hd)
+
+
+def scatter_block_rows(pool: jnp.ndarray, block_ids: jnp.ndarray,
+                       new: jnp.ndarray, slot: jnp.ndarray) -> jnp.ndarray:
+    """Write each row's new K/V vector (B, Hkv, hd) into its pool block.
+
+    Ring slot ``slot[b]`` lives in block ``block_ids[b, slot // blk]`` at
+    offset ``slot % blk`` — the one-row scatter that replaces the
+    contiguous path's ``_row_update``.  The allocator guarantees distinct
+    rows never share a *tail* block (shared prefix blocks are read-only
+    by the admission rule), so the scatter has no write aliasing."""
+    blk = pool.shape[2]
+    bid = jnp.take_along_axis(block_ids, (slot // blk)[:, None], axis=1)[:, 0]
+    return pool.at[bid, :, slot % blk, :].set(new.astype(pool.dtype))
 
 
 def cache_bytes(cfg: ModelConfig, batch: int, max_seq: int) -> int:
@@ -324,25 +420,55 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Cache,
         slot_pos_new = None
 
     if cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla":
-        def body(h, layer):
-            lp, kc, vc = layer
-            normed = L.apply_norm(cfg, lp["ln1"], h)
-            a, kc, vc = attention_decode(cfg, lp["attn"], normed, kc, vc,
-                                         slot_pos_new, pos, window=cfg.window)
-            h = h + a
-            normed2 = L.apply_norm(cfg, lp["ln2"], h)
+        def ffn(normed2, lp):
             if cfg.family == "moe":
                 if moe_runner is not None:
-                    f = moe_runner(cfg, lp["moe"], normed2[:, None, :])[:, 0]
-                else:
-                    f = L.moe(cfg, lp["moe"], normed2[:, None, :],
-                              dense_combine=True)[:, 0]
-            else:
-                f = L.mlp(cfg, lp["mlp"], normed2)
-            return h + f, (kc, vc)
+                    return moe_runner(cfg, lp["moe"], normed2[:, None, :])[:, 0]
+                return L.moe(cfg, lp["moe"], normed2[:, None, :],
+                             dense_combine=True)[:, 0]
+            return L.mlp(cfg, lp["mlp"], normed2)
 
-        x, (ks, vs) = lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
-        cache = dict(cache, k=ks, v=vs, slot_pos=slot_pos_new, pos=pos + 1)
+        if "kp" in cache:
+            # paged: gather the block-table view, run the *identical*
+            # contiguous attention, scatter only the new row back
+            bids = cache["block_ids"]
+            sb = cache["slot_pos"].shape[1]
+            slot = pos % sb
+
+            def body(h, layer):
+                lp, kp, vp = layer
+                kc = gather_blocks(kp, bids)
+                vc = gather_blocks(vp, bids)
+                normed = L.apply_norm(cfg, lp["ln1"], h)
+                a, kc, vc = attention_decode(
+                    cfg, lp["attn"], normed, kc, vc, slot_pos_new, pos,
+                    window=cfg.window)
+                h = h + a
+                f = ffn(L.apply_norm(cfg, lp["ln2"], h), lp)
+                rows = jnp.arange(b)
+                kp = scatter_block_rows(kp, bids, kc[rows, :, slot, :], slot)
+                vp = scatter_block_rows(vp, bids, vc[rows, :, slot, :], slot)
+                return h + f, (kp, vp)
+
+            x, (kps, vps) = lax.scan(
+                body, x, (params["layers"], cache["kp"], cache["vp"]))
+            cache = dict(cache, kp=kps, vp=vps, slot_pos=slot_pos_new,
+                         pos=pos + 1)
+        else:
+            def body(h, layer):
+                lp, kc, vc = layer
+                normed = L.apply_norm(cfg, lp["ln1"], h)
+                a, kc, vc = attention_decode(cfg, lp["attn"], normed, kc, vc,
+                                             slot_pos_new, pos,
+                                             window=cfg.window)
+                h = h + a
+                f = ffn(L.apply_norm(cfg, lp["ln2"], h), lp)
+                return h + f, (kc, vc)
+
+            x, (ks, vs) = lax.scan(
+                body, x, (params["layers"], cache["k"], cache["v"]))
+            cache = dict(cache, k=ks, v=vs, slot_pos=slot_pos_new,
+                         pos=pos + 1)
 
     elif cfg.attn_type == "mla":
         def body(h, layer):

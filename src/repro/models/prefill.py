@@ -400,6 +400,76 @@ def scratch_to_cache(cfg: ModelConfig, scratch: Cache,
     return _finish_cache(cache, batch, s)
 
 
+# ---------------------------------------------------------------------------
+# paged KV block pool (PR 6): slot cache <-> pool blocks
+# ---------------------------------------------------------------------------
+
+
+def cache_to_blocks(cfg: ModelConfig, slot_cache: Cache, block_size: int):
+    """Split a single-request ring cache into pool blocks.
+
+    ``slot_cache``: the batch-1 cache :func:`prefill` /
+    :func:`scratch_to_cache` builds (``k``/``v`` (L, 1, Hkv, sb, hd)).
+    Returns ``(blocks_k, blocks_v, slot_pos_row, pos_row)`` with blocks
+    shaped (L, sb/blk, Hkv, blk, hd) — a pure reshape of the ring layout
+    (``block_size`` must divide ``sb``), so pushing the blocks into a
+    pool and gathering them back via the block table reproduces the
+    contiguous cache bit for bit.  These are the "finished chunk-blocks"
+    a prefill rank PUTs into the decode pool (``core/pgas.BlockSegment``
+    prices the one-sided writes).
+    """
+    k = slot_cache["k"]
+    nl, b1, hkv, sb, hd = k.shape
+    assert b1 == 1, k.shape
+    if sb % block_size:
+        raise ValueError(
+            f"block_size {block_size} must divide the ring extent {sb}")
+    npb = sb // block_size
+
+    def split(a):
+        blocks = a[:, 0].reshape(nl, hkv, npb, block_size, hd)
+        return blocks.transpose(0, 2, 1, 3, 4)
+
+    return (split(k), split(slot_cache["v"]),
+            slot_cache["slot_pos"][0], slot_cache["pos"][0])
+
+
+def scratch_to_blocks(cfg: ModelConfig, scratch: Cache, block_size: int,
+                      cache_len: Optional[int] = None):
+    """Ring-fill a completed prefill scratch straight into pool blocks
+    (:func:`scratch_to_cache` composed with :func:`cache_to_blocks` —
+    the paged flavor of the server's admission conversion)."""
+    return cache_to_blocks(cfg, scratch_to_cache(cfg, scratch,
+                                                 cache_len=cache_len),
+                           block_size)
+
+
+def seed_scratch_from_blocks(cfg: ModelConfig, scratch: Cache,
+                             blocks_k: jnp.ndarray,
+                             blocks_v: jnp.ndarray) -> Cache:
+    """Seed a fresh prefill scratch with ``m`` cached prefix blocks.
+
+    The prefix-cache hit path: positions ``[0, m·blk)`` of the scratch
+    are restored from pool blocks instead of recomputed, and chunked
+    prefill resumes at the first uncached chunk.  Valid only while the
+    cached prefix never wrapped the ring (slot ``j`` == position ``j`` —
+    the server's sharing guard), and bit-exact when the pool dtype equals
+    the compute dtype (the reduced/test configs; otherwise the prefix
+    K/V round-trips through the param dtype, ulp-level like any
+    cross-program reshard).
+    """
+    nl, m, hkv, blk, hd = blocks_k.shape
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def merge(buf, blocks):
+        flat = blocks.transpose(0, 2, 1, 3, 4).reshape(nl, hkv, m * blk, hd)
+        return lax.dynamic_update_slice_in_dim(
+            buf, flat[:, None].astype(cd), 0, axis=3)
+
+    return dict(scratch, k=merge(scratch["k"], blocks_k),
+                v=merge(scratch["v"], blocks_v))
+
+
 def prefill_chunked(
     cfg: ModelConfig,
     params: Params,

@@ -2,7 +2,7 @@
 
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.elastic import ElasticMesh, remesh
-from repro.runtime.server import Server, ServerConfig
+from repro.runtime.server import BlockPool, Server, ServerConfig
 
 __all__ = ["Trainer", "TrainerConfig", "ElasticMesh", "remesh",
-           "Server", "ServerConfig"]
+           "BlockPool", "Server", "ServerConfig"]

@@ -22,6 +22,18 @@ pipeline scheduler:
   runs on device, and the server fetches one stacked ``(B,)`` id vector
   per step instead of per-slot logits syncs.
 
+**Paged KV pool** (PR 6, ``ServerConfig.paged``): the monolithic per-rank
+cache becomes a pool of fixed-size KV blocks addressed through a per-slot
+block table (``models/decode.init_paged_cache``).  Admission converts the
+finished prefill into pool blocks and pushes only the *private* ones with
+one donated block-write (``dist/steps.build_block_write_step`` — the
+block-granular ``gasnet_put``; ``core/pgas.BlockSegment`` is the global
+addressing it models); a host-side ref-counted :class:`BlockPool` runs the
+free list and the prefix cache, so identical prompt prefixes are admitted
+once and aliased copy-on-write into many slots' tables.  Decode through
+the table is bit-identical to the contiguous ring (asserted by
+tests/test_serving.py).
+
 TTFT accounting: ``Request.first_token`` is stamped when the request's
 first *decode token id* has actually been sampled and fetched — never at
 prefill completion — and stays correct under chunked admission because the
@@ -37,22 +49,141 @@ from typing import Dict, List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 
 from repro.configs.base import ModelConfig
 from repro.dist.steps import (
     StepConfig,
+    build_block_write_step,
     build_prefill_chunk_step,
     build_prefill_step,
     build_serve_step,
     build_slot_write_step,
 )
-from repro.models.decode import init_cache
+from repro.models.decode import (
+    init_cache,
+    init_paged_cache,
+    kv_buf_len,
+    paged_slot_blocks,
+    supports_paged,
+)
 from repro.models.prefill import (
+    cache_to_blocks,
     init_prefill_scratch,
     prefill_chunk_cuts,
+    scratch_to_blocks,
     scratch_to_cache,
+    seed_scratch_from_blocks,
     supports_chunked_prefill,
 )
+
+
+class BlockPool:
+    """Host-side ref-counted free list over the paged KV pool.
+
+    Block ids ``[0, reserved)`` are *parking* blocks (one per batch row —
+    an idle row's table points at its own parking block so its dead decode
+    writes can never touch allocated blocks) and are never handed out.
+    Every other id is either on the free list or ref-counted live: one ref
+    per slot whose table maps the block, plus one per prefix-cache entry
+    that pins it.  Entries are LRU-evicted (their refs dropped) when
+    ``alloc`` runs short — blocks still mapped by running requests survive
+    eviction of the entry that cached them (copy-on-write sharing).
+    """
+
+    def __init__(self, n_blocks: int, reserved: int = 0):
+        self.n_blocks = int(n_blocks)
+        self.reserved = int(reserved)
+        assert 0 <= self.reserved <= self.n_blocks
+        # LIFO free list, low ids first out (nicer to read in tests)
+        self._free = list(range(self.n_blocks - 1, self.reserved - 1, -1))
+        self._refs: Dict[int, int] = {}
+        self._entries: "dict[bytes, List[int]]" = {}   # insertion = LRU order
+        self.evictions = 0
+
+    # -- invariant surface (the hypothesis tests drive these) ---------------
+
+    @property
+    def free_blocks(self) -> int:
+        """Blocks immediately available to ``alloc``."""
+        return len(self._free)
+
+    @property
+    def live_blocks(self) -> int:
+        """Blocks with at least one reference (slots or cache entries)."""
+        return len(self._refs)
+
+    @property
+    def cached_entries(self) -> int:
+        """Resident prefix-cache entries."""
+        return len(self._entries)
+
+    def check_conservation(self):
+        """Every non-reserved block is free xor referenced — no leaks, no
+        aliasing between the free list and live tables."""
+        assert self.free_blocks + self.live_blocks \
+            == self.n_blocks - self.reserved, (
+                self.free_blocks, self.live_blocks, self.n_blocks)
+        assert not set(self._free) & set(self._refs)
+
+    # -- alloc / refcount ----------------------------------------------------
+
+    def alloc(self, n: int) -> List[int]:
+        """Take ``n`` blocks off the free list (one ref each), LRU-evicting
+        idle prefix-cache entries under pressure; raises ``MemoryError``
+        when the pool genuinely cannot cover the request."""
+        while len(self._free) < n and self._entries:
+            self._evict_lru()
+        if len(self._free) < n:
+            raise MemoryError(
+                f"block pool exhausted: want {n}, free {len(self._free)}")
+        bids = [self._free.pop() for _ in range(n)]
+        for b in bids:
+            self._refs[b] = 1
+        return bids
+
+    def retain(self, bids: List[int]):
+        """Add one reference to each (already live) block."""
+        for b in bids:
+            if b not in self._refs:
+                raise ValueError(f"retain of unallocated block {b}")
+            self._refs[b] += 1
+
+    def release(self, bids: List[int]):
+        """Drop one reference from each block; blocks reaching zero return
+        to the free list.  Releasing a free block raises (double free)."""
+        for b in bids:
+            if b not in self._refs:
+                raise ValueError(f"double free of block {b}")
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                del self._refs[b]
+                self._free.append(b)
+
+    # -- prefix cache --------------------------------------------------------
+
+    def cache_insert(self, key: bytes, bids: List[int]):
+        """Pin ``bids`` (one extra ref each) as the cached blocks of prompt
+        prefix ``key``; a no-op if the key is already resident."""
+        if key in self._entries:
+            return
+        self.retain(bids)
+        self._entries[key] = list(bids)
+
+    def cache_lookup(self, key: bytes) -> Optional[List[int]]:
+        """If ``key`` is resident, retain its blocks for the caller and
+        return them (freshest LRU position); else ``None``."""
+        if key not in self._entries:
+            return None
+        bids = self._entries.pop(key)
+        self._entries[key] = bids                     # move to LRU tail
+        self.retain(bids)
+        return list(bids)
+
+    def _evict_lru(self):
+        key = next(iter(self._entries))
+        self.release(self._entries.pop(key))
+        self.evictions += 1
 
 
 @dataclasses.dataclass
@@ -67,6 +198,17 @@ class ServerConfig:
     #: tokens per admitted prefill chunk (the streamed-prefill ART chunk);
     #: None/0 admits with one bulk per-slot prefill instead
     prefill_chunk: Optional[int] = 16
+    #: paged KV pool: decode gathers each row's ring through a per-slot
+    #: block table (bit-identical to the contiguous cache)
+    paged: bool = False
+    #: KV positions per pool block; must divide the ring extent and (for
+    #: prefix caching) be a multiple of ``prefill_chunk``
+    block_size: int = 16
+    #: pool size; default = parking row per slot + a full table per slot
+    #: + one spare table's worth of prefix-cache headroom
+    n_blocks: Optional[int] = None
+    #: admit identical prompt prefixes once (shared ref-counted blocks)
+    prefix_cache: bool = True
 
 
 @dataclasses.dataclass
@@ -78,10 +220,13 @@ class Request:
     submitted: float = 0.0
     first_token: Optional[float] = None
     finished: Optional[float] = None
+    cancelled: bool = False
     # scheduler state (not part of the public result surface)
     phase: str = "queued"          # queued | prefill | decode
     _scratch: Optional[dict] = None
     _cursor: int = 0               # next prompt position to prefill
+    _blocks: List[int] = dataclasses.field(default_factory=list)
+    _shared: int = 0               # leading blocks aliased from the cache
 
 
 class Server:
@@ -93,28 +238,78 @@ class Server:
         self.mesh = mesh
         self.scfg = scfg or StepConfig()
         assert srv.greedy, "only greedy sampling is implemented"
-        self.bundle = build_serve_step(cfg, mesh, self.scfg,
-                                       batch=srv.max_batch,
-                                       max_seq=srv.max_seq, sample=True)
+        self._chunkable = (supports_chunked_prefill(cfg)
+                           and not cfg.frontend
+                           and bool(srv.prefill_chunk))
+        self._paged = bool(srv.paged)
+        if self._paged:
+            assert supports_paged(cfg), \
+                f"{cfg.name} has no paged-cache layout"
+            self._sb = kv_buf_len(cfg, srv.max_seq)
+            self._blk = int(srv.block_size)
+            self._npb = paged_slot_blocks(cfg, srv.max_seq, self._blk)
+            self._n_blocks = int(srv.n_blocks or
+                                 srv.max_batch * (1 + self._npb) + self._npb)
+            if srv.prefix_cache and self._chunkable:
+                assert self._blk % srv.prefill_chunk == 0, (
+                    "prefix caching needs block_size to be a multiple of "
+                    f"prefill_chunk ({self._blk} % {srv.prefill_chunk})")
+            self.pool = BlockPool(self._n_blocks, reserved=srv.max_batch)
+            self.bundle = build_serve_step(
+                cfg, mesh, self.scfg, batch=srv.max_batch,
+                max_seq=srv.max_seq, sample=True,
+                block_size=self._blk, n_blocks=self._n_blocks)
+        else:
+            self.pool = None
+            self.bundle = build_serve_step(cfg, mesh, self.scfg,
+                                           batch=srv.max_batch,
+                                           max_seq=srv.max_seq, sample=True)
         self.writer = build_slot_write_step(cfg, mesh, srv.max_batch,
                                             srv.max_seq)
         from repro.dist.sharding import to_shardings
         self._cache_sh = to_shardings(mesh, self.bundle.in_specs[1])
         self._slot_sh = to_shardings(mesh, self.writer.in_specs[1])
-        self.cache = jax.jit(
-            lambda: init_cache(cfg, srv.max_batch, srv.max_seq),
-            out_shardings=self._cache_sh)()
-        self._chunkable = (supports_chunked_prefill(cfg)
-                           and not cfg.frontend
-                           and bool(srv.prefill_chunk))
+        if self._paged:
+            blk, nb = self._blk, self._n_blocks
+            self.cache = jax.jit(
+                lambda: init_paged_cache(cfg, srv.max_batch, srv.max_seq,
+                                         blk, nb),
+                out_shardings=self._cache_sh)()
+            npb, sb = self._npb, self._sb
+
+            def _park(cache, i):
+                out = dict(cache)
+                out["block_ids"] = lax.dynamic_update_slice_in_dim(
+                    cache["block_ids"],
+                    jnp.broadcast_to(i.astype(jnp.int32), (1, npb)),
+                    i, axis=0)
+                out["slot_pos"] = lax.dynamic_update_slice_in_dim(
+                    cache["slot_pos"], jnp.full((1, sb), -1, jnp.int32),
+                    i, axis=0)
+                out["pos"] = lax.dynamic_update_slice_in_dim(
+                    cache["pos"], jnp.zeros((1,), jnp.int32), i, axis=0)
+                return out
+
+            self._park_fn = jax.jit(
+                _park, in_shardings=(self._cache_sh, None),
+                out_shardings=self._cache_sh, donate_argnums=(0,))
+        else:
+            self.cache = jax.jit(
+                lambda: init_cache(cfg, srv.max_batch, srv.max_seq),
+                out_shardings=self._cache_sh)()
         self._chunk_bundles: Dict[tuple, object] = {}   # (S, lo, C) -> bundle
         self._bulk_bundles: Dict[int, object] = {}      # S -> fn
         self._scratch_inits: Dict[int, object] = {}     # S -> jitted init
         self._finish_fns: Dict[int, object] = {}        # S -> jitted convert
+        self._blocks_fns: Dict[int, object] = {}        # S -> jitted convert
+        self._seed_fns: Dict[tuple, object] = {}        # (S, m) -> jitted
+        self._block_writers: Dict[int, object] = {}     # n_write -> bundle
         self.slots: List[Optional[Request]] = [None] * srv.max_batch
         self.queue: List[Request] = []
         self.done: List[Request] = []
         self._next_tok = np.zeros((srv.max_batch,), np.int32)
+        self.prefix_hits = 0
+        self.prefix_misses = 0
 
     @property
     def chunked_admission(self) -> bool:
@@ -152,15 +347,132 @@ class Server:
 
     def _admit(self):
         """Assign queued requests to free slots (state only — their prompts
-        are prefilled chunk-by-chunk between the following decode steps)."""
+        are prefilled chunk-by-chunk between the following decode steps).
+        Paged admission also claims the slot's pool blocks here, reusing
+        ref-counted prefix-cache blocks when the prompt's leading full
+        blocks are already resident; a dry pool leaves the request queued
+        (backpressure) until a retire frees blocks."""
         for i, slot in enumerate(self.slots):
             if slot is None and self.queue:
-                req = self.queue.pop(0)
+                req = self.queue[0]
+                if self._paged and not self._claim_blocks(req):
+                    break
+                self.queue.pop(0)
                 req.phase = "prefill"
                 req._cursor = 0
                 if self._chunkable:
                     req._scratch = self._scratch_init(int(req.prompt.size))()
+                    if self._paged and req._shared:
+                        req._scratch = self._seed_fn(
+                            int(req.prompt.size), req._shared)(
+                                req._scratch, self.cache,
+                                jnp.asarray(req._blocks[:req._shared],
+                                            jnp.int32))
+                        req._cursor = (req._shared * self._blk
+                                       // self.srv.prefill_chunk)
                 self.slots[i] = req
+
+    # -- paged block accounting ----------------------------------------------
+
+    def _share_ok(self, s: int) -> bool:
+        """Whether a prompt of length ``s`` may alias prefix-cache blocks:
+        sharing is copy-on-write (shared blocks are never rewritten), so
+        decode must be provably unable to ring-wrap into them."""
+        return (self._paged and self.srv.prefix_cache and self._chunkable
+                and self.cfg.window is None
+                and s + self.srv.max_new_tokens <= self._sb)
+
+    def _m_max(self, s: int) -> int:
+        """Most leading *full* blocks of an ``s``-token prompt that can be
+        shared — at least one token (one chunk) must remain to prefill, so
+        the final chunk's logits can emit the first decode token."""
+        return min((s - 1) // self._blk, self._npb)
+
+    def _claim_blocks(self, req: Request) -> bool:
+        """Claim the slot's ``S_buf/blk`` pool blocks: the longest resident
+        prompt prefix supplies shared blocks (retained, not copied), the
+        rest come off the free list.  False = pool dry, leave queued."""
+        s = int(req.prompt.size)
+        shared: List[int] = []
+        if self._share_ok(s):
+            for m in range(self._m_max(s), 0, -1):
+                got = self.pool.cache_lookup(
+                    req.prompt[:m * self._blk].tobytes())
+                if got is not None:
+                    shared = got
+                    break
+            if shared:
+                self.prefix_hits += 1
+            else:
+                self.prefix_misses += 1
+        try:
+            private = self.pool.alloc(self._npb - len(shared))
+        except MemoryError:
+            if shared:
+                self.pool.release(shared)
+                self.prefix_hits -= 1
+                self.prefix_misses += 1
+            return False
+        req._blocks = shared + private
+        req._shared = len(shared)
+        return True
+
+    def _seed_fn(self, s: int, m: int):
+        """Jitted prefix-hit seeder: gather ``m`` shared blocks out of the
+        pool into positions ``[0, m·blk)`` of a fresh scratch (donated),
+        so chunked prefill resumes at the first uncached chunk."""
+        key = (s, m)
+        if key not in self._seed_fns:
+            from repro.dist.sharding import to_shardings
+            cfg = self.cfg
+            bundle = self._chunk_bundle(s, 0, min(
+                self.srv.prefill_chunk or s, s))
+            ssh = to_shardings(self.mesh, bundle.in_specs[1])
+
+            def _seed(scratch, cache, bids):
+                bk = jnp.take(cache["kp"], bids, axis=1)
+                bv = jnp.take(cache["vp"], bids, axis=1)
+                return seed_scratch_from_blocks(cfg, scratch, bk, bv)
+
+            self._seed_fns[key] = jax.jit(
+                _seed, in_shardings=(ssh, self._cache_sh, None),
+                out_shardings=ssh, donate_argnums=(0,))
+        return self._seed_fns[key]
+
+    def _blocks_fn(self, s: int):
+        """Jitted scratch→pool-blocks conversion (the paged finish)."""
+        if s not in self._blocks_fns:
+            cfg, max_seq, blk = self.cfg, self.srv.max_seq, self._blk
+            self._blocks_fns[s] = jax.jit(
+                lambda scr: scratch_to_blocks(cfg, scr, blk,
+                                              cache_len=max_seq),
+                donate_argnums=(0,))
+        return self._blocks_fns[s]
+
+    def _block_writer(self, n_write: int):
+        if n_write not in self._block_writers:
+            self._block_writers[n_write] = build_block_write_step(
+                self.cfg, self.mesh, self.srv.max_batch, self.srv.max_seq,
+                self._blk, self._n_blocks, n_write)
+        return self._block_writers[n_write]
+
+    def _install_paged(self, i: int, req: Request, blocks):
+        """Push the slot's private blocks into the pool and install its
+        table row — then register every full-block prompt prefix with the
+        prefix cache (nested entries, so future prompts match the longest
+        common prefix block-chain)."""
+        bk, bv, slot_pos_row, pos_row = blocks
+        m = req._shared
+        table = jnp.asarray(req._blocks, jnp.int32)
+        self.cache = self._block_writer(self._npb - m).fn(
+            self.cache, bk[:, m:], bv[:, m:], table[m:], table,
+            slot_pos_row, pos_row, jnp.int32(i))
+        s = int(req.prompt.size)
+        if self._share_ok(s):
+            for m2 in range(1, self._m_max(s) + 1):
+                self.pool.cache_insert(
+                    req.prompt[:m2 * self._blk].tobytes(),
+                    req._blocks[:m2])
 
     # -- prefill scheduling ---------------------------------------------------
 
@@ -235,7 +547,13 @@ class Server:
             if self.cfg.frontend:
                 args += (jnp.asarray(req.frontend_embeds[None, :]),)
             cache1, logits = self._bulk_fn(s)(*args)
-            self.cache = self.writer.fn(self.cache, cache1, jnp.int32(i))
+            if self._paged:
+                self._install_paged(i, req,
+                                    cache_to_blocks(self.cfg, cache1,
+                                                    self._blk))
+            else:
+                self.cache = self.writer.fn(self.cache, cache1,
+                                            jnp.int32(i))
             self._emit_first_token(i, req, logits)
             return
 
@@ -247,17 +565,52 @@ class Server:
         req._cursor += 1
         if req._cursor < len(cuts):
             return                          # more chunks; decode proceeds
-        cache1 = self._finish_fn(s)(req._scratch)
-        req._scratch = None
-        self.cache = self.writer.fn(self.cache, cache1, jnp.int32(i))
+        if self._paged:
+            blocks = self._blocks_fn(s)(req._scratch)
+            req._scratch = None
+            self._install_paged(i, req, blocks)
+        else:
+            cache1 = self._finish_fn(s)(req._scratch)
+            req._scratch = None
+            self.cache = self.writer.fn(self.cache, cache1, jnp.int32(i))
         self._emit_first_token(i, req, logits)
 
     def _retire(self, i: int, req: Request,
                 now: Optional[float] = None):
+        """The one retire path — finished, EOS, cancel, or timeout, at any
+        phase.  Reclaims the unfinished admission scratch (a mid-prefill
+        retire used to leak it), drops the slot's pool-block refs, and
+        parks the row's block table so dead decode writes land in the
+        slot's private parking block."""
         req.finished = time.perf_counter() if now is None else now
         req.phase = "done"
+        req._scratch = None
+        if self._paged and req._blocks:
+            self.pool.release(req._blocks)
+            req._blocks = []
+            req._shared = 0
+            self.cache = self._park_fn(self.cache, jnp.int32(i))
         self.done.append(req)
         self.slots[i] = None
+
+    def cancel(self, rid: int) -> bool:
+        """Abort a request wherever it is: queued → dropped; mid-prefill or
+        decoding → retired through :meth:`_retire` (scratch and pool blocks
+        reclaimed).  Returns whether the request was found in flight."""
+        for q, req in enumerate(self.queue):
+            if req.rid == rid:
+                req.cancelled = True
+                self.queue.pop(q)
+                req.finished = time.perf_counter()
+                req.phase = "done"
+                self.done.append(req)
+                return True
+        for i, req in enumerate(self.slots):
+            if req is not None and req.rid == rid:
+                req.cancelled = True
+                self._retire(i, req)
+                return True
+        return False
 
     # -- decode loop ----------------------------------------------------------
 
@@ -302,7 +655,7 @@ class Server:
         toks = sum(len(r.out_tokens) for r in self.done)
         wall = (max(r.finished for r in self.done)
                 - min(r.submitted for r in self.done)) if self.done else 0.0
-        return {
+        out = {
             "requests": len(self.done),
             "tokens": toks,
             "throughput_tok_s": toks / wall if wall else 0.0,
@@ -310,6 +663,14 @@ class Server:
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
             "mean_itl_s": float(np.mean(itl)) if itl else 0.0,
         }
+        if self._paged:
+            out.update({
+                "prefix_hits": float(self.prefix_hits),
+                "prefix_misses": float(self.prefix_misses),
+                "pool_evictions": float(self.pool.evictions),
+                "pool_free_blocks": float(self.pool.free_blocks),
+            })
+        return out
 
 
 def drive_arrivals(server: Server, prompts, every: int,

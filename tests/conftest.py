@@ -17,8 +17,9 @@ def _install_hypothesis_fallback():
     library is absent (the pinned container has no network; CI installs the
     real one via `pip install -e .[test]`).  Supports exactly the subset the
     suite uses: @given(**kwargs) + @settings(max_examples, deadline) with
-    st.integers / st.sampled_from.  Draws are deterministic: the bounds
-    first, then seeded pseudo-random interior points.
+    st.integers / st.sampled_from / st.tuples / st.lists.  Draws are
+    deterministic: the bounds first, then seeded pseudo-random interior
+    points (lists draw the empty boundary first, then seeded contents).
     """
     try:
         import hypothesis  # noqa: F401
@@ -49,6 +50,27 @@ def _install_hypothesis_fallback():
             if i < len(self.elems):
                 return self.elems[i]
             return rng.choice(self.elems)
+
+    class _Tuples:
+        def __init__(self, *elems):
+            self.elems = elems
+
+        def draw(self, i, rng):
+            return tuple(s.draw(i, rng) for s in self.elems)
+
+    class _Lists:
+        def __init__(self, elements, min_size=0, max_size=10):
+            self.elements = elements
+            self.min_size, self.max_size = min_size, max_size
+
+        def draw(self, i, rng):
+            if i == 0:
+                n = self.min_size
+            else:
+                n = rng.randint(self.min_size, self.max_size)
+            # force every element onto the seeded-random interior path
+            # (a boundary index would repeat one element n times)
+            return [self.elements.draw(1 << 20, rng) for _ in range(n)]
 
     def settings(max_examples=None, deadline=None, **_kw):
         def deco(fn):
@@ -82,6 +104,8 @@ def _install_hypothesis_fallback():
     st_mod = types.ModuleType("hypothesis.strategies")
     st_mod.integers = _Integers
     st_mod.sampled_from = _SampledFrom
+    st_mod.tuples = _Tuples
+    st_mod.lists = _Lists
     hyp = types.ModuleType("hypothesis")
     hyp.given = given
     hyp.settings = settings

@@ -26,9 +26,17 @@ from repro.dist.steps import (
     build_serve_step,
     build_slot_write_step,
 )
-from repro.models.decode import decode_step, init_cache, kv_buf_len
+from repro.models.decode import (
+    decode_step,
+    init_cache,
+    init_paged_cache,
+    kv_buf_len,
+    paged_slot_blocks,
+    supports_paged,
+)
 from repro.models.model import init_params
 from repro.models.prefill import (
+    cache_to_blocks,
     init_prefill_scratch,
     prefill,
     prefill_chunk,
@@ -37,6 +45,7 @@ from repro.models.prefill import (
     scratch_to_cache,
     supports_chunked_prefill,
 )
+from repro.runtime.server import BlockPool, Server, ServerConfig
 
 
 def _setup(name, **overrides):
@@ -425,3 +434,322 @@ class TestRingBufferProperties:
         valid = np.asarray(_valid_slots(slot_pos, pos, w)[0])
         # pos-w = 6 masked (> is strict), 7..10 visible, empty masked
         assert valid.tolist() == [False, True, True, True, True, False]
+
+
+def _install_contiguous(cache, slot_cache, i):
+    """Write a batch-1 ring cache into row ``i`` of a batched cache."""
+    out = dict(cache)
+    for k in ("k", "v"):
+        out[k] = cache[k].at[:, i].set(slot_cache[k][:, 0])
+    out["slot_pos"] = cache["slot_pos"].at[i].set(slot_cache["slot_pos"][0])
+    out["pos"] = cache["pos"].at[i].set(slot_cache["pos"][0])
+    return out
+
+
+def _install_paged(cache, blocks, i, dst):
+    """Deposit a slot's blocks at pool ids ``dst`` and map row ``i``."""
+    bk, bv, slot_pos_row, pos_row = blocks
+    out = dict(cache)
+    dst = jnp.asarray(dst, jnp.int32)
+    out["kp"] = cache["kp"].at[:, dst].set(bk)
+    out["vp"] = cache["vp"].at[:, dst].set(bv)
+    out["block_ids"] = cache["block_ids"].at[i].set(dst)
+    out["slot_pos"] = cache["slot_pos"].at[i].set(slot_pos_row)
+    out["pos"] = cache["pos"].at[i].set(pos_row)
+    return out
+
+
+class TestPagedDecode:
+    """Paged decode ≡ contiguous decode, bitwise on every active row.
+
+    The gather of the block table reconstructs *exactly* the contiguous
+    ring layout (``block_size`` divides ``kv_buf_len``), so active-row
+    logits must be bit-equal — across block sizes, SWA ring wraparound,
+    and shared-prefix block aliasing.  Idle rows park on a private
+    reserved block and are excluded: their garbage internals diverge by
+    design and their outputs are never read.
+    """
+
+    def _decode_pair(self, cfg, params, cont, paged, rows, steps=6):
+        """Decode both caches in lockstep; assert bitwise equality on
+        ``rows`` each step and feed the (identical) argmax back in."""
+        batch = cont["pos"].shape[0]
+        toks = jnp.zeros((batch,), jnp.int32)
+        for t in range(steps):
+            cont, la = decode_step(cfg, params, cont, toks)
+            paged, lb = decode_step(cfg, params, paged, toks)
+            for r in rows:
+                np.testing.assert_array_equal(
+                    np.asarray(la[r]), np.asarray(lb[r]),
+                    err_msg=f"row {r} step {t}")
+            np.testing.assert_array_equal(
+                np.asarray(cont["slot_pos"])[list(rows)],
+                np.asarray(paged["slot_pos"])[list(rows)])
+            nxt = np.zeros((batch,), np.int32)
+            for r in rows:
+                nxt[r] = int(jnp.argmax(la[r]))
+            toks = jnp.asarray(nxt)
+        return cont, paged
+
+    @pytest.mark.parametrize("blk", [2, 8])
+    def test_bit_identical_across_block_sizes(self, blk):
+        cfg, params = _setup("smollm-360m")
+        assert supports_paged(cfg)
+        max_seq = 16
+        npb = paged_slot_blocks(cfg, max_seq, blk)
+        slot_cache, _ = prefill(cfg, params, _tokens(cfg, 1, 7, key=7),
+                                cache_len=max_seq)
+        cont = _install_contiguous(init_cache(cfg, 2, max_seq),
+                                   slot_cache, 1)
+        paged = _install_paged(
+            init_paged_cache(cfg, 2, max_seq, blk, 2 + npb),
+            cache_to_blocks(cfg, slot_cache, blk), 1,
+            list(range(2, 2 + npb)))
+        self._decode_pair(cfg, params, cont, paged, rows=(1,))
+
+    @pytest.mark.parametrize("blk", [2, 4])
+    def test_windowed_ring_wraparound(self, blk):
+        """Decode past the SWA ring extent: the write slot wraps back to
+        block 0 of the slot's table and stays bit-identical."""
+        cfg, params = _setup("h2o-danube-1.8b")
+        sb = kv_buf_len(cfg, 24)
+        npb = paged_slot_blocks(cfg, 24, blk)
+        slot_cache, _ = prefill(cfg, params, _tokens(cfg, 1, 6, key=8),
+                                cache_len=24)
+        cont = _install_contiguous(init_cache(cfg, 2, 24), slot_cache, 1)
+        paged = _install_paged(
+            init_paged_cache(cfg, 2, 24, blk, 2 + npb),
+            cache_to_blocks(cfg, slot_cache, blk), 1,
+            list(range(2, 2 + npb)))
+        cont, paged = self._decode_pair(cfg, params, cont, paged,
+                                        rows=(1,), steps=sb)
+        assert int(cont["pos"][1]) > sb      # the ring actually wrapped
+
+    def test_shared_prefix_aliasing(self):
+        """Two rows whose tables alias the same (read-only) prefix block
+        but own private tails decode bit-identically to two full
+        contiguous copies — the COW invariant of the prefix cache."""
+        cfg, params = _setup("smollm-360m")
+        blk, max_seq = 4, 16
+        npb = paged_slot_blocks(cfg, max_seq, blk)
+        slot_cache, _ = prefill(cfg, params, _tokens(cfg, 1, 6, key=9),
+                                cache_len=max_seq)
+        blocks = cache_to_blocks(cfg, slot_cache, blk)
+        cont = init_cache(cfg, 3, max_seq)
+        cont = _install_contiguous(cont, slot_cache, 1)
+        cont = _install_contiguous(cont, slot_cache, 2)
+        # block 3 holds positions [0, 4): shared; tails 4.. are private
+        paged = init_paged_cache(cfg, 3, max_seq, blk, 3 + 2 * npb - 1)
+        paged = _install_paged(paged, blocks, 1,
+                               [3] + list(range(4, 3 + npb)))
+        paged = _install_paged(paged, blocks, 2,
+                               [3] + list(range(3 + npb, 2 + 2 * npb)))
+        # feed *different* tokens per row so the rows diverge while the
+        # shared block keeps being read by both
+        toks = jnp.zeros((3,), jnp.int32)
+        for t in range(5):
+            cont, la = decode_step(cfg, params, cont, toks)
+            paged, lb = decode_step(cfg, params, paged, toks)
+            np.testing.assert_array_equal(np.asarray(la[1:]),
+                                          np.asarray(lb[1:]),
+                                          err_msg=f"step {t}")
+            nxt = np.zeros((3,), np.int32)
+            nxt[1] = int(jnp.argmax(la[1]))
+            nxt[2] = int(jnp.argmin(la[2])) % cfg.vocab_size
+            toks = jnp.asarray(nxt)
+        # the shared prefix block was never written by either row
+        np.testing.assert_array_equal(np.asarray(paged["kp"][:, 3]),
+                                      np.asarray(blocks[0][:, 0]))
+
+
+class TestBlockPool:
+    """Host-side pool allocator: no double-free, no aliasing, and
+    free + live == n_blocks − reserved under arbitrary op sequences."""
+
+    def test_double_free_raises(self):
+        pool = BlockPool(8, reserved=2)
+        bids = pool.alloc(3)
+        pool.release(bids)
+        with pytest.raises(ValueError):
+            pool.release(bids)
+        pool.check_conservation()
+
+    def test_alloc_never_returns_reserved_or_live(self):
+        pool = BlockPool(10, reserved=3)
+        a = pool.alloc(4)
+        b = pool.alloc(3)
+        assert not set(a) & set(b)
+        assert all(bid >= 3 for bid in a + b)
+        with pytest.raises(MemoryError):
+            pool.alloc(1)           # 7 usable, 7 live
+        pool.check_conservation()
+
+    def test_eviction_under_pressure(self):
+        """Allocation pressure evicts LRU cache entries (entry refs
+        only — request-held blocks always survive) before failing."""
+        pool = BlockPool(10, reserved=2)
+        a = pool.alloc(4)
+        pool.cache_insert(b"p1", a[:2])
+        pool.release(a)             # entry still pins a[:2]
+        assert pool.free_blocks == 6 and pool.cached_entries == 1
+        held = pool.alloc(2)        # no pressure: entry survives
+        assert pool.cached_entries == 1
+        big = pool.alloc(6)         # needs the pinned pair -> evict
+        assert pool.evictions == 1 and pool.cached_entries == 0
+        assert len(big) == 6 and not set(big) & set(held)
+        pool.check_conservation()
+        with pytest.raises(MemoryError):
+            pool.alloc(1)           # held blocks were NOT reclaimed
+        pool.release(held + big)
+        pool.check_conservation()
+
+    def test_lookup_retains_and_refreshes_lru(self):
+        pool = BlockPool(12, reserved=0)
+        a, b = pool.alloc(2), pool.alloc(2)
+        pool.cache_insert(b"a", a)
+        pool.cache_insert(b"b", b)
+        pool.release(a)
+        pool.release(b)
+        got = pool.cache_lookup(b"a")       # refreshes "a"; caller ref
+        assert got == a
+        pool.alloc(10)                      # pressure evicts "b" first
+        assert pool.cache_lookup(b"b") is None
+        assert pool.cache_lookup(b"a") == a     # still resident (held)
+        pool.check_conservation()
+
+    @settings(max_examples=25, deadline=None)
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["alloc", "release", "insert", "lookup"]),
+                  st.integers(0, 7)), max_size=40))
+    def test_random_op_sequences_conserve(self, ops):
+        pool = BlockPool(16, reserved=3)
+        held = []                   # groups we hold a ref on
+        keys = []
+        for step, (op, k) in enumerate(ops):
+            if op == "alloc":
+                try:
+                    bids = pool.alloc(k % 5 + 1)
+                except MemoryError:
+                    pool.check_conservation()
+                    continue
+                # freshly allocated blocks alias nothing we hold
+                flat = {b for grp in held for b in grp}
+                assert not set(bids) & flat
+                assert all(b >= 3 for b in bids)
+                held.append(bids)
+            elif op == "release" and held:
+                pool.release(held.pop(k % len(held)))
+            elif op == "insert" and held:
+                key = f"k{step}".encode()
+                pool.cache_insert(key, held[k % len(held)])
+                keys.append(key)
+            elif op == "lookup" and keys:
+                got = pool.cache_lookup(keys[k % len(keys)])
+                if got is not None:
+                    held.append(got)    # lookup retains for the caller
+            pool.check_conservation()
+        for grp in held:
+            pool.release(grp)
+        pool.check_conservation()
+
+
+class TestPagedServer:
+    """End-to-end: the paged scheduler is token-identical to the
+    contiguous one, prefix hits fire on shared prompts, and retire
+    reclaims blocks at every phase (the mid-prefill cancel bugfix)."""
+
+    def _params(self, mesh):
+        from repro.dist.sharding import param_pspecs, to_shardings
+        cfg = get_config("smollm-360m").reduced()
+        shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                               jax.random.PRNGKey(0))
+        psh = to_shardings(mesh, param_pspecs(cfg, mesh, shape))
+        params = jax.jit(lambda k: init_params(cfg, k),
+                         out_shardings=psh)(jax.random.PRNGKey(0))
+        return cfg, params
+
+    def _server(self, cfg, params, mesh, paged, **kw):
+        srv = dict(max_batch=2, max_seq=32, max_new_tokens=4,
+                   prefill_chunk=4)
+        srv.update(kw)
+        return Server(cfg, params, mesh, srv=ServerConfig(
+            paged=paged, block_size=4, **srv))
+
+    def _prompts(self, cfg, n=5, shared=8, tail=4):
+        rng = np.random.default_rng(2)
+        prefix = rng.integers(0, cfg.vocab_size, size=shared)
+        return [np.concatenate([prefix,
+                                rng.integers(0, cfg.vocab_size, size=tail)])
+                for _ in range(n)]
+
+    def test_paged_tokens_equal_contiguous_with_prefix_hits(self, mesh22):
+        cfg, params = self._params(mesh22)
+        outs = {}
+        servers = {}
+        for paged in (False, True):
+            s = self._server(cfg, params, mesh22, paged)
+            for pr in self._prompts(cfg):
+                s.submit(pr)
+            s.run()
+            outs[paged] = {r.rid: r.out_tokens for r in s.done}
+            servers[paged] = s
+        assert outs[True] == outs[False]
+        assert servers[True].prefix_hits > 0
+        servers[True].pool.check_conservation()
+        st_ = servers[True].stats()
+        assert st_["prefix_hits"] == servers[True].prefix_hits
+        assert st_["pool_free_blocks"] == servers[True].pool.free_blocks
+
+    def test_prefix_cache_off_still_identical(self, mesh22):
+        cfg, params = self._params(mesh22)
+        ref = self._server(cfg, params, mesh22, False)
+        s = self._server(cfg, params, mesh22, True, prefix_cache=False)
+        for pr in self._prompts(cfg, n=3):
+            ref.submit(pr)
+            s.submit(pr)
+        ref.run()
+        s.run()
+        assert ({r.rid: r.out_tokens for r in s.done}
+                == {r.rid: r.out_tokens for r in ref.done})
+        assert s.prefix_hits == 0
+        s.pool.check_conservation()
+
+    def test_cancel_mid_prefill_reclaims_blocks(self, mesh22):
+        """Regression: a cancel while phase == 'prefill' must release the
+        admission scratch *and* the slot's pool blocks, and the slot must
+        be reusable afterwards."""
+        cfg, params = self._params(mesh22)
+        s = self._server(cfg, params, mesh22, True, max_batch=1,
+                         max_new_tokens=2)
+        rng = np.random.default_rng(3)
+        rid = s.submit(rng.integers(0, cfg.vocab_size, size=12))
+        s.step()                      # admit + first prefill chunk only
+        req = s.slots[0]
+        assert req is not None and req.phase == "prefill"
+        assert req._scratch is not None and req._blocks
+        free_before_cancel = s.pool.free_blocks
+        assert s.cancel(rid)
+        assert req._scratch is None and req._blocks == []
+        assert s.slots[0] is None
+        assert s.pool.free_blocks > free_before_cancel
+        s.pool.check_conservation()
+        full = s.pool.free_blocks
+        # the parked slot admits and completes a fresh request
+        rid2 = s.submit(rng.integers(0, cfg.vocab_size, size=6))
+        s.run()
+        done = {r.rid: r for r in s.done}
+        assert done[rid].cancelled and done[rid].out_tokens == []
+        assert len(done[rid2].out_tokens) == 2
+        # entries published by rid2's prompt may pin blocks; evict them
+        while s.pool.cached_entries:
+            s.pool._evict_lru()
+        assert s.pool.free_blocks == full
+        s.pool.check_conservation()
+
+    def test_cancel_queued_and_unknown(self, mesh22):
+        cfg, params = self._params(mesh22)
+        s = self._server(cfg, params, mesh22, True)
+        rid = s.submit(np.asarray([1, 2, 3], np.int32))
+        assert s.cancel(rid)          # still queued: dropped without slot
+        assert not s.cancel(rid)      # already gone
+        assert s.done[0].cancelled and s.done[0].out_tokens == []

@@ -89,6 +89,29 @@ def check_serve(path: str) -> int:
 
     claim = payload.get("claims", {}).get("ttft_max_speedup_qsfp")
     print(f"bench_gate: best qsfp TTFT speedup: {claim}")
+
+    # paged prefix-cache rows (PR 6): a hit must never model slower than
+    # the cold admission it replaces, at any swept hit depth
+    prefix = [r for r in payload.get("rows", [])
+              if r.get("suite") == "paged_prefix"]
+    if not prefix:
+        print(f"bench_gate: no paged_prefix rows in {path}")
+        return 1
+    points = {}
+    for r in prefix:
+        points.setdefault((r["arch"], r["prompt_len"], r["hit_frac"]),
+                          []).append(r)
+    for (arch, s, hf), rs in sorted(points.items()):
+        best = max(rs, key=lambda r: r["speedup"])
+        status = "ok" if best["speedup"] >= FLOOR else "FAIL"
+        print(f"bench_gate: {arch} @ {s} prompt, {hf:.0%} hit: TTFT "
+              f"{best['speedup']:.2f}x on {best['link']} "
+              f"({best['n_shared_blocks']} shared blocks) [{status}]")
+        if best["speedup"] < FLOOR:
+            failures.append((arch, s, hf, best["speedup"]))
+    hit_claim = payload.get("claims", {}).get("prefix_hit_max_speedup_qsfp")
+    print(f"bench_gate: best qsfp prefix-hit speedup: {hit_claim}")
+
     if failures:
         print(f"bench_gate: {len(failures)} serve operating point(s) "
               f"below {FLOOR}x: {failures}")

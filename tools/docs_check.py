@@ -13,6 +13,12 @@ Two checks, both exit-code gated (CI's docs job runs this file):
    AST mirror of ruff's D100–D103, so the gate also runs where ruff is
    not installed; CI additionally runs the real ruff D-subset).
 
+3. **API symbols** — every name exported via ``__all__`` from
+   ``repro.dist`` and ``repro.runtime`` must appear in ``docs/api.md``.
+   The ``__all__`` lists are read with ``ast`` (no import — the CI docs
+   job has no jax), so adding a public symbol without documenting it
+   fails the docs job, not just review.
+
 Run:  python tools/docs_check.py
 """
 
@@ -27,6 +33,9 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 LINK_FILES = ["DESIGN.md", "ROADMAP.md", "examples/README.md"]
 DOCSTRING_ROOTS = ["src/repro/core", "src/repro/dist"]
+API_EXPORT_MODULES = ["src/repro/dist/__init__.py",
+                      "src/repro/runtime/__init__.py"]
+API_DOC = "docs/api.md"
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 _HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
@@ -113,14 +122,47 @@ def check_docstrings() -> list:
     return errors
 
 
+def _module_all(path: str) -> list:
+    """Read ``__all__`` from a module via ast (no import, no jax)."""
+    with open(path, encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            for tgt in node.targets:
+                if isinstance(tgt, ast.Name) and tgt.id == "__all__":
+                    return list(ast.literal_eval(node.value))
+    return []
+
+
+def check_api_symbols() -> list:
+    """Every ``__all__`` export of dist/runtime must appear in api.md."""
+    doc_path = os.path.join(REPO, API_DOC)
+    if not os.path.exists(doc_path):
+        return [f"{API_DOC}: missing (API symbol gate has no target)"]
+    with open(doc_path, encoding="utf-8") as f:
+        text = f.read()
+    errors = []
+    for rel in API_EXPORT_MODULES:
+        path = os.path.join(REPO, rel)
+        names = _module_all(path)
+        if not names:
+            errors.append(f"{rel}: no __all__ found")
+            continue
+        for name in names:
+            if not re.search(rf"\b{re.escape(name)}\b", text):
+                errors.append(f"{API_DOC}: public symbol {name} "
+                              f"(from {rel}) is undocumented")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_docstrings()
+    errors = check_links() + check_docstrings() + check_api_symbols()
     for e in errors:
         print(f"docs-check: {e}")
     if errors:
         print(f"docs-check: {len(errors)} problem(s)")
         return 1
-    print("docs-check: links + docstrings OK")
+    print("docs-check: links + docstrings + API symbols OK")
     return 0
 
 
