@@ -106,20 +106,23 @@ def baseline_layer(d: LayerDims, mesh, tp="model"):
 
 
 def art_layer(d: LayerDims, mesh, tp="model"):
-    """Full-manual: core.overlap rings for every TP collective."""
-    from repro.core.collectives import ring_all_gather
+    """Full-manual: core.overlap rings for every TP collective, all bound
+    to one ``Conduit`` handle (the ``TransportPolicy.tp`` spelling)."""
+    from repro.core.conduit import Conduit
     from repro.core.overlap import allgather_matmul, matmul_reducescatter
     cd = jnp.bfloat16
     tp_n = mesh.shape[tp]
     hq_loc = d.n_heads // tp_n
+    conduit = Conduit(axis=tp, transport="bidir")
 
     def layer(x, w):
         def per_b(xb, w):
-            q = allgather_matmul(xb, w["wq"].astype(cd), axis=tp)  # (S, nq)
-            k = ring_all_gather(
-                jnp.einsum("sd,dh->sh", xb, w["wk"].astype(cd)), axis=tp)
-            v = ring_all_gather(
-                jnp.einsum("sd,dh->sh", xb, w["wv"].astype(cd)), axis=tp)
+            q = allgather_matmul(xb, w["wq"].astype(cd),
+                                 conduit=conduit)  # (S, nq)
+            k = conduit.all_gather(
+                jnp.einsum("sd,dh->sh", xb, w["wk"].astype(cd)))
+            v = conduit.all_gather(
+                jnp.einsum("sd,dh->sh", xb, w["wv"].astype(cd)))
             o = _attention(q[None].astype(cd), k[None].astype(cd),
                            v[None].astype(cd),
                            hq_loc, max(1, d.n_kv // tp_n) if d.n_kv >= tp_n
@@ -128,10 +131,12 @@ def art_layer(d: LayerDims, mesh, tp="model"):
             if d.n_kv < tp_n:
                 pass  # _attention above already repeated kv to hq_loc
             h = xb + matmul_reducescatter(
-                o.astype(cd), w["wo"].astype(cd), axis=tp).astype(cd)
-            up = _relu2(allgather_matmul(h, w["w_up"].astype(cd), axis=tp))
+                o.astype(cd), w["wo"].astype(cd), conduit=conduit).astype(cd)
+            up = _relu2(allgather_matmul(h, w["w_up"].astype(cd),
+                                         conduit=conduit))
             h = h + matmul_reducescatter(
-                up.astype(cd), w["w_down"].astype(cd), axis=tp).astype(cd)
+                up.astype(cd), w["w_down"].astype(cd),
+                conduit=conduit).astype(cd)
             return h
         return jax.vmap(lambda xb: per_b(xb, w))(x)
 

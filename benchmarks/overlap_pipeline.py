@@ -28,10 +28,23 @@ small-message constants and crossovers alongside the modeled ones.
 Writes ``BENCH_overlap.json`` at the repo root; ``tools/bench_gate.py``
 gates CI on its preset rows.  ``--model-only`` skips the measured section.
 
+A third modeled section prices the **fused collective matmuls** (PR 7,
+``kernels/cc_matmul``): per TP preset operating point (tokens/rank ×
+edge op × link), the best XLA-level streamed schedule
+(``core/overlap.py`` — n sub-matmuls each paying the per-hop
+launch/repack boundary) against the in-kernel fused schedule (the same
+pipeline with the boundary paid once and the hop wire issued by the
+kernel's own DMA, ``conduit.matmul_edge_estimate``).  The measured
+section times both schedules on the CPU mesh and asserts bit-identity;
+``tools/fit_netmodel.py`` fits the per-hop overhead the fusion removes
+from those walls.
+
 Internal assertions (a failed claim is a failed run):
   * every EP preset operating point shows streamed-vs-bulk speedup > 1.2×
     on at least one link model (the acceptance bar);
-  * every measured streamed schedule is bit-identical to its bulk
+  * every TP preset operating point shows fused-vs-streamed speedup
+    > 1.0× on its best link (strictly — the fusion only removes cost);
+  * every measured streamed/fused schedule is bit-identical to its bulk
     counterpart.
 """
 
@@ -49,6 +62,7 @@ TRANSPORT_PATH = os.path.join(REPO_ROOT, "BENCH_transport.json")
 MOE_PATH = os.path.join(REPO_ROOT, "BENCH_moe.json")
 
 EP_TOKENS = (512, 4096, 32768)
+TP_TOKENS = (256, 1024, 4096)            # sequence tokens per TP rank
 TRANSPORTS = ("xla", "ring", "bidir")
 
 #: TPU v5e peak bf16 (the ICI link's compute side).
@@ -127,6 +141,60 @@ def model_ep_rows():
     return rows
 
 
+def _tp_edges(cfg, n: int, tokens: int):
+    """The two dense-block TP edges a preset runs per layer, as
+    (op, global payload bytes, matmul flops) — the inputs
+    ``conduit.matmul_edge_estimate`` prices a schedule family on.
+
+    Up/QKV edge: local (t, D) activations all_gathered under the
+    column-parallel matmul; down/O edge: the row-parallel matmul's
+    (t·n, D) partials reduce_scattered.  Both move the same bytes and
+    compute the same flops — they differ only in which side of the
+    matmul the ring feeds."""
+    d, f = cfg.d_model, cfg.d_ff
+    bytes_ = tokens * n * d * 2                       # bf16 activations
+    flops = 2.0 * tokens * d * f                      # per-rank sub-matmuls
+    return (("all_gather", bytes_, flops), ("reduce_scatter", bytes_, flops))
+
+
+def model_fused_rows():
+    from repro.configs import TP_PRESETS
+    from repro.core import conduit
+    from repro.core import netmodel as nm
+
+    rows = []
+    for name, preset in TP_PRESETS.items():
+        cfg = preset.config
+        n = preset.tp_axis
+        for tokens in TP_TOKENS:
+            for op, size, flops in _tp_edges(cfg, n, tokens):
+                for link_name, link in (("qsfp", nm.FSHMEM_QSFP),
+                                        ("ici", nm.TPU_ICI)):
+                    if link_name == "ici":
+                        tc = flops / TPU_V5E_FLOPS
+                    else:
+                        tc = size / link.peak_bandwidth   # paper's DLA:
+                        #                                   link-rate compute
+                    est = {t: conduit.matmul_edge_estimate(
+                        op, t, size_bytes=size, axis_size=n,
+                        compute_time=tc, link=link)
+                        for t in ("xla", "ring", "bidir", "fused")}
+                    stream_t = min(("ring", "bidir"), key=est.get)
+                    rows.append({
+                        "source": "tp-preset-model", "suite": "fused_tp",
+                        "preset": name, "arch": cfg.name, "op": op,
+                        "link": link_name, "tokens_per_rank": tokens,
+                        "bytes": size, "axis_size": n,
+                        "compute_us": 1e6 * tc,
+                        "bulk_us": 1e6 * est["xla"],
+                        "streamed_us": 1e6 * est[stream_t],
+                        "fused_us": 1e6 * est["fused"],
+                        "streamed_transport": stream_t,
+                        "speedup": est[stream_t] / est["fused"],
+                    })
+    return rows
+
+
 def model_sync_rows():
     from repro.core import conduit
     from repro.core import netmodel as nm
@@ -178,6 +246,21 @@ def claims_from(rows) -> dict:
     assert worst is not None and worst > 1.2, (
         f"streamed EP must model > 1.2x on some link at every preset "
         f"operating point (worst best-link speedup: {worst})")
+
+    fused = [r for r in rows if r["source"] == "tp-preset-model"]
+    worst_f, worst_q = None, None
+    for key in {(r["preset"], r["tokens_per_rank"], r["op"]) for r in fused}:
+        pts = [r for r in fused
+               if (r["preset"], r["tokens_per_rank"], r["op"]) == key]
+        best = max(r["speedup"] for r in pts)
+        qsfp = max(r["speedup"] for r in pts if r["link"] == "qsfp")
+        worst_f = best if worst_f is None else min(worst_f, best)
+        worst_q = qsfp if worst_q is None else min(worst_q, qsfp)
+    claims["fused_min_speedup_best_link"] = worst_f
+    claims["fused_min_speedup_qsfp"] = worst_q
+    assert worst_f is not None and worst_f > 1.0, (
+        f"fused must model strictly faster than the streamed schedule at "
+        f"every TP preset operating point (worst best-link: {worst_f})")
 
     sync = [r for r in rows if r["source"] == "sync-model"]
     for link in ("qsfp", "ici"):
@@ -235,6 +318,70 @@ def measured_ep_rows(n_iters: int = 5):
     return rows
 
 
+def measured_fused_rows(n_iters: int = 5):
+    """Wall-clocks of the real fused-vs-streamed TP edges on the CPU mesh
+    (functional only — the fitted per-hop overhead, not link perf), with
+    bit-identity between the two schedules asserted."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.core.conduit import Conduit
+    from repro.core.overlap import allgather_matmul, matmul_reducescatter
+    from repro.kernels.cc_matmul import (
+        allgather_matmul_pallas, matmul_reducescatter_pallas)
+
+    n = min(4, len(jax.devices()))
+    if n < 2:
+        return []
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n]), ("model",))
+    conduit = Conduit(axis="model", transport="bidir")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(3), 3)
+    b_loc, k, m = 64, 128, 128
+    x_ag = jax.random.normal(k1, (n * b_loc, k), jnp.float32)
+    w_ag = jax.random.normal(k2, (k, m), jnp.float32) * 0.05
+    x_rs = jax.random.normal(k3, (n * (n * b_loc), m), jnp.float32)
+    w_rs = jnp.asarray(np.asarray(w_ag).T)
+
+    cases = [
+        ("all_gather", x_ag, w_ag,
+         functools.partial(allgather_matmul, conduit=conduit),
+         functools.partial(allgather_matmul_pallas, axis="model",
+                           bidirectional=True),
+         P("model", None), P(None, None)),
+        ("reduce_scatter", x_rs, w_rs,
+         functools.partial(matmul_reducescatter, conduit=conduit),
+         functools.partial(matmul_reducescatter_pallas, axis="model",
+                           bidirectional=True),
+         P("model", None), P("model", None)),
+    ]
+    rows = []
+    for op, x, w, streamed_fn, fused_fn, in_spec, out_spec in cases:
+        ref = None
+        for schedule, fn in (("streamed", streamed_fn), ("fused", fused_fn)):
+            run = jax.jit(jax.shard_map(
+                fn, mesh=mesh, in_specs=(in_spec, P(None, None)),
+                out_specs=out_spec, check_vma=False))
+            out = np.asarray(run(x, w))
+            if ref is None:
+                ref = out
+            else:
+                np.testing.assert_array_equal(
+                    out, ref, err_msg=f"fused {op} != streamed")
+            t0 = time.perf_counter()
+            for _ in range(n_iters):
+                jax.block_until_ready(run(x, w))
+            dt = (time.perf_counter() - t0) / n_iters
+            rows.append({
+                "source": "measured-cpu-mesh", "suite": "fused_tp",
+                "op": op, "schedule": schedule, "axis_size": n,
+                "bytes": int(x.size * 4), "wall_us": 1e6 * dt,
+            })
+    return rows
+
+
 def measured_sync_rows(n_iters: int = 5):
     import functools
 
@@ -279,28 +426,37 @@ def measured_sync_rows(n_iters: int = 5):
     return rows
 
 
-def netmodel_fit_section() -> dict:
-    """Fitted small-message constants + crossovers (tools/fit_netmodel.py),
-    when the transport sweep artifact carries measured rows."""
+def _fit_netmodel_module():
     spec = importlib.util.spec_from_file_location(
         "fit_netmodel", os.path.join(REPO_ROOT, "tools", "fit_netmodel.py"))
     mod = importlib.util.module_from_spec(spec)
     spec.loader.exec_module(mod)
-    return mod.fit_report(TRANSPORT_PATH, MOE_PATH)
+    return mod
+
+
+def netmodel_fit_section() -> dict:
+    """Fitted small-message constants + crossovers (tools/fit_netmodel.py),
+    when the transport sweep artifact carries measured rows."""
+    return _fit_netmodel_module().fit_report(TRANSPORT_PATH, MOE_PATH)
 
 
 def main(model_only: bool = False) -> dict:
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
-    rows = model_ep_rows() + model_sync_rows()
+    rows = model_ep_rows() + model_fused_rows() + model_sync_rows()
     claims = claims_from(rows)
     if not model_only:
         rows += measured_ep_rows()
+        rows += measured_fused_rows()
         rows += measured_sync_rows()
+    fit = netmodel_fit_section()
+    # per-hop launch overhead, fitted from this run's own measured
+    # fused-vs-streamed walls (the quantity the fusion removes)
+    fit["hop_overhead"] = _fit_netmodel_module().fit_hop_overhead(rows)
     payload = {
         "suite": "overlap_pipeline",
         "claims": claims,
-        "netmodel_fit": netmodel_fit_section(),
+        "netmodel_fit": fit,
         "n_rows": len(rows),
         "rows": rows,
     }

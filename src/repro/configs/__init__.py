@@ -42,7 +42,11 @@ from repro.configs.presets import (  # noqa: E402
     EP_PRESET_NAMES,
     EP_PRESETS,
     EPPreset,
+    TP_PRESET_NAMES,
+    TP_PRESETS,
+    TPPreset,
     get_ep_preset,
+    get_tp_preset,
 )
 
 
@@ -50,4 +54,5 @@ __all__ = [
     "ARCH_NAMES", "SHAPES", "ModelConfig", "ShapeCell",
     "cell_applicable", "get_config", "shape_cell",
     "EPPreset", "EP_PRESETS", "EP_PRESET_NAMES", "get_ep_preset",
+    "TPPreset", "TP_PRESETS", "TP_PRESET_NAMES", "get_tp_preset",
 ]

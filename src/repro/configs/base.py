@@ -55,6 +55,9 @@ class ModelConfig:
     ssm_conv: int = 4
     ssm_expand: int = 2
     ssm_chunk: int = 128
+    ssm_stream_segments: int = 0    # >1: chunk-fed SSD scan (segments streamed
+                                    # into the kernel, state carried — the
+                                    # fused consume-in-pipeline discipline)
     hybrid_period: int = 0          # zamba2: shared attn block every k ssm layers
     n_shared_blocks: int = 0        # zamba2: number of alternating shared blocks
 

@@ -87,4 +87,67 @@ def get_ep_preset(name: str) -> EPPreset:
     return p
 
 
-__all__ = ["EPPreset", "EP_PRESETS", "EP_PRESET_NAMES", "get_ep_preset"]
+# ---------------------------------------------------------------------------
+# TP presets (ART rings / fused collective matmuls at the dense TP edges)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class TPPreset:
+    """One TP-enabled run recipe for a dense arch: the ``model``-axis
+    extent and the transport the dense-block TP edges ride.
+
+    ``tp_transport="fused"`` pins the in-kernel Pallas collective matmuls
+    (``kernels/cc_matmul``) at the QKV/up all_gather and O/down
+    reduce_scatter edges; any ring family keeps the XLA-level streamed
+    schedules of ``core/overlap.py``; ``auto`` prices the families per
+    payload (``Conduit.matmul_schedule``)."""
+
+    arch: str                 # registry name of the ModelConfig
+    tp_axis: int              # recommended ``model`` mesh-axis extent
+    tp_transport: str = "fused"   # TransportPolicy.tp
+
+    @property
+    def config(self) -> ModelConfig:
+        from repro.configs import get_config
+
+        return get_config(self.arch)
+
+    @property
+    def step(self):
+        """A ``StepConfig`` with the TP transport policy bound."""
+        from repro.dist.steps import StepConfig, TransportPolicy
+
+        return StepConfig(
+            transport=TransportPolicy(tp=self.tp_transport))
+
+
+#: TP recipes for dense archs whose head/ff/model extents divide cleanly
+#: at the recommended axis (validated by :func:`get_tp_preset` and for
+#: every preset by ``tests/test_overlap.py``).
+TP_PRESETS: Dict[str, TPPreset] = {
+    "nemotron-4-340b-tp": TPPreset(arch="nemotron-4-340b", tp_axis=8),
+    "h2o-danube-1.8b-tp": TPPreset(arch="h2o-danube-1.8b", tp_axis=8),
+}
+
+TP_PRESET_NAMES: Tuple[str, ...] = tuple(TP_PRESETS)
+
+
+def get_tp_preset(name: str) -> TPPreset:
+    """Resolve a TP preset by name (``<arch>-tp``), validated against the
+    arch's divisibility constraints (``models/artblock.supports_art_tp``)."""
+    if name not in TP_PRESETS:
+        raise KeyError(
+            f"unknown TP preset {name!r}; known: {sorted(TP_PRESETS)}")
+    p = TP_PRESETS[name]
+    cfg = p.config
+    from repro.models.artblock import supports_art_tp
+
+    assert supports_art_tp(cfg, p.tp_axis), (name, p.tp_axis)
+    return p
+
+
+__all__ = [
+    "EPPreset", "EP_PRESETS", "EP_PRESET_NAMES", "get_ep_preset",
+    "TPPreset", "TP_PRESETS", "TP_PRESET_NAMES", "get_tp_preset",
+]

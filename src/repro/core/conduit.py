@@ -518,6 +518,46 @@ def _all_to_all_bidir(x, *, axis: str, chunk_bytes=None):
 
 
 # ---------------------------------------------------------------------------
+# fused transports — the collective consumed inside the Pallas kernel
+# ---------------------------------------------------------------------------
+
+
+@register("all_gather", "fused")
+def _all_gather_fused(x, *, axis: str, chunk_bytes=None, w=None,
+                      bidirectional: bool = True, interpret=None):
+    """SMI-style in-kernel collective matmul (``kernels/cc_matmul``): the
+    ring hop lands in double-buffered VMEM scratch and is multiplied
+    without leaving the kernel — no per-hop XLA launch/repack boundary.
+
+    With a resident weight ``w`` (K, N_loc) this *is* the fused
+    ``all_gather(x) @ w``; without one there is nothing to fuse into, so
+    the plain gather delegates to the ``ring`` wire (the fused family is
+    a matmul-edge transport, not a new wire for bare collectives).
+    """
+    if w is None:
+        return _all_gather_ring(x, axis=axis, chunk_bytes=chunk_bytes)
+    from repro.kernels.cc_matmul.ops import allgather_matmul_pallas
+    return allgather_matmul_pallas(x, w, axis=axis,
+                                   bidirectional=bidirectional,
+                                   interpret=interpret)
+
+
+@register("reduce_scatter", "fused")
+def _reduce_scatter_fused(x, *, axis: str, chunk_bytes=None, w=None,
+                          bidirectional: bool = True, interpret=None):
+    """Fused ``reduce_scatter(x @ w)``: partial-sum accumulators ride the
+    ring inside the kernel while the next sub-matmul runs on the MXU.
+    Without a weight, delegates to the ``ring`` wire (see
+    :func:`_all_gather_fused`)."""
+    if w is None:
+        return _reduce_scatter_ring(x, axis=axis, chunk_bytes=chunk_bytes)
+    from repro.kernels.cc_matmul.ops import matmul_reducescatter_pallas
+    return matmul_reducescatter_pallas(x, w, axis=axis,
+                                       bidirectional=bidirectional,
+                                       interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # Cost model + auto policy (Fig. 5 as a runtime decision)
 # ---------------------------------------------------------------------------
 
@@ -563,6 +603,11 @@ def estimate_time(
     n, S = int(axis_size), int(size_bytes)
     if n <= 1:
         return 0.0
+    if transport == "fused" and op in ("all_gather", "reduce_scatter"):
+        # the bare-collective spelling of ``fused`` delegates to the ring
+        # wire (no matmul to fuse into) — price it as what actually runs;
+        # the in-kernel schedule is priced by ``matmul_edge_estimate``
+        transport = "ring"
     p = int(chunk_bytes or _default_packet(link))
     rounds = max(1, math.ceil(math.log2(n)))
 
@@ -613,6 +658,63 @@ def estimate_time(
     raise ValueError(f"unknown (op, transport) = ({op!r}, {transport!r})")
 
 
+def matmul_edge_estimate(
+    op: str,
+    transport: str,
+    *,
+    size_bytes: int,
+    axis_size: int,
+    compute_time: float,
+    link: nm.LinkParams = nm.FSHMEM_QSFP,
+    chunk_bytes: Optional[int] = None,
+) -> float:
+    """Modeled wall-clock of a *collective-matmul edge*: ``compute_time``
+    of matmul riding an ``all_gather``/``reduce_scatter`` of
+    ``size_bytes`` (global payload, the :func:`estimate_time` convention).
+
+    Three schedule families, one algebra
+    (:func:`repro.core.netmodel.pipeline_time`):
+
+    * ``xla`` — the unfused baseline: compute fully, then the bulk
+      collective (or vice versa), fully serialized;
+    * ``ring`` / ``bidir`` — the XLA-level streamed schedules of
+      ``core/overlap.py``: n sub-matmuls interleaved with n−1 hops, each
+      hop paying the launch/repack boundary
+      (:func:`repro.core.netmodel.hop_launch_overhead`);
+    * ``fused`` — the in-kernel schedule of ``kernels/cc_matmul``: the
+      identical pipeline with the per-hop boundary eliminated (paid once,
+      :func:`repro.core.netmodel.fused_pipeline_time`) and the hop wire
+      issued by the kernel's own DMA — no host command stage.
+    """
+    n, S = int(axis_size), int(size_bytes)
+    if op not in ("all_gather", "reduce_scatter"):
+        raise ValueError(f"not a collective-matmul edge op: {op!r}")
+    if n <= 1:
+        return float(compute_time)
+    if transport == "xla":
+        return compute_time + estimate_time(
+            op, "xla", size_bytes=S, axis_size=n, link=link,
+            chunk_bytes=chunk_bytes)
+    p = int(chunk_bytes or _default_packet(link))
+    hop_bytes = S / n
+    per_dir = hop_bytes if transport == "ring" else hop_bytes / 2
+    tx = nm.put_time(link, max(1, int(per_dir)), p)
+    oh = nm.hop_launch_overhead(link, int(hop_bytes))
+    computes = [compute_time / n] * n
+    wires = [tx] * (n - 1) + [0.0]       # the last block is resident
+    if transport in ("ring", "bidir"):
+        return nm.pipeline_time([tc + oh for tc in computes], wires)
+    if transport == "fused":
+        # in-kernel DMA: no host command per hop, best direction split
+        half = nm.put_time(link, max(1, int(hop_bytes / 2)), p)
+        tx_f = min(tx, half) - link.latency.t_host_cmd
+        tx_f = max(tx_f, per_dir / link.peak_bandwidth)
+        wires_f = [tx_f] * (n - 1) + [0.0]
+        return nm.fused_pipeline_time(computes, wires_f,
+                                      launch_overhead=oh)
+    raise ValueError(f"unknown matmul-edge transport {transport!r}")
+
+
 def auto_select(
     op: str,
     *,
@@ -620,6 +722,7 @@ def auto_select(
     axis_size: int,
     link: nm.LinkParams = nm.FSHMEM_QSFP,
     chunk_bytes: Optional[int] = None,
+    compute_time: Optional[float] = None,
 ) -> Tuple[str, Optional[int]]:
     """Pick (transport, chunk_bytes) minimizing :func:`estimate_time`.
 
@@ -631,6 +734,12 @@ def auto_select(
     :data:`CHUNK_CANDIDATES` — the transport choice is then conditioned on
     the chunk that will actually run.  Transports the cost model cannot
     price (custom registrations) are skipped, never an error.
+
+    ``compute_time``: when given, the payload is a *collective-matmul
+    edge* and every transport is priced by :func:`matmul_edge_estimate`
+    instead — which makes the ``fused`` in-kernel family selectable (a
+    bare collective has no compute to fuse into, so without
+    ``compute_time`` the fused transport is never picked).
     """
     if axis_size <= 1:
         return "xla", None
@@ -639,9 +748,15 @@ def auto_select(
     for name in transports(op):
         for chunk in candidates:
             try:
-                t = estimate_time(op, name, size_bytes=size_bytes,
-                                  axis_size=axis_size, link=link,
-                                  chunk_bytes=chunk)
+                if compute_time is None:
+                    t = estimate_time(op, name, size_bytes=size_bytes,
+                                      axis_size=axis_size, link=link,
+                                      chunk_bytes=chunk)
+                else:
+                    t = matmul_edge_estimate(
+                        op, name, size_bytes=size_bytes,
+                        axis_size=axis_size, compute_time=compute_time,
+                        link=link, chunk_bytes=chunk)
             except ValueError:
                 break                      # unmodeled transport: skip it
             if t < best[0]:
@@ -774,7 +889,7 @@ class Conduit:
     """
 
     axis: str
-    transport: str = "auto"          # "xla" | "ring" | "bidir" | "auto"
+    transport: str = "auto"    # "xla" | "ring" | "bidir" | "fused" | "auto"
     chunk_bytes: Optional[int] = None
     link: str = "qsfp"               # key into LINKS (netmodel params)
 
@@ -877,10 +992,38 @@ class Conduit:
                                 chunk_bytes=self.chunk_bytes)
         return t_bidir <= t_ring
 
+    def matmul_schedule(self, op: str, size_bytes: int,
+                        compute_time: Optional[float] = None) -> str:
+        """Which collective-matmul schedule family to run at a TP edge:
+        ``"ring"``/``"bidir"`` (the XLA-level streamed overlap of
+        ``core/overlap.py``) or ``"fused"`` (the in-kernel ring of
+        ``kernels/cc_matmul``).
+
+        Explicit ring transports pass through; ``fused`` pins the
+        in-kernel family.  ``xla``/``auto`` pick by
+        :func:`matmul_edge_estimate` when ``compute_time`` is given —
+        without it the fused family cannot be priced, so the choice
+        degrades to the plain ring-vs-bidir cost model."""
+        if self.transport in ("ring", "bidir", "fused"):
+            return self.transport
+        if compute_time is None:
+            return "bidir" if self.matmul_bidirectional(size_bytes) else "ring"
+        n = lax.axis_size(self.axis)
+        link = LINKS[self.link]
+        best, best_t = "ring", float("inf")
+        for name in ("ring", "bidir", "fused"):
+            t = matmul_edge_estimate(
+                op, name, size_bytes=size_bytes, axis_size=n,
+                compute_time=compute_time, link=link,
+                chunk_bytes=self.chunk_bytes)
+            if t < best_t:
+                best, best_t = name, t
+        return best
+
 
 __all__ = [
     "OPS", "LINKS", "CHUNK_CANDIDATES", "PIPELINE_CHUNKS", "Conduit",
     "register", "transports", "resolve",
-    "estimate_time", "auto_select", "crossover_bytes",
-    "pipeline_estimate", "auto_select_pipeline",
+    "estimate_time", "matmul_edge_estimate", "auto_select",
+    "crossover_bytes", "pipeline_estimate", "auto_select_pipeline",
 ]

@@ -264,6 +264,51 @@ def pipeline_time(compute_times, wire_times) -> float:
     return link_free
 
 
+#: HBM stream rate used to price the per-hop repack an XLA-level collective
+#: matmul pays (the arriving chunk round-trips HBM between the permute and
+#: the next sub-matmul).  Shared with the roofline term of
+#: ``benchmarks/overlap_pipeline.py``.
+HBM_BYTES_PER_S = 100e9
+
+#: nominal dense-matmul rate for sizing the compute term of a fused
+#: collective-matmul edge (TPU v5e bf16 peak; benchmarks import it).
+MXU_BF16_FLOPS = 197e12
+
+
+def hop_launch_overhead(link: LinkParams, hop_bytes: int = 0,
+                        hbm_bytes_per_s: float = HBM_BYTES_PER_S) -> float:
+    """Per-hop boundary cost an *XLA-level* ring matmul pays and the
+    in-kernel fused schedule does not.
+
+    Between two hops of ``core/overlap.py`` the program crosses an XLA
+    boundary: the next sub-matmul is a fresh launch (``t_host_cmd`` —
+    zero inside a single TPU program, real on the FPGA/host path) whose
+    DMA engines must be re-programmed (``t_dma``), and the chunk that
+    just landed is repacked through HBM before the MXU can read it
+    (``hop_bytes`` at the HBM stream rate).  The fused kernel keeps the
+    chunk in VMEM and the MXU hot, so it pays none of this per hop —
+    :func:`fused_pipeline_time` charges it once for the whole kernel.
+    """
+    boundary = link.latency.t_host_cmd + link.latency.t_dma
+    return boundary + max(0, int(hop_bytes)) / hbm_bytes_per_s
+
+
+def fused_pipeline_time(compute_times, wire_times, *,
+                        launch_overhead: float = 0.0) -> float:
+    """Wall-clock of an *in-kernel* fused ring pipeline.
+
+    Same greedy link-serialized overlap algebra as :func:`pipeline_time`,
+    but the per-hop launch/repack boundary is eliminated: the whole ring
+    is one kernel, so ``launch_overhead`` (one
+    :func:`hop_launch_overhead`) is paid **once** up front instead of
+    per chunk.  The XLA-level streamed equivalent of the same schedule
+    is ``pipeline_time([tc + oh for tc in computes], wires)`` — that
+    difference is the fused transport's whole claim, and what the
+    ``fused`` suite of ``BENCH_overlap.json`` records.
+    """
+    return launch_overhead + pipeline_time(compute_times, wire_times)
+
+
 def art_time(
     t_compute: float, t_comm: float, t_msg: float, n_chunks: int
 ) -> float:

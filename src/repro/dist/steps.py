@@ -101,6 +101,8 @@ class TransportPolicy:
     ``tp``         — TP collectives of dense blocks (QKV/O, up/down rings):
                      any ring family routes them through the ART schedules
                      of ``models/artblock.py`` over a ``Conduit("model")``;
+                     ``fused`` pins the in-kernel Pallas collective
+                     matmuls (``kernels/cc_matmul``) at those edges;
     ``moe``        — MoE expert dispatch: any non-``xla`` value routes
                      token buckets through the conduit ``all_to_all`` on
                      the ``expert`` mesh axis (``models/moe_ep.py``);
@@ -127,8 +129,9 @@ class TransportPolicy:
 
     def __post_init__(self):
         # each traffic class validates against the registry of the op it
-        # actually rides (tp/cross_pod reduce, moe dispatches)
-        for cls, op in (("tp", "all_reduce"), ("moe", "all_to_all"),
+        # actually rides (tp gathers/scatters, moe dispatches,
+        # cross_pod reduces)
+        for cls, op in (("tp", "all_gather"), ("moe", "all_to_all"),
                         ("cross_pod", "all_reduce")):
             name = getattr(self, cls)
             valid = ("auto",) + conduit_transports(op)

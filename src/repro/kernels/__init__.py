@@ -8,6 +8,6 @@ All validate against their pure-jnp ref oracles under interpret=True on CPU
 (the container has no TPU); ``ops.py`` wrappers auto-select interpret mode.
 """
 
-from repro.kernels import flash_attention, matmul, ssd
+from repro.kernels import cc_matmul, flash_attention, matmul, ssd
 
-__all__ = ["flash_attention", "matmul", "ssd"]
+__all__ = ["cc_matmul", "flash_attention", "matmul", "ssd"]

@@ -1,0 +1,30 @@
+"""Fused collective matmuls: the ring hop consumed inside the Pallas
+kernel (SMI-style), conduit transport family ``fused``."""
+
+from repro.kernels.cc_matmul.kernel import (
+    ag_matmul_ring_tpu,
+    consume_matmul,
+    consume_matmul_acc,
+    matmul_tile,
+    rs_matmul_ring_tpu,
+)
+from repro.kernels.cc_matmul.ops import (
+    allgather_matmul_pallas,
+    matmul_reducescatter_pallas,
+)
+from repro.kernels.cc_matmul.ref import (
+    allgather_matmul_ref,
+    matmul_reducescatter_ref,
+)
+
+__all__ = [
+    "allgather_matmul_pallas",
+    "matmul_reducescatter_pallas",
+    "allgather_matmul_ref",
+    "matmul_reducescatter_ref",
+    "ag_matmul_ring_tpu",
+    "rs_matmul_ring_tpu",
+    "consume_matmul",
+    "consume_matmul_acc",
+    "matmul_tile",
+]

@@ -1,0 +1,386 @@
+"""Public fused collective-matmul ops: ``allgather_matmul_pallas`` and
+``matmul_reducescatter_pallas``.
+
+Differentiable (``jax.custom_vjp`` — each op's backward is the *other*
+fused op plus a weight-gradient gather), batched (2-D ``(rows, K)`` or 3-D
+``(B, rows, K)`` activations), and path-dispatched:
+
+* **remote-DMA path** — the whole ring inside one ``pallas_call``
+  (``kernel.ag_matmul_ring_tpu`` / ``rs_matmul_ring_tpu``) when the
+  backend supports it (``kernels.common.supports_remote_dma``) and the
+  row blocking is TPU-tileable; lane/contraction dims are zero-padded to
+  128 (exact — zero columns of a matmul contribute nothing).
+* **emulated path** — everywhere else: the hop stays a ``lax.ppermute``
+  but every arrival lands in the same double-buffered scratch and is
+  consumed by a Pallas kernel reading its slot.  Op-for-op the schedule
+  of ``core/overlap.py``, hence bit-identical to it (and CI exercises
+  the identical code structure the remote-DMA kernel runs).
+
+Conduit integration: registered as the ``fused`` transport family for
+``all_gather`` / ``reduce_scatter`` in ``core/conduit.py``;
+``TransportPolicy.tp="fused"`` routes both TP edges of
+``models/artblock.py`` here.  Like ``core/overlap.py``, both ops run
+inside ``shard_map`` over a 1-D ring axis and return f32.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.art import _ring_perm
+from repro.kernels import common
+from repro.kernels.cc_matmul import kernel as K
+
+# TPU tiling floor for the remote-DMA path: row blocks must be sublane-
+# aligned (f32 tile height), lanes are padded to this multiple.
+_ROW_ALIGN = 8
+_LANE_ALIGN = 128
+
+
+def _resolve_flags(interpret: Optional[bool],
+                   use_remote_dma: Optional[bool]):
+    if interpret is None:
+        interpret = common.should_interpret()
+    if use_remote_dma is None:
+        use_remote_dma = common.supports_remote_dma() and not interpret
+    return bool(interpret), bool(use_remote_dma) and not interpret
+
+
+def _pad_cols(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ---------------------------------------------------------------------------
+# Emulated schedules (bit-identical mirrors of core/overlap.py)
+# ---------------------------------------------------------------------------
+
+
+def _ag_2d(x, w, *, axis: str, bidirectional: bool, interpret: bool):
+    """all_gather(x) @ w with the hop consumed from double-buffered
+    scratch; schedule mirror of ``overlap.allgather_matmul``."""
+    n = lax.axis_size(axis)
+    my = lax.axis_index(axis)
+    b_loc = x.shape[0]
+    out = jnp.zeros((n * b_loc, w.shape[1]), jnp.float32)
+
+    if not bidirectional or n == 2:
+        scr = jnp.zeros((2,) + x.shape, x.dtype).at[0].set(x)
+        y0 = K.consume_matmul(scr, w, slot=0, interpret=interpret)
+        out = lax.dynamic_update_slice(out, y0, (my * b_loc, 0))
+        if n == 1:
+            return out
+        perm = _ring_perm(n, 1)
+        for hop in range(1, n):
+            prev, cur = (hop - 1) % 2, hop % 2
+            # hop k's chunk lands in the free slot while slot `prev`'s
+            # tile multiplies — the double-buffer discipline of the
+            # remote-DMA kernel, ppermute standing in for the DMA
+            arrived = lax.ppermute(scr[prev], axis, perm)
+            scr = scr.at[cur].set(arrived)
+            y = K.consume_matmul(scr, w, slot=cur, interpret=interpret)
+            out = lax.dynamic_update_slice(
+                out, y, (((my - hop) % n) * b_loc, 0))
+        return out
+
+    half = b_loc // 2
+    lo, hi = x[:half], x[half:]
+    scr_f = jnp.zeros((2,) + lo.shape, x.dtype).at[0].set(lo)
+    scr_b = jnp.zeros((2,) + hi.shape, x.dtype).at[0].set(hi)
+
+    def place(out, y, src, second_half):
+        row = src * b_loc + (half if second_half else 0)
+        return lax.dynamic_update_slice(out, y, (row, 0))
+
+    out = place(out, K.consume_matmul(scr_f, w, slot=0,
+                                      interpret=interpret), my, False)
+    out = place(out, K.consume_matmul(scr_b, w, slot=0,
+                                      interpret=interpret), my, True)
+    if n == 1:
+        return out
+    fwd, bwd = _ring_perm(n, 1), _ring_perm(n, -1)
+    for hop in range(1, n):
+        prev, cur = (hop - 1) % 2, hop % 2
+        arr_f = lax.ppermute(scr_f[prev], axis, fwd)
+        arr_b = lax.ppermute(scr_b[prev], axis, bwd)
+        scr_f = scr_f.at[cur].set(arr_f)
+        scr_b = scr_b.at[cur].set(arr_b)
+        out = place(out, K.consume_matmul(scr_f, w, slot=cur,
+                                          interpret=interpret),
+                    (my - hop) % n, False)
+        out = place(out, K.consume_matmul(scr_b, w, slot=cur,
+                                          interpret=interpret),
+                    (my + hop) % n, True)
+    return out
+
+
+def _rs_2d(x, w, *, axis: str, bidirectional: bool, interpret: bool):
+    """reduce_scatter(x @ w) with the in-flight accumulator consumed from
+    double-buffered scratch; mirror of ``overlap.matmul_reducescatter``."""
+    n = lax.axis_size(axis)
+    my = lax.axis_index(axis)
+    b = x.shape[0]
+    assert b % n == 0, (b, n)
+    b_loc = b // n
+
+    def row_block(owner_offset: int):
+        start = ((my + owner_offset) % n) * b_loc
+        return lax.dynamic_slice_in_dim(x, start, b_loc, 0)
+
+    if not bidirectional or n == 2:
+        acc = K.matmul_tile(row_block(-1), w, interpret=interpret)
+        if n == 1:
+            return acc
+        perm = _ring_perm(n, 1)
+        scr = jnp.zeros((2, b_loc, w.shape[1]), jnp.float32)
+        for hop in range(1, n):
+            cur = hop % 2
+            arrived = lax.ppermute(acc, axis, perm)
+            scr = scr.at[cur].set(arrived)
+            acc = K.consume_matmul_acc(scr, row_block(-(hop + 1)), w,
+                                       slot=cur, interpret=interpret)
+        return acc
+
+    nloc = w.shape[1]
+    half = nloc // 2
+
+    def w_part(second_half):
+        return w[:, half:] if second_half else w[:, :half]
+
+    if n == 1:
+        return jnp.concatenate(
+            [K.matmul_tile(row_block(-1), w_part(False),
+                           interpret=interpret),
+             K.matmul_tile(row_block(+1), w_part(True),
+                           interpret=interpret)], axis=1)
+
+    fwd, bwd = _ring_perm(n, 1), _ring_perm(n, -1)
+    acc_f = K.matmul_tile(row_block(-1), w_part(False), interpret=interpret)
+    acc_b = K.matmul_tile(row_block(+1), w_part(True), interpret=interpret)
+    scr_f = jnp.zeros((2, b_loc, half), jnp.float32)
+    scr_b = jnp.zeros((2, b_loc, nloc - half), jnp.float32)
+    for hop in range(1, n):
+        cur = hop % 2
+        arr_f = lax.ppermute(acc_f, axis, fwd)
+        arr_b = lax.ppermute(acc_b, axis, bwd)
+        scr_f = scr_f.at[cur].set(arr_f)
+        scr_b = scr_b.at[cur].set(arr_b)
+        acc_f = K.consume_matmul_acc(scr_f, row_block(-(hop + 1)),
+                                     w_part(False), slot=cur,
+                                     interpret=interpret)
+        acc_b = K.consume_matmul_acc(scr_b, row_block(+(hop + 1)),
+                                     w_part(True), slot=cur,
+                                     interpret=interpret)
+    return jnp.concatenate([acc_f, acc_b], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Remote-DMA schedules (TPU): pad lanes, run the in-kernel ring
+# ---------------------------------------------------------------------------
+
+
+def _ag_2d_tpu(x, w, *, axis: str, bidirectional: bool):
+    n = lax.axis_size(axis)
+    b_loc, n_out = x.shape[0], w.shape[1]
+    x = _pad_cols(x, 1, _LANE_ALIGN)
+    w = _pad_cols(_pad_cols(w, 0, _LANE_ALIGN), 1, _LANE_ALIGN)
+    if n == 1:
+        return K.matmul_tile(x, w, interpret=False)[:, :n_out]
+    if not bidirectional or n == 2:
+        y = K.ag_matmul_ring_tpu(x, w, axis=axis, n=n, direction=1)
+        return y[:, :n_out]
+    half = b_loc // 2
+    y_lo = K.ag_matmul_ring_tpu(x[:half], w, axis=axis, n=n, direction=1,
+                                collective_id=0)
+    y_hi = K.ag_matmul_ring_tpu(x[half:], w, axis=axis, n=n, direction=-1,
+                                collective_id=1)
+    nl = y_lo.shape[1]
+    y = jnp.concatenate(
+        [y_lo.reshape(n, half, nl), y_hi.reshape(n, b_loc - half, nl)],
+        axis=1).reshape(n * b_loc, nl)
+    return y[:, :n_out]
+
+
+def _rs_2d_tpu(x, w, *, axis: str, bidirectional: bool):
+    n = lax.axis_size(axis)
+    n_out = w.shape[1]
+    x = _pad_cols(x, 1, _LANE_ALIGN)
+    w = _pad_cols(w, 0, _LANE_ALIGN)
+    if n == 1:
+        return K.matmul_tile(x, _pad_cols(w, 1, _LANE_ALIGN),
+                             interpret=False)[:, :n_out]
+    if not bidirectional or n == 2:
+        wp = _pad_cols(w, 1, _LANE_ALIGN)
+        y = K.rs_matmul_ring_tpu(x, wp, axis=axis, n=n, direction=1)
+        return y[:, :n_out]
+    half = n_out // 2
+    y_lo = K.rs_matmul_ring_tpu(
+        x, _pad_cols(w[:, :half], 1, _LANE_ALIGN), axis=axis, n=n,
+        direction=1, collective_id=0)[:, :half]
+    y_hi = K.rs_matmul_ring_tpu(
+        x, _pad_cols(w[:, half:], 1, _LANE_ALIGN), axis=axis, n=n,
+        direction=-1, collective_id=1)[:, : n_out - half]
+    return jnp.concatenate([y_lo, y_hi], axis=1)
+
+
+def _rows_tpu_ok(rows: int, bidirectional: bool) -> bool:
+    """Row blocking the remote-DMA kernels can tile without row padding
+    (which would interleave garbage rows into the gathered layout)."""
+    if rows % _ROW_ALIGN:
+        return False
+    if bidirectional and (rows // 2) % _ROW_ALIGN:
+        return False
+    return True
+
+
+# ---------------------------------------------------------------------------
+# Dispatch + batching + custom VJP
+# ---------------------------------------------------------------------------
+
+
+def _ag_impl(x, w, *, axis, bidirectional, interpret, use_remote_dma):
+    if use_remote_dma and _rows_tpu_ok(x.shape[-2], bidirectional):
+        fn2d = functools.partial(_ag_2d_tpu, axis=axis,
+                                 bidirectional=bidirectional)
+    else:
+        fn2d = functools.partial(_ag_2d, axis=axis,
+                                 bidirectional=bidirectional,
+                                 interpret=interpret)
+    if x.ndim == 3:
+        return jax.vmap(lambda xb: fn2d(xb, w))(x)
+    return fn2d(x, w)
+
+
+def _rs_impl(x, w, *, axis, bidirectional, interpret, use_remote_dma):
+    n_rows = x.shape[-2]
+    if use_remote_dma and n_rows % _ROW_ALIGN == 0:
+        fn2d = functools.partial(_rs_2d_tpu, axis=axis,
+                                 bidirectional=bidirectional)
+    else:
+        fn2d = functools.partial(_rs_2d, axis=axis,
+                                 bidirectional=bidirectional,
+                                 interpret=interpret)
+    if x.ndim == 3:
+        return jax.vmap(lambda xb: fn2d(xb, w))(x)
+    return fn2d(x, w)
+
+
+def _gather_rows(t, axis: str):
+    """Plain ring-oblivious gather for weight gradients (bwd only)."""
+    return lax.all_gather(t, axis, axis=t.ndim - 2, tiled=True)
+
+
+@functools.lru_cache(maxsize=None)
+def _ag_vjp(axis: str, bidirectional: bool, interpret: bool,
+            use_remote_dma: bool):
+    kw = dict(axis=axis, bidirectional=bidirectional, interpret=interpret,
+              use_remote_dma=use_remote_dma)
+
+    @jax.custom_vjp
+    def f(x, w):
+        return _ag_impl(x, w, **kw)
+
+    def fwd(x, w):
+        return _ag_impl(x, w, **kw), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        # y = AG(x) @ w  ⇒  dx = RS(g @ wᵀ) — itself a fused ring —
+        # and dw = AG(x)ᵀ @ g (plain gather; wgrads are not ring-shaped)
+        dx = _rs_impl(g, w.T, **kw).astype(x.dtype)
+        x_full = _gather_rows(x, axis)
+        if x.ndim == 3:
+            dw = jnp.einsum("bik,bin->kn", x_full, g,
+                            preferred_element_type=jnp.float32)
+        else:
+            dw = jnp.dot(x_full.T, g, preferred_element_type=jnp.float32)
+        return dx, dw.astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _rs_vjp(axis: str, bidirectional: bool, interpret: bool,
+            use_remote_dma: bool):
+    kw = dict(axis=axis, bidirectional=bidirectional, interpret=interpret,
+              use_remote_dma=use_remote_dma)
+
+    @jax.custom_vjp
+    def f(x, w):
+        return _rs_impl(x, w, **kw)
+
+    def fwd(x, w):
+        return _rs_impl(x, w, **kw), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        # y = RS(x @ w)  ⇒  dY = AG(g), dx = dY @ wᵀ = fused AG-matmul,
+        # dw = xᵀ @ dY (plain gather)
+        dx = _ag_impl(g, w.T, **kw).astype(x.dtype)
+        g_full = _gather_rows(g, axis)
+        if x.ndim == 3:
+            dw = jnp.einsum("bik,bin->kn", x, g_full,
+                            preferred_element_type=jnp.float32)
+        else:
+            dw = jnp.dot(x.T, g_full, preferred_element_type=jnp.float32)
+        return dx, dw.astype(w.dtype)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def allgather_matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    axis: str,
+    bidirectional: bool = True,
+    interpret: Optional[bool] = None,
+    use_remote_dma: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused ``all_gather(x, axis) @ w`` — the ring consumed in-kernel.
+
+    ``x``: (b, K) or (B, b, K) local rows; ``w``: (K, N_loc) resident
+    column shard; returns (n·b, N_loc) / (B, n·b, N_loc) f32 — the same
+    contract (and, on the emulated path, the same bits) as
+    ``overlap.allgather_matmul``.
+    """
+    assert x.ndim in (2, 3), x.shape
+    interpret, use_remote_dma = _resolve_flags(interpret, use_remote_dma)
+    return _ag_vjp(axis, bool(bidirectional), interpret,
+                   use_remote_dma)(x, w)
+
+
+def matmul_reducescatter_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    axis: str,
+    bidirectional: bool = True,
+    interpret: Optional[bool] = None,
+    use_remote_dma: Optional[bool] = None,
+) -> jnp.ndarray:
+    """Fused ``reduce_scatter(x @ w, axis)`` — accumulators ride the ring
+    in-kernel.
+
+    ``x``: (n·b, K_loc) or (B, n·b, K_loc); ``w``: (K_loc, N) resident row
+    shard; returns (b, N) / (B, b, N) f32 — the contract (and emulated-path
+    bits) of ``overlap.matmul_reducescatter``.
+    """
+    assert x.ndim in (2, 3), x.shape
+    interpret, use_remote_dma = _resolve_flags(interpret, use_remote_dma)
+    return _rs_vjp(axis, bool(bidirectional), interpret,
+                   use_remote_dma)(x, w)
+
+
+__all__ = ["allgather_matmul_pallas", "matmul_reducescatter_pallas"]

@@ -1,0 +1,35 @@
+"""Lax oracles for the fused collective matmuls.
+
+These are the *semantic* references — the unfused composition of an XLA
+builtin collective with a plain matmul.  The fused kernels must match them
+to float tolerance (accumulation order differs: the ring adds partial sums
+in hop order, ``psum_scatter`` in whatever order XLA picks).  The
+*bitwise* reference is ``core/overlap.py``, whose schedules the fused
+kernels reproduce op-for-op (asserted in ``tests/test_overlap.py``).
+
+Both run inside ``shard_map`` over ``axis``, like every collective in
+``repro.core``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def allgather_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, *,
+                         axis: str) -> jnp.ndarray:
+    """``all_gather(x, axis) @ w`` materialized: (B/n, K) → (B, N/n) f32."""
+    full = lax.all_gather(x, axis, axis=x.ndim - 2, tiled=True)
+    return jnp.dot(full, w, preferred_element_type=jnp.float32)
+
+
+def matmul_reducescatter_ref(x: jnp.ndarray, w: jnp.ndarray, *,
+                             axis: str) -> jnp.ndarray:
+    """``reduce_scatter(x @ w, axis)`` materialized: (B, K/n) → (B/n, N) f32."""
+    partial = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return lax.psum_scatter(partial, axis, scatter_dimension=x.ndim - 2,
+                            tiled=True)
+
+
+__all__ = ["allgather_matmul_ref", "matmul_reducescatter_ref"]

@@ -1,0 +1,54 @@
+"""Shared kernel-wrapper policy: when does a Pallas call run in interpret
+mode, and when may it use TPU remote-DMA semantics.
+
+Every public kernel wrapper (``matmul``, ``flash_attention``, ``ssd``,
+``cc_matmul``) used to carry its own copy of the CPU fallback test; this is
+the one home.  Two knobs:
+
+* :func:`should_interpret` — Pallas TPU kernels cannot compile on a CPU
+  backend, so CI runs them through the Pallas interpreter.  The
+  ``REPRO_PALLAS_INTERPRET`` environment variable overrides the backend
+  sniff in either direction (``1``/``true`` forces interpret mode even on
+  an accelerator — useful for numerics bisection; ``0``/``false`` forces
+  compilation — useful to prove a kernel actually lowers).
+* :func:`supports_remote_dma` — whether the in-kernel collective path
+  (``pltpu.make_async_remote_copy`` in ``kernels/cc_matmul``) can run.
+  Remote DMA exists only on a real TPU backend and has no interpreter
+  emulation, so interpret mode always disables it.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+#: env var forcing interpret mode on ("1"/"true"/"yes") or off ("0"/...).
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+_TRUTHY = ("1", "true", "yes", "on")
+_FALSY = ("0", "false", "no", "off")
+
+
+def should_interpret() -> bool:
+    """True when Pallas calls should run under the interpreter.
+
+    Precedence: the ``REPRO_PALLAS_INTERPRET`` env override, else
+    ``jax.default_backend() == "cpu"`` (the only backend with no Mosaic
+    lowering).  Unrecognized override values fall back to the sniff.
+    """
+    raw = os.environ.get(INTERPRET_ENV, "").strip().lower()
+    if raw in _TRUTHY:
+        return True
+    if raw in _FALSY:
+        return False
+    return jax.default_backend() == "cpu"
+
+
+def supports_remote_dma() -> bool:
+    """True when the in-kernel remote-DMA collective path can run: a TPU
+    backend and not forced into interpret mode."""
+    return jax.default_backend() == "tpu" and not should_interpret()
+
+
+__all__ = ["INTERPRET_ENV", "should_interpret", "supports_remote_dma"]

@@ -7,6 +7,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import should_interpret
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
 
@@ -42,7 +43,7 @@ def flash_attention(
     explicit full blocks there (asserted).
     """
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = should_interpret()
     sq, skv = q.shape[2], k.shape[2]
     if not causal:
         assert sq % block_q == 0 and skv % block_kv == 0, (

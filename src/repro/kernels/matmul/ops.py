@@ -8,6 +8,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import should_interpret
 from repro.kernels.matmul.kernel import matmul_pallas
 
 
@@ -20,8 +21,8 @@ def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
     return jnp.pad(x, widths)
 
 
-def _should_interpret() -> bool:
-    return jax.default_backend() == "cpu"
+# kept as an alias: tests and older call sites import the historical name
+_should_interpret = should_interpret
 
 
 @functools.partial(
@@ -50,7 +51,7 @@ def matmul(
     does not perturb results.
     """
     if interpret is None:
-        interpret = _should_interpret()
+        interpret = should_interpret()
     out_dtype = out_dtype or x.dtype
 
     batch_shape = x.shape[:-2]

@@ -1,5 +1,5 @@
 from repro.kernels.ssd.kernel import ssd_pallas
-from repro.kernels.ssd.ops import ssd
+from repro.kernels.ssd.ops import ssd, ssd_chunk_fed
 from repro.kernels.ssd.ref import ssd_decode_step, ssd_ref
 
-__all__ = ["ssd", "ssd_pallas", "ssd_ref", "ssd_decode_step"]
+__all__ = ["ssd", "ssd_chunk_fed", "ssd_pallas", "ssd_ref", "ssd_decode_step"]

@@ -37,14 +37,15 @@ NEG_INF = -1.0e30
 
 
 def _ssd_kernel(
-    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, state_out_ref, state_ref,
+    x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, state_in_ref,
+    y_ref, state_out_ref, state_ref,
     *, n_chunks: int, chunk: int,
 ):
     ci = pl.program_id(2)
 
     @pl.when(ci == 0)
     def _init():
-        state_ref[...] = jnp.zeros_like(state_ref)
+        state_ref[...] = state_in_ref[0, 0]
 
     x = x_ref[0, :, 0, :].astype(jnp.float32)       # (L, P)
     dt = dt_ref[0, :, 0].astype(jnp.float32)        # (L,)
@@ -102,14 +103,23 @@ def ssd_pallas(
     *,
     chunk: int = 128,
     interpret: bool = False,
+    init_state: jnp.ndarray | None = None,   # (B, H, N, P) fp32
 ):
-    """Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32)."""
+    """Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32).
+
+    ``init_state`` seeds the carried (N×P) state (zeros when ``None``) —
+    the chunk-fed entry point (``ops.ssd_chunk_fed``) threads each
+    segment's final state into the next segment's scan through it.
+    """
     bsz, s, h, p = x.shape
     _, _, g, n = b.shape
     assert h % g == 0, (h, g)
     assert s % chunk == 0, (s, chunk)
     hpg = h // g
     n_chunks = s // chunk
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, n, p), jnp.float32)
+    assert init_state.shape == (bsz, h, n, p), init_state.shape
 
     kernel = functools.partial(_ssd_kernel, n_chunks=n_chunks, chunk=chunk)
     y, state = pl.pallas_call(
@@ -122,6 +132,7 @@ def ssd_pallas(
             pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
             pl.BlockSpec((1, chunk, 1, n), lambda bi, hi, ci: (bi, ci, hi // hpg, 0)),
             pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, 1, n, p), lambda bi, hi, ci: (bi, hi, 0, 0)),
         ],
         out_specs=[
             pl.BlockSpec((1, chunk, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
@@ -133,5 +144,5 @@ def ssd_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
         interpret=interpret,
-    )(x, dt, a, b, c, d)
+    )(x, dt, a, b, c, d, init_state.astype(jnp.float32))
     return y, state

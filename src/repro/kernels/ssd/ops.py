@@ -1,12 +1,16 @@
-"""jit'd wrapper for the SSD kernel: padding + CPU interpret fallback."""
+"""jit'd wrapper for the SSD kernel: padding + CPU interpret fallback,
+plus the chunk-fed entry point (segments streamed into the scan)."""
 
 from __future__ import annotations
 
 import functools
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import pipeline
+from repro.kernels.common import should_interpret
 from repro.kernels.ssd.kernel import ssd_pallas
 
 
@@ -21,14 +25,16 @@ def ssd(
     *,
     chunk: int = 128,
     interpret: bool | None = None,
+    init_state: jnp.ndarray | None = None,   # (B, H, N, P) fp32
 ):
     """Chunked SSD scan; pads S to a chunk multiple (dt=0 ⇒ identity steps:
     decay exp(0)=1 and zero state injection, so padding is exact).
 
     Returns (y: (B, S, H, P), final_state: (B, H, N, P) fp32).
+    ``init_state`` seeds the carried state (zeros when ``None``).
     """
     if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+        interpret = should_interpret()
     s = x.shape[1]
     pad = (-s) % chunk
     if pad:
@@ -36,5 +42,52 @@ def ssd(
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
         c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
-    y, state = ssd_pallas(x, dt, a, b, c, d, chunk=chunk, interpret=interpret)
+    y, state = ssd_pallas(x, dt, a, b, c, d, chunk=chunk, interpret=interpret,
+                          init_state=init_state)
     return y[:, :s], state
+
+
+def ssd_chunk_fed(
+    fetch: Callable[[int], Tuple[jnp.ndarray, ...]],
+    n_segments: int,
+    a: jnp.ndarray,      # (H,)
+    d: jnp.ndarray,      # (H,)
+    *,
+    chunk: int = 128,
+    interpret: bool | None = None,
+    init_state: jnp.ndarray | None = None,
+):
+    """SSD scan over a sequence delivered segment-by-segment: the fetch of
+    segment *k* (e.g. a conduit collective, a host DMA) is issued while
+    segment *k−1*'s scan runs — :func:`repro.core.pipeline.streamed` with
+    the (N×P) state carried across segments through ``init_state``.
+
+    ``fetch(k) -> (x, dt, b, c)`` delivers segment *k*'s slices (the
+    per-segment shapes of :func:`ssd`; segment lengths may differ).  The
+    scan of segment *k* consumes segment *k−1*'s arrival, so the wire
+    hides under the chunk loop — the same consume-inside-the-pipeline
+    discipline as the ``fused`` collective matmuls, applied to the SSD
+    chunk walk.
+
+    When every segment length is a multiple of ``chunk`` the result is
+    bit-identical to the bulk :func:`ssd` call (identical chunk
+    boundaries, identical op order); otherwise the per-segment padding
+    moves chunk boundaries and the match is allclose-level.
+
+    Returns (y: (B, S_total, H, P), final_state: (B, H, N, P) fp32).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    if n_segments <= 0:
+        raise ValueError("n_segments must be positive")
+    carried = [init_state]
+
+    def consume(_k, seg):
+        x, dt, b, c = seg
+        y, state = ssd(x, dt, a, b, c, d, chunk=chunk, interpret=interpret,
+                       init_state=carried[0])
+        carried[0] = state
+        return y
+
+    ys = pipeline.streamed(n_segments, fetch, consume)
+    return jnp.concatenate(ys, axis=1), carried[0]

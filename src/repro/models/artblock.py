@@ -23,6 +23,12 @@ notes), and replicated-input wgrads would psum over tp anyway.
 
 Constraints: n_heads % tp == 0, d_ff % tp == 0, d_model % tp == 0,
 S % tp == 0 (sequence-sharded residual).
+
+When the conduit's ``matmul_schedule`` picks the ``fused`` family
+(``TransportPolicy.tp="fused"``, or ``auto`` when the cost model favors
+it), both TP edges run the in-kernel Pallas rings of
+``kernels/cc_matmul`` instead — same schedule, hop consumed inside the
+kernel, bit-identical outputs to the ``core.overlap`` path.
 """
 
 from __future__ import annotations
@@ -34,8 +40,13 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import ModelConfig
+from repro.core import netmodel as nm
 from repro.core.conduit import Conduit
 from repro.core.overlap import allgather_matmul, matmul_reducescatter
+from repro.kernels.cc_matmul import (
+    allgather_matmul_pallas,
+    matmul_reducescatter_pallas,
+)
 from repro.models import layers as L
 
 Params = Dict[str, Any]
@@ -63,11 +74,37 @@ def _resolve(conduit: Conduit | None, axis: str | None) -> Conduit:
     return DEFAULT_CONDUIT
 
 
+def _edge_cost(op: str, x, w, conduit: Conduit):
+    """(global payload bytes, modeled matmul seconds) of one TP edge —
+    the inputs `Conduit.matmul_schedule` prices the schedule families on."""
+    n = lax.axis_size(conduit.axis)
+    item = jnp.dtype(x.dtype).itemsize
+    b, s = x.shape[0], x.shape[-2]
+    k, m = w.shape
+    if op == "all_gather":
+        size = int(x.size) * item * n
+        flops = 2.0 * b * (s * n) * k * m
+    else:
+        size = b * s * m * item
+        flops = 2.0 * b * s * k * m
+    return size, flops / nm.MXU_BF16_FLOPS
+
+
 def _vmap_ag(x, w, conduit: Conduit):
+    size, tc = _edge_cost("all_gather", x, w, conduit)
+    if conduit.matmul_schedule("all_gather", size, tc) == "fused":
+        return allgather_matmul_pallas(
+            x, w, axis=conduit.axis,
+            bidirectional=conduit.matmul_bidirectional(size))
     return jax.vmap(lambda xb: allgather_matmul(xb, w, conduit=conduit))(x)
 
 
 def _vmap_rs(x, w, conduit: Conduit):
+    size, tc = _edge_cost("reduce_scatter", x, w, conduit)
+    if conduit.matmul_schedule("reduce_scatter", size, tc) == "fused":
+        return matmul_reducescatter_pallas(
+            x, w, axis=conduit.axis,
+            bidirectional=conduit.matmul_bidirectional(size))
     return jax.vmap(
         lambda xb: matmul_reducescatter(xb, w, conduit=conduit))(x)
 

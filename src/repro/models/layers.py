@@ -721,10 +721,30 @@ def mamba2_block(cfg: ModelConfig, params: Params, x: jnp.ndarray,
 
     impl = resolve_attn_impl(cfg)
     if impl == "pallas":
-        from repro.kernels.ssd import ssd as ssd_kernel
+        from repro.kernels.ssd import ssd as ssd_kernel, ssd_chunk_fed
 
-        y, state = ssd_kernel(xs, dtv, a, bmat, cmat, params["d_skip"],
-                              chunk=cfg.ssm_chunk)
+        n_seg = int(cfg.ssm_stream_segments or 0)
+        if n_seg > 1 and s > cfg.ssm_chunk:
+            # chunk-fed scan: feed the kernel segment-by-segment with the
+            # state carried across segments.  Segment cuts land on chunk
+            # boundaries (tail rides the last segment), so the walk is
+            # bit-identical to the bulk call.
+            from repro.core.pipeline import chunk_slices
+            full = s // cfg.ssm_chunk
+            cuts = [(lo * cfg.ssm_chunk, hi * cfg.ssm_chunk)
+                    for lo, hi in chunk_slices(full, min(n_seg, full))]
+            cuts[-1] = (cuts[-1][0], s)
+
+            def fetch(k):
+                lo, hi = cuts[k]
+                return (xs[:, lo:hi], dtv[:, lo:hi],
+                        bmat[:, lo:hi], cmat[:, lo:hi])
+
+            y, state = ssd_chunk_fed(fetch, len(cuts), a, params["d_skip"],
+                                     chunk=cfg.ssm_chunk)
+        else:
+            y, state = ssd_kernel(xs, dtv, a, bmat, cmat, params["d_skip"],
+                                  chunk=cfg.ssm_chunk)
         y = y.astype(jnp.float32)
     else:
         y, state = ssd_jnp(xs, dtv, a, bmat, cmat, params["d_skip"],

@@ -69,3 +69,151 @@ class TestOverlapStructure:
         s = summarize(f.lower(xs, ws).compile().as_text())
         # bidirectional: 2 directions × (n−1)=3 hops = 6 permutes
         assert s.coll_count.get("collective-permute", 0) >= 6
+
+
+class TestFusedMatchesOverlap:
+    """kernels/cc_matmul consumes the identical ring inside the kernel —
+    the XLA-level overlap schedule is the bit-exactness oracle (the full
+    odd/even × uni/bidir × unaligned matrix lives in tests/test_kernels)."""
+
+    def test_allgather_matmul_bitwise(self, mesh4):
+        from repro.kernels.cc_matmul import allgather_matmul_pallas
+
+        x = jax.random.normal(jax.random.PRNGKey(0), (16, 8))
+        w = jax.random.normal(jax.random.PRNGKey(1), (8, 24))
+        xs = _shard(mesh4, x, P("x", None))
+        ws = _shard(mesh4, w, P(None, None))
+        runs = {}
+        for name, fn in (
+                ("overlap", functools.partial(
+                    overlap.allgather_matmul, axis="x", bidirectional=True)),
+                ("fused", functools.partial(
+                    allgather_matmul_pallas, axis="x", bidirectional=True))):
+            f = jax.jit(jax.shard_map(
+                fn, mesh=mesh4, in_specs=(P("x", None), P(None, None)),
+                out_specs=P(None, None), check_vma=False))
+            runs[name] = np.asarray(f(xs, ws))
+        np.testing.assert_array_equal(runs["fused"], runs["overlap"])
+
+    def test_matmul_reducescatter_bitwise(self, mesh4):
+        from repro.kernels.cc_matmul import matmul_reducescatter_pallas
+
+        x = jax.random.normal(jax.random.PRNGKey(2), (32, 8))
+        w = jax.random.normal(jax.random.PRNGKey(3), (8, 24))
+        xs = _shard(mesh4, x, P(None, None))
+        ws = _shard(mesh4, w, P(None, None))
+        runs = {}
+        for name, fn in (
+                ("overlap", functools.partial(
+                    overlap.matmul_reducescatter, axis="x",
+                    bidirectional=True)),
+                ("fused", functools.partial(
+                    matmul_reducescatter_pallas, axis="x",
+                    bidirectional=True))):
+            f = jax.jit(jax.shard_map(
+                fn, mesh=mesh4, in_specs=(P(None, None), P(None, None)),
+                out_specs=P("x", None), check_vma=False))
+            runs[name] = np.asarray(f(xs, ws))
+        np.testing.assert_array_equal(runs["fused"], runs["overlap"])
+
+
+class TestFusedTransportPolicy:
+    """TransportPolicy.tp="fused" is a validated spelling that pins the
+    in-kernel schedules at the artblock TP edges."""
+
+    def test_policy_validates_and_binds(self):
+        from repro.core.conduit import transports
+        from repro.dist.steps import TransportPolicy
+
+        assert "fused" in transports("all_gather")
+        assert "fused" in transports("reduce_scatter")
+        pol = TransportPolicy(tp="fused")
+        c = pol.tp_conduit("model")
+        assert c.transport == "fused"
+        # explicit transports pass straight through the schedule picker
+        assert c.matmul_schedule("all_gather", 1 << 20, 1e-4) == "fused"
+        assert c.matmul_schedule("reduce_scatter", 1 << 20, 1e-4) == "fused"
+
+    def test_fused_not_valid_for_moe(self):
+        from repro.dist.steps import TransportPolicy
+
+        with pytest.raises(ValueError, match="moe"):
+            TransportPolicy(moe="fused")
+
+    def test_tp_presets_resolve(self):
+        from repro.configs import TP_PRESETS, get_tp_preset
+        from repro.models.artblock import supports_art_tp
+
+        for name in TP_PRESETS:
+            preset = get_tp_preset(name)
+            assert supports_art_tp(preset.config, preset.tp_axis)
+            assert preset.step.transport.tp == "fused"
+
+
+class TestArtBlockFused:
+    """The artblock TP edges under a fused conduit: forward bit-identical
+    to the streamed overlap schedule, grads match the dense reference."""
+
+    def _mlp_inputs(self, n):
+        d, f = 16, 32
+        h = jax.random.normal(jax.random.PRNGKey(0), (2, n * 4, d))
+        m_in = jax.random.normal(jax.random.PRNGKey(1), (2, n * 4, d))
+        w_up = jax.random.normal(jax.random.PRNGKey(2), (d, f)) * 0.1
+        w_down = jax.random.normal(jax.random.PRNGKey(3), (f, d)) * 0.1
+        return h, m_in, w_up, w_down
+
+    def _cfg(self):
+        import dataclasses
+
+        from repro.configs import get_config
+
+        return dataclasses.replace(get_config("h2o-danube-1.8b").reduced(),
+                                   compute_dtype="float32")
+
+    def _run(self, mesh, cfg, transport, h, m_in, w_up, w_down, grad=False):
+        from repro.core.conduit import Conduit
+        from repro.models import artblock
+
+        n = mesh.shape["x"]
+
+        def part(h_, m_, wu, wd):
+            conduit = Conduit(axis="x", transport=transport)
+            return artblock.art_mlp_part(cfg, h_, m_, wu, None, wd,
+                                         conduit=conduit)
+
+        f = jax.shard_map(
+            part, mesh=mesh,
+            in_specs=(P(None, "x", None), P(None, "x", None),
+                      P(None, "x"), P("x", None)),
+            out_specs=P(None, "x", None), check_vma=False)
+        if not grad:
+            return np.asarray(jax.jit(f)(h, m_in, w_up, w_down))
+
+        def loss(wu, wd):
+            return jnp.sum(f(h, m_in, wu, wd) ** 2)
+
+        gu, gd = jax.jit(jax.grad(loss, argnums=(0, 1)))(w_up, w_down)
+        return np.asarray(gu), np.asarray(gd)
+
+    def test_forward_bitwise_vs_streamed(self, mesh4):
+        cfg = self._cfg()
+        h, m_in, w_up, w_down = self._mlp_inputs(mesh4.shape["x"])
+        fused = self._run(mesh4, cfg, "fused", h, m_in, w_up, w_down)
+        bidir = self._run(mesh4, cfg, "bidir", h, m_in, w_up, w_down)
+        np.testing.assert_array_equal(fused, bidir)
+
+    def test_grads_match_reference(self, mesh4):
+        from repro.models import layers as L
+
+        cfg = self._cfg()
+        h, m_in, w_up, w_down = self._mlp_inputs(mesh4.shape["x"])
+        gu, gd = self._run(mesh4, cfg, "fused", h, m_in, w_up, w_down,
+                           grad=True)
+
+        def ref_loss(wu, wd):
+            act = L._act(cfg.activation, m_in @ wu)
+            return jnp.sum((h + act @ wd) ** 2)
+
+        ru, rd = jax.grad(ref_loss, argnums=(0, 1))(w_up, w_down)
+        np.testing.assert_allclose(gu, np.asarray(ru), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(gd, np.asarray(rd), rtol=1e-4, atol=1e-4)

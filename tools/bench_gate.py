@@ -6,6 +6,10 @@ Two artifacts, one floor:
   preset operating point, the best-link streamed EP schedule must model
   ≥ 1.0× of bulk (the stronger > 1.2× acceptance claim is asserted inside
   the benchmark itself; the gate is the regression floor).
+* ``BENCH_overlap.json``, ``fused_tp`` suite — per TP preset operating
+  point (tokens/rank × edge op), the best-link fused collective matmul
+  (``kernels/cc_matmul``) must model ≥ 1.0× of the best XLA-level
+  streamed schedule (the strict > 1.0× claim lives in the benchmark).
 * ``BENCH_serve.json`` (``benchmarks/serve_bench.py``) — per serve preset
   operating point (arch × prompt length), the best-link chunked-prefill
   TTFT must model ≥ 1.0× of bulk prefill (the ≥ 1.3× QSFP acceptance
@@ -61,6 +65,41 @@ def check(path: str) -> int:
               f"{FLOOR}x: {failures}")
         return 1
     print("bench_gate: all preset operating points clear the floor")
+    return 0
+
+
+def check_fused(path: str) -> int:
+    """Fused gate: every TP preset operating point clears the floor."""
+    with open(path) as f:
+        payload = json.load(f)
+    rows = [r for r in payload.get("rows", [])
+            if r.get("source") == "tp-preset-model"]
+    if not rows:
+        print(f"bench_gate: no tp-preset-model rows in {path}")
+        return 1
+
+    points = {}
+    for r in rows:
+        key = (r["preset"], r["tokens_per_rank"], r["op"])
+        points.setdefault(key, []).append(r)
+    failures = []
+    for (preset, tokens, op), rs in sorted(points.items()):
+        best = max(rs, key=lambda r: r["speedup"])
+        status = "ok" if best["speedup"] >= FLOOR else "FAIL"
+        print(f"bench_gate: {preset} {op} @ {tokens} tok/rank: fused "
+              f"{best['speedup']:.2f}x vs {best['streamed_transport']} "
+              f"on {best['link']} [{status}]")
+        if best["speedup"] < FLOOR:
+            failures.append((preset, tokens, op, best["speedup"]))
+
+    claim = payload.get("claims", {}).get("fused_min_speedup_best_link")
+    print(f"bench_gate: worst best-link fused speedup across presets: "
+          f"{claim}")
+    if failures:
+        print(f"bench_gate: {len(failures)} fused operating point(s) below "
+              f"{FLOOR}x: {failures}")
+        return 1
+    print("bench_gate: all fused operating points clear the floor")
     return 0
 
 
@@ -126,5 +165,6 @@ if __name__ == "__main__":
     serve = sys.argv[2] if len(sys.argv) > 2 else os.path.join(
         REPO_ROOT, "BENCH_serve.json")
     rc = check(overlap)
+    rc = check_fused(overlap) or rc
     rc = check_serve(serve) or rc
     sys.exit(rc)

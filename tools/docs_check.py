@@ -34,7 +34,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 LINK_FILES = ["DESIGN.md", "ROADMAP.md", "examples/README.md"]
 DOCSTRING_ROOTS = ["src/repro/core", "src/repro/dist"]
 API_EXPORT_MODULES = ["src/repro/dist/__init__.py",
-                      "src/repro/runtime/__init__.py"]
+                      "src/repro/runtime/__init__.py",
+                      "src/repro/kernels/cc_matmul/__init__.py"]
 API_DOC = "docs/api.md"
 
 _LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")

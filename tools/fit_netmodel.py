@@ -145,6 +145,50 @@ def _crossovers(link, axis_size=4):
     return out
 
 
+def fit_hop_overhead(overlap_rows) -> dict:
+    """Per-hop launch overhead fitted from measured fused-vs-streamed walls.
+
+    The fused in-kernel schedule and the XLA-level streamed schedule run
+    the identical pipeline except for the per-hop launch/repack boundary
+    (``netmodel.hop_launch_overhead``): the streamed wall pays it ``n−1``
+    times, the fused wall once.  So each measured (op, axis_size) pair
+    identifies it as ``(wall_streamed − wall_fused) / (n − 1)`` (clamped
+    at 0 — CPU-mesh walls are noisy scheduling time, not link time; the
+    *method* is what re-runs per real topology).  Rows come from the
+    ``fused_tp`` measured suite of ``BENCH_overlap.json``
+    (``benchmarks/overlap_pipeline.py``).
+    """
+    rows = [r for r in overlap_rows
+            if r.get("suite") == "fused_tp"
+            and r.get("source") == "measured-cpu-mesh"]
+    walls = {}
+    for r in rows:
+        walls.setdefault((r["op"], r["axis_size"]), {})[r["schedule"]] = (
+            r["wall_us"])
+    samples = []
+    for (op, n), w in sorted(walls.items()):
+        if "streamed" in w and "fused" in w and n > 1:
+            samples.append(
+                {"op": op, "axis_size": n,
+                 "hop_overhead_us": max(
+                     0.0, (w["streamed"] - w["fused"]) / (n - 1))})
+    report = {"available": bool(samples), "samples": samples}
+    if samples:
+        report["fitted_hop_overhead_us"] = statistics.median(
+            s["hop_overhead_us"] for s in samples)
+        from repro.core import netmodel as nm
+
+        report["modeled_hop_overhead_us"] = {
+            "qsfp": 1e6 * nm.hop_launch_overhead(nm.FSHMEM_QSFP),
+            "ici": 1e6 * nm.hop_launch_overhead(nm.TPU_ICI),
+        }
+    else:
+        report["note"] = ("no measured fused_tp rows (model-only sweep) — "
+                          "run benchmarks/overlap_pipeline.py without "
+                          "--model-only first")
+    return report
+
+
 def fit_report(transport_path, moe_path) -> dict:
     """The ``netmodel_fit`` section ``BENCH_overlap.json`` embeds."""
     from repro.core import netmodel as nm
@@ -191,6 +235,7 @@ def main() -> int:
     if os.path.exists(overlap):
         with open(overlap) as f:
             payload = json.load(f)
+        report["hop_overhead"] = fit_hop_overhead(payload.get("rows", []))
         payload["netmodel_fit"] = report
         with open(overlap, "w") as f:
             json.dump(payload, f, indent=1)
