@@ -153,8 +153,111 @@ class ModelConfig:
         if self.family == "encdec":
             r.update(n_encoder_layers=2, encoder_seq=16, decoder_max_seq=32)
         if self.frontend:
-            r.update(frontend_tokens=8, frontend_dim=32)
+            # encdec frontends feed the encoder: the frame count must equal
+            # encoder_seq so the prefill cross-cache extent matches
+            # decode.init_cache's (which sizes it from encoder_seq)
+            r.update(frontend_tokens=16 if self.family == "encdec" else 8,
+                     frontend_dim=32)
         return dataclasses.replace(self, **r)
+
+
+# ---------------------------------------------------------------------------
+# serving capability table (jax-free — tools/docs_check.py imports this)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkCarrySpec:
+    """The per-architecture chunk-carry contract of streamed prefill.
+
+    What a prefill chunk hands to the next one (``models/prefill.py``
+    implements the matching ``init_prefill_scratch`` / ``prefill_chunk`` /
+    ``scratch_to_cache`` triple per ``kind``):
+
+    * ``ring`` — full-length K/V scratch rows (GQA dense / vlm / moe);
+    * ``latent`` — full-length MLA latent (``ckv``) + shared rope key rows;
+    * ``state`` — **constant-size** SSD state + conv tail (mamba2), riding
+      the ``ssd`` kernel's ``init_state`` resume hook;
+    * ``hybrid`` — the ``state`` pair per layer plus ring rows for the
+      shared attention blocks (zamba2);
+    * ``encdec`` — encoder output turned into cross-K/V once (chunk 0),
+      then decoder ring rows (whisper).
+
+    ``exact`` is the bit-identity claim: chunked ≡ bulk prefill, bit for
+    bit.  MoE is the one documented exception (``exact=False``): expert
+    capacity is bookkept per chunk, so the drop set may differ from bulk's
+    — each MoE layer's output agrees bitwise at every token whose
+    per-(token, expert) keep decisions match, and the whole forward is
+    exact when they match everywhere, in particular when no row overflows
+    either program (``models/prefill.moe_chunk_agree_mask`` states the
+    bound; the zoo suite asserts it).
+
+    ``chunk_multiple``: interior chunk cuts must land on multiples of this
+    (the SSD chunk walk of ``ssm_chunk``-sized blocks must line up with
+    bulk's for the state hand-off to be bit-exact); the server rounds its
+    ``prefill_chunk`` up to it.
+    """
+
+    kind: str              # ring | latent | state | hybrid | encdec
+    constant_size: bool    # carry size independent of the prompt length
+    exact: bool            # chunked ≡ bulk bit-identical
+    chunk_multiple: int    # interior cuts land on multiples of this
+    note: str = ""
+
+
+def chunk_carry_spec(cfg: ModelConfig) -> ChunkCarrySpec:
+    """The chunk-carry contract of ``cfg`` — total over the config zoo."""
+    if cfg.family == "ssm":
+        return ChunkCarrySpec(
+            "state", constant_size=True, exact=True,
+            chunk_multiple=max(1, cfg.ssm_chunk),
+            note="constant SSD state + conv tail per layer")
+    if cfg.family == "hybrid":
+        return ChunkCarrySpec(
+            "hybrid", constant_size=False, exact=True,
+            chunk_multiple=max(1, cfg.ssm_chunk),
+            note="SSD state pair + shared-attention ring rows")
+    if cfg.family == "encdec":
+        return ChunkCarrySpec(
+            "encdec", constant_size=False, exact=True, chunk_multiple=1,
+            note="cross-K/V once at chunk 0, decoder ring rows after")
+    if cfg.attn_type == "mla":
+        return ChunkCarrySpec(
+            "latent", constant_size=False, exact=True, chunk_multiple=1,
+            note="latent ckv + shared rope key rows")
+    if cfg.family == "moe":
+        return ChunkCarrySpec(
+            "ring", constant_size=False, exact=False, chunk_multiple=1,
+            note="chunk-local expert capacity — exact iff no row drops")
+    return ChunkCarrySpec("ring", constant_size=False, exact=True,
+                          chunk_multiple=1, note="K/V ring rows")
+
+
+def serving_features(cfg: ModelConfig) -> "dict[str, bool]":
+    """Arch × serving-feature support row (the docs/serving.md matrix).
+
+    ``chunked``: the chunk-carry contract exists (it is total — every arch
+    chunks; the *runtime* gate ``models/prefill.chunk_support`` may still
+    fall back to bulk when the resolved attention impl lacks the
+    mid-sequence ``q_offset`` convention, with a build warning).
+    ``chunked_exact``: the bit-identity claim of :func:`chunk_carry_spec`.
+    ``paged`` / ``prefix_cache``: the paged KV block pool and its
+    prompt-prefix sharing (ring K/V caches only; sharing additionally
+    needs position-stable slots — no SWA wrap — and byte-keyable prompts,
+    which frontend embeddings are not).  ``ep_decode``: expert-parallel
+    decode dispatch over the conduit.
+    """
+    spec = chunk_carry_spec(cfg)
+    paged = (cfg.family in ("dense", "vlm", "moe")
+             and cfg.attn_type != "mla")
+    return {
+        "chunked": True,
+        "chunked_exact": spec.exact,
+        "paged": paged,
+        "prefix_cache": (paged and cfg.window is None
+                         and not cfg.frontend),
+        "ep_decode": cfg.family == "moe",
+    }
 
 
 # Input-shape cells assigned to every LM arch (task spec).

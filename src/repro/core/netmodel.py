@@ -357,6 +357,57 @@ def serve_prefill_time(
     return pipeline_time([t_compute / c] * c, [tx] * c)
 
 
+def carried_prefill_time(
+    link: LinkParams,
+    t_compute: float,
+    row_bytes: float,
+    carry_bytes: float,
+    n_chunks: int,
+    packet_size: int,
+    once_bytes: float = 0.0,
+) -> float:
+    """TTFT model of a *carried* streamed prefill — the chunk-carry
+    contract's generalization of :func:`serve_prefill_time`.
+
+    ``row_bytes``: the per-position cache rows the prompt writes in total
+    (K/V ring rows, MLA latents — split evenly over chunks);
+    ``carry_bytes``: the per-chunk hand-off that rides every chunk's PUT
+    (the constant-size SSD state pair — for ring carries the rows *are*
+    the carry and this is 0); ``once_bytes``: one-time payload on chunk
+    0's wire (the encdec cross-K/V the encoder materializes once).
+
+    ``n_chunks = 1`` is bulk: compute fully, then one PUT of everything.
+    Chunked, chunk *k*'s PUT rides under later chunks' compute
+    (:func:`pipeline_time`).  The compute split is built by accumulation
+    so it sums to *exactly* ``t_compute`` in floats (Sterbenz: the
+    remainder ``t_compute − acc`` is exact for ``acc ∈ [t/2, t]``) —
+    a pure-state arch (``row_bytes == 0``) whose per-chunk PUT fits under
+    one chunk's compute therefore models *exactly* 1.0× vs bulk, which is
+    the honest claim: a constant-size carry has no growing transfer to
+    hide, streaming buys admission interleaving, not TTFT.
+    """
+    c = max(1, int(n_chunks))
+    total = int(row_bytes) + int(carry_bytes) + int(once_bytes)
+    if c == 1:
+        return t_compute + put_time(link, total, packet_size)
+    per_rows = -(-int(row_bytes) // c) if row_bytes else 0
+    wires = [
+        put_time(link,
+                 per_rows + int(carry_bytes) + (int(once_bytes) if k == 0
+                                                else 0),
+                 packet_size)
+        for k in range(c)
+    ]
+    base = t_compute / c
+    acc = 0.0
+    computes = []
+    for _ in range(c - 1):
+        computes.append(base)
+        acc += base
+    computes.append(t_compute - acc)
+    return pipeline_time(computes, wires)
+
+
 def block_push_time(
     link: LinkParams,
     block_bytes: float,

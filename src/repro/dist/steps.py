@@ -74,6 +74,7 @@ from repro.models.decode import (
 )
 from repro.models.model import init_params
 from repro.models.prefill import (
+    chunk_support,
     init_prefill_scratch,
     prefill,
     prefill_chunk,
@@ -627,16 +628,23 @@ def build_serve_step(cfg: ModelConfig, mesh, scfg: StepConfig,
 
 def build_prefill_chunk_step(cfg: ModelConfig, mesh, scfg: StepConfig,
                              batch: int, prompt_len: int,
-                             lo: int, chunk_len: int) -> StepBundle:
-    """``fn(params, scratch, tokens) -> (scratch, logits)``: one incremental
-    prefill chunk at static offset ``lo`` (the server's admission step).
+                             lo: int, chunk_len: int,
+                             with_frontend: Optional[Tuple[int, int]] = None,
+                             ) -> StepBundle:
+    """``fn(params, scratch, tokens[, frontend]) -> (scratch, logits)``: one
+    incremental prefill chunk at static offset ``lo`` (the server's
+    admission step), for whichever carry kind the arch declares
+    (``configs.base.chunk_carry_spec``).
 
     The scratch is **donated** (same spec in and out), so each chunk
-    updates the K/V buffers in place; the final chunk's logits seed the
-    request's first decode token.  Requires
-    ``models/prefill.supports_chunked_prefill(cfg)``.
+    updates the carry buffers in place; the final chunk's logits seed the
+    request's first decode token.  ``with_frontend=(n_rows, dim)`` adds a
+    frontend-embedding argument — the chunk's fe-row slice for vlm, the
+    full frame tensor on the encdec chunk 0.  Requires
+    ``models/prefill.chunk_support(cfg)``.
     """
-    assert supports_chunked_prefill(cfg), cfg.name
+    ok, why = chunk_support(cfg)
+    assert ok, f"{cfg.name}: {why}"
     params_shape, _ = _state_shapes(cfg, scfg)
     pspecs = param_pspecs(cfg, mesh, params_shape)
     constrain = _constraint_fn(cfg, mesh, scfg)
@@ -647,6 +655,33 @@ def build_prefill_chunk_step(cfg: ModelConfig, mesh, scfg: StepConfig,
     b_entry = fit_axis(mesh, dp, batch)
     tok_spec = P(b_entry, None)
     logit_spec = P(b_entry, None)
+
+    if with_frontend is not None:
+        fe_spec = P(b_entry, None, None)
+
+        def fn_(params, scratch, tokens, frontend):
+            with activation_sharding(constrain):
+                return prefill_chunk(cfg, params, scratch, tokens, lo,
+                                     frontend_embeds=frontend)
+
+        fn = jax.jit(
+            fn_,
+            in_shardings=(to_shardings(mesh, pspecs),
+                          to_shardings(mesh, sspecs),
+                          NamedSharding(mesh, tok_spec),
+                          NamedSharding(mesh, fe_spec)),
+            out_shardings=(to_shardings(mesh, sspecs),
+                           NamedSharding(mesh, logit_spec)),
+            donate_argnums=(1,))
+        return StepBundle(
+            fn=fn,
+            in_specs=(pspecs, sspecs, tok_spec, fe_spec),
+            out_specs=(sspecs, logit_spec),
+            aux={"params_shape": params_shape,
+                 "scratch_shape": scratch_shape,
+                 "lo": lo, "chunk_len": chunk_len,
+                 "with_frontend": with_frontend},
+        )
 
     def fn_(params, scratch, tokens):
         with activation_sharding(constrain):

@@ -75,19 +75,28 @@ def main():
         prefill_chunk=args.prefill_chunk or None,
         paged=args.paged, block_size=args.block_size))
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, cfg.vocab_size, size=args.prompt_len)
+    plen = args.prompt_len
+    if cfg.family == "encdec":
+        plen = min(plen, cfg.decoder_max_seq)
+    prompts = [rng.integers(0, cfg.vocab_size, size=plen)
                for _ in range(args.requests)]
+    if cfg.frontend:
+        # multimodal archs: synthetic per-request frontend embeds (the
+        # vision/audio tower output the server carries through admission)
+        prompts = [
+            (pr, rng.standard_normal(
+                (cfg.frontend_tokens, cfg.frontend_dim), dtype=np.float32))
+            for pr in prompts]
 
     if args.arrive_every:
         steps = drive_arrivals(srv, prompts, args.arrive_every)
     else:
         for pr in prompts:
-            srv.submit(pr)
+            srv.submit(*pr) if isinstance(pr, tuple) else srv.submit(pr)
         steps = srv.run()
 
     stats = srv.stats()
-    mode = (f"chunked({args.prefill_chunk})" if srv.chunked_admission
-            else "bulk")
+    mode = str(stats["admission_mode"])
     if args.paged:
         mode += f"+paged(blk{args.block_size})"
     print(f"[serve:{mode}] {stats['requests']} requests, "

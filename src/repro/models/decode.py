@@ -140,9 +140,13 @@ def supports_paged(cfg: ModelConfig) -> bool:
 
     Requires the GQA ring-buffer cache (dense/vlm/moe non-MLA) — the
     families whose ``k``/``v`` leaves the block table indirects.  MLA
-    latents, SSM state and the encdec cross-cache stay contiguous.
+    latents, SSM state and the encdec cross-cache stay contiguous.  The
+    rule itself lives in the jax-free capability table
+    (``configs.base.serving_features``) so docs and tools can query it.
     """
-    return cfg.family in ("dense", "vlm", "moe") and cfg.attn_type != "mla"
+    from repro.configs.base import serving_features
+
+    return serving_features(cfg)["paged"]
 
 
 def paged_slot_blocks(cfg: ModelConfig, max_seq: int, block_size: int) -> int:

@@ -617,10 +617,17 @@ def init_mamba2(cfg: ModelConfig, key) -> Params:
     }
 
 
-def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
-    """Depthwise causal conv over seq.  x: (B, S, C); w: (K, C)."""
+def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                   pad: bool = True) -> jnp.ndarray:
+    """Depthwise causal conv over seq.  x: (B, S, C); w: (K, C).
+
+    ``pad=False`` skips the leading zero-pad: the caller has already
+    prepended the (K−1) preceding raw rows (the chunked-prefill conv
+    resume), so VALID alignment alone yields the causal outputs — the same
+    conv the padded call runs, since concatenated zeros and pad zeros are
+    the same input tensor."""
     k = w.shape[0]
-    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0))) if pad else x
     out = lax.conv_general_dilated(
         xp, w[:, None, :],          # (K, 1, C) HIO with feature groups
         window_strides=(1,), padding="VALID",
@@ -630,12 +637,17 @@ def _causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarra
     return out + b
 
 
-def ssd_jnp(x, dtv, a, bmat, cmat, d_skip, chunk: int):
+def ssd_jnp(x, dtv, a, bmat, cmat, d_skip, chunk: int, init_state=None):
     """Chunked SSD in pure jnp (same math as the Pallas kernel): scan over
     chunks carrying the (H, N, P) state; intra-chunk work is batched matmuls.
 
     x: (B, S, H, P); dtv: (B, S, H); a: (H,); bmat/cmat: (B, S, G, N).
     Returns (y, final_state (B, H, N, P) fp32).
+
+    ``init_state`` resumes the chunk walk from a carried (B, H, N, P) fp32
+    state (the streamed-prefill hand-off) instead of zeros — bit-identical
+    to one bulk call over the concatenated sequence whenever the resume
+    point is a multiple of ``chunk`` (the walk visits the same blocks).
     """
     bsz, s, h, p = x.shape
     g, n = bmat.shape[2], bmat.shape[3]
@@ -677,7 +689,8 @@ def ssd_jnp(x, dtv, a, bmat, cmat, d_skip, chunk: int):
             "blhn,blhp->bhnp", bh * decay_end[..., None], xf)
         return state, y
 
-    state0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    state0 = (jnp.zeros((bsz, h, n, p), jnp.float32) if init_state is None
+              else init_state.astype(jnp.float32))
     final, ys = lax.scan(step, state0, (xs, dts, bs, cs))
     y = jnp.moveaxis(ys, 0, 1).reshape(bsz, nc * chunk, h, p)[:, :s]
     y = y + d_skip[None, None, :, None] * x[:, :s].astype(jnp.float32)
@@ -685,11 +698,20 @@ def ssd_jnp(x, dtv, a, bmat, cmat, d_skip, chunk: int):
 
 
 def mamba2_block(cfg: ModelConfig, params: Params, x: jnp.ndarray,
-                 return_state: bool = False):
+                 return_state: bool = False, init_state=None,
+                 conv_state=None):
     """x: (B, S, D) -> (B, S, D).  Mamba-2 block: in_proj → causal conv →
     SSD (Pallas kernel on TPU, chunked jnp elsewhere) → gated RMSNorm →
     out_proj.  ``return_state`` also returns the decode cache contents:
-    (final ssm state (B,H,N,P) fp32, conv tail (B, conv−1, C) raw pre-conv)."""
+    (final ssm state (B,H,N,P) fp32, conv tail (B, conv−1, C) raw pre-conv).
+
+    ``init_state`` / ``conv_state`` resume a *mid-sequence* forward (the
+    streamed-prefill chunk carry): ``init_state`` seeds the SSD chunk walk
+    and ``conv_state`` supplies the (conv−1) raw pre-conv rows preceding
+    this slice, which are prepended so the depthwise conv runs VALID over
+    the extended stream — the exact rows the bulk conv would see.  With
+    zero carries this is bitwise the plain call (prepended zeros ≡ the
+    causal zero-pad), so chunk 0 needs no special case."""
     b, s, _ = x.shape
     h, p, g, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_groups, cfg.ssm_state
     d_in = h * p
@@ -701,15 +723,25 @@ def mamba2_block(cfg: ModelConfig, params: Params, x: jnp.ndarray,
     xbc = zxbcdt[..., d_in: 2 * d_in + 2 * g * n]
     dt_raw = zxbcdt[..., 2 * d_in + 2 * g * n:]
 
-    if return_state:
-        # decode resumes the depthwise conv from the last (conv−1) raw inputs
-        tail_len = cfg.ssm_conv - 1
-        pad = max(0, tail_len - s)
-        tail_src = jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0))) if pad else xbc
-        conv_tail = tail_src[:, -tail_len:, :]
-
-    xbc = _causal_conv1d(xbc, params["conv_w"].astype(cd),
-                         params["conv_b"].astype(cd))
+    tail_len = cfg.ssm_conv - 1
+    if conv_state is not None:
+        # resume: the raw rows preceding this slice, carried by the caller
+        assert conv_state.shape[1] == tail_len, conv_state.shape
+        ext = jnp.concatenate([conv_state.astype(cd), xbc], axis=1)
+        if return_state:
+            conv_tail = ext[:, ext.shape[1] - tail_len:, :]
+        xbc = _causal_conv1d(ext, params["conv_w"].astype(cd),
+                             params["conv_b"].astype(cd), pad=False)
+    else:
+        if return_state:
+            # decode resumes the depthwise conv from the last (conv−1) raw
+            # inputs
+            pad = max(0, tail_len - s)
+            tail_src = (jnp.pad(xbc, ((0, 0), (pad, 0), (0, 0)))
+                        if pad else xbc)
+            conv_tail = tail_src[:, -tail_len:, :]
+        xbc = _causal_conv1d(xbc, params["conv_w"].astype(cd),
+                             params["conv_b"].astype(cd))
     xbc = jax.nn.silu(xbc)
     xs = xbc[..., :d_in].reshape(b, s, h, p)
     bmat = xbc[..., d_in: d_in + g * n].reshape(b, s, g, n)
@@ -741,14 +773,15 @@ def mamba2_block(cfg: ModelConfig, params: Params, x: jnp.ndarray,
                         bmat[:, lo:hi], cmat[:, lo:hi])
 
             y, state = ssd_chunk_fed(fetch, len(cuts), a, params["d_skip"],
-                                     chunk=cfg.ssm_chunk)
+                                     chunk=cfg.ssm_chunk,
+                                     init_state=init_state)
         else:
             y, state = ssd_kernel(xs, dtv, a, bmat, cmat, params["d_skip"],
-                                  chunk=cfg.ssm_chunk)
+                                  chunk=cfg.ssm_chunk, init_state=init_state)
         y = y.astype(jnp.float32)
     else:
         y, state = ssd_jnp(xs, dtv, a, bmat, cmat, params["d_skip"],
-                           chunk=cfg.ssm_chunk)
+                           chunk=cfg.ssm_chunk, init_state=init_state)
 
     y = y.reshape(b, s, d_in).astype(cd)
     y = rms_norm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)

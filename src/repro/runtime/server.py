@@ -12,11 +12,18 @@ pipeline scheduler:
   prefill work interleaves with decode steps instead of blocking them —
   chunked prefill admission kills the head-of-line blocking a long prompt
   used to impose on every decoding request.  The finished scratch is
-  ring-filled into a single-request cache and written into its batch row
+  converted into a single-request cache and written into its batch row
   with one donated ``dynamic_update_slice`` per leaf
-  (``build_slot_write_step`` — the per-slot PUT).  Archs outside
-  ``supports_chunked_prefill`` (and ``prefill_chunk=None``) admit with one
-  bulk per-slot prefill instead — same numerics, whole-prompt latency.
+  (``build_slot_write_step`` — the per-slot PUT).  Every arch in the zoo
+  rides this path with its own chunk carry
+  (``configs.base.chunk_carry_spec``: K/V ring rows, MLA latents,
+  constant-size SSD state, the hybrid pair, encoder-once cross-K/V); the
+  one runtime gate is ``models/prefill.chunk_support`` (the blockwise
+  attention impl), and a gated arch — or ``prefill_chunk=None`` — admits
+  with one bulk per-slot prefill instead, *with* a build warning and a
+  ``stats()['admission_mode']`` signal (same numerics, whole-prompt
+  latency).  Chunk sizes round up to the carry's ``chunk_multiple`` so
+  SSD state hand-offs stay on ``ssm_chunk`` boundaries.
 * **Decode** runs the donated ``build_serve_step`` with ``sample=True``:
   per-slot positions let every cache row advance independently, argmax
   runs on device, and the server fetches one stacked ``(B,)`` id vector
@@ -44,6 +51,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional
 
 import jax
@@ -51,7 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
-from repro.configs.base import ModelConfig
+from repro.configs.base import ModelConfig, chunk_carry_spec
 from repro.dist.steps import (
     StepConfig,
     build_block_write_step,
@@ -69,12 +77,12 @@ from repro.models.decode import (
 )
 from repro.models.prefill import (
     cache_to_blocks,
+    chunk_support,
     init_prefill_scratch,
     prefill_chunk_cuts,
     scratch_to_blocks,
     scratch_to_cache,
     seed_scratch_from_blocks,
-    supports_chunked_prefill,
 )
 
 
@@ -238,9 +246,24 @@ class Server:
         self.mesh = mesh
         self.scfg = scfg or StepConfig()
         assert srv.greedy, "only greedy sampling is implemented"
-        self._chunkable = (supports_chunked_prefill(cfg)
-                           and not cfg.frontend
-                           and bool(srv.prefill_chunk))
+        ok, why = chunk_support(cfg)
+        if srv.prefill_chunk and not ok:
+            # never fall back silently: admission mode is a serving
+            # property the operator asked for
+            warnings.warn(
+                f"{cfg.name}: chunked prefill requested "
+                f"(prefill_chunk={srv.prefill_chunk}) but unsupported — "
+                f"{why}; admitting with bulk per-slot prefill",
+                stacklevel=2)
+        self._chunkable = ok and bool(srv.prefill_chunk)
+        self._fallback_reason = ("" if self._chunkable
+                                 else (why if srv.prefill_chunk
+                                       else "prefill_chunk disabled"))
+        # chunk sizes round up to the carry contract's multiple (SSD state
+        # hand-off is bit-exact only on ssm_chunk boundaries)
+        mult = chunk_carry_spec(cfg).chunk_multiple
+        self._eff_chunk = (-(-int(srv.prefill_chunk) // mult) * mult
+                           if self._chunkable else 0)
         self._paged = bool(srv.paged)
         if self._paged:
             assert supports_paged(cfg), \
@@ -251,9 +274,9 @@ class Server:
             self._n_blocks = int(srv.n_blocks or
                                  srv.max_batch * (1 + self._npb) + self._npb)
             if srv.prefix_cache and self._chunkable:
-                assert self._blk % srv.prefill_chunk == 0, (
+                assert self._blk % self._eff_chunk == 0, (
                     "prefix caching needs block_size to be a multiple of "
-                    f"prefill_chunk ({self._blk} % {srv.prefill_chunk})")
+                    f"the effective chunk ({self._blk} % {self._eff_chunk})")
             self.pool = BlockPool(self._n_blocks, reserved=srv.max_batch)
             self.bundle = build_serve_step(
                 cfg, mesh, self.scfg, batch=srv.max_batch,
@@ -313,24 +336,33 @@ class Server:
 
     @property
     def chunked_admission(self) -> bool:
-        """Whether admission actually runs as streamed prefill chunks
-        (archs outside ``supports_chunked_prefill`` — and frontend archs —
-        admit with one bulk per-slot prefill regardless of
-        ``ServerConfig.prefill_chunk``)."""
+        """Whether admission actually runs as streamed prefill chunks.
+        False means every prompt admits with one bulk per-slot prefill —
+        either ``ServerConfig.prefill_chunk`` is disabled or the arch is
+        gated out by ``models/prefill.chunk_support`` (in which case the
+        constructor warned and ``stats()['admission_fallback']`` carries
+        the reason)."""
         return self._chunkable
+
+    def _eff_len(self, s: int) -> int:
+        """Prefill-row count of an ``s``-token prompt: vlm frontend rows
+        prefix the token rows (they are positions in the same scratch);
+        encdec frames feed the encoder, not the decoder stream."""
+        if self.cfg.frontend and self.cfg.family != "encdec":
+            return s + self.cfg.frontend_tokens
+        return s
 
     # -- request intake -------------------------------------------------------
 
     def submit(self, prompt: np.ndarray,
                frontend_embeds: Optional[np.ndarray] = None) -> int:
         prompt = np.asarray(prompt, np.int32)
-        eff = prompt.size + (self.cfg.frontend_tokens
-                             if self.cfg.frontend else 0)
+        eff = self._eff_len(prompt.size)
         assert prompt.ndim == 1 and 0 < eff <= self.srv.max_seq, (
             prompt.shape, self.srv.max_seq)
+        if self.cfg.family == "encdec":
+            assert prompt.size <= self.cfg.decoder_max_seq, prompt.shape
         if self.cfg.frontend:
-            assert self.cfg.family != "encdec", \
-                "encdec serving is not implemented"
             assert frontend_embeds is not None, (
                 f"{self.cfg.name} requires frontend embeddings per request")
             frontend_embeds = np.asarray(frontend_embeds, np.float32)
@@ -361,15 +393,15 @@ class Server:
                 req.phase = "prefill"
                 req._cursor = 0
                 if self._chunkable:
-                    req._scratch = self._scratch_init(int(req.prompt.size))()
+                    se = self._eff_len(int(req.prompt.size))
+                    req._scratch = self._scratch_init(se)()
                     if self._paged and req._shared:
-                        req._scratch = self._seed_fn(
-                            int(req.prompt.size), req._shared)(
-                                req._scratch, self.cache,
-                                jnp.asarray(req._blocks[:req._shared],
-                                            jnp.int32))
+                        req._scratch = self._seed_fn(se, req._shared)(
+                            req._scratch, self.cache,
+                            jnp.asarray(req._blocks[:req._shared],
+                                        jnp.int32))
                         req._cursor = (req._shared * self._blk
-                                       // self.srv.prefill_chunk)
+                                       // self._eff_chunk)
                 self.slots[i] = req
 
     # -- paged block accounting ----------------------------------------------
@@ -379,7 +411,7 @@ class Server:
         sharing is copy-on-write (shared blocks are never rewritten), so
         decode must be provably unable to ring-wrap into them."""
         return (self._paged and self.srv.prefix_cache and self._chunkable
-                and self.cfg.window is None
+                and self.cfg.window is None and not self.cfg.frontend
                 and s + self.srv.max_new_tokens <= self._sb)
 
     def _m_max(self, s: int) -> int:
@@ -417,17 +449,23 @@ class Server:
         req._shared = len(shared)
         return True
 
-    def _seed_fn(self, s: int, m: int):
+    def _scratch_specs(self, se: int):
+        """Shardings of the size-``se`` prefill scratch (committed arrays
+        must match the chunk bundles' in-sharding exactly)."""
+        from repro.dist.sharding import cache_pspecs, to_shardings
+        cfg = self.cfg
+        shape = jax.eval_shape(lambda: init_prefill_scratch(cfg, 1, se))
+        return to_shardings(self.mesh,
+                            cache_pspecs(cfg, self.mesh, shape))
+
+    def _seed_fn(self, se: int, m: int):
         """Jitted prefix-hit seeder: gather ``m`` shared blocks out of the
         pool into positions ``[0, m·blk)`` of a fresh scratch (donated),
         so chunked prefill resumes at the first uncached chunk."""
-        key = (s, m)
+        key = (se, m)
         if key not in self._seed_fns:
-            from repro.dist.sharding import to_shardings
             cfg = self.cfg
-            bundle = self._chunk_bundle(s, 0, min(
-                self.srv.prefill_chunk or s, s))
-            ssh = to_shardings(self.mesh, bundle.in_specs[1])
+            ssh = self._scratch_specs(se)
 
             def _seed(scratch, cache, bids):
                 bk = jnp.take(cache["kp"], bids, axis=1)
@@ -476,26 +514,28 @@ class Server:
 
     # -- prefill scheduling ---------------------------------------------------
 
-    def _chunk_bundle(self, s: int, lo: int, c: int):
-        key = (s, lo, c)
+    def _chunk_bundle(self, se: int, lo: int, c: int,
+                      n_fe: Optional[int] = None):
+        """Chunk-step bundle for a size-``se`` scratch at offset ``lo``.
+        ``n_fe``: frontend rows riding this chunk (the vlm fe-row slice,
+        or the full frame tensor on the encdec chunk 0)."""
+        key = (se, lo, c, n_fe)
         if key not in self._chunk_bundles:
+            wf = ((n_fe, self.cfg.frontend_dim) if n_fe is not None
+                  else None)
             self._chunk_bundles[key] = build_prefill_chunk_step(
-                self.cfg, self.mesh, self.scfg, batch=1, prompt_len=s,
-                lo=lo, chunk_len=c)
+                self.cfg, self.mesh, self.scfg, batch=1, prompt_len=se,
+                lo=lo, chunk_len=c, with_frontend=wf)
         return self._chunk_bundles[key]
 
-    def _scratch_init(self, s: int):
-        """Jitted scratch allocator, sharded like the chunk step's input
-        (committed arrays must match the bundle's in-sharding exactly)."""
-        if s not in self._scratch_inits:
-            from repro.dist.sharding import to_shardings
-            bundle = self._chunk_bundle(s, 0, min(
-                self.srv.prefill_chunk or s, s))
+    def _scratch_init(self, se: int):
+        """Jitted scratch allocator, sharded like the chunk step's input."""
+        if se not in self._scratch_inits:
             cfg = self.cfg
-            self._scratch_inits[s] = jax.jit(
-                lambda: init_prefill_scratch(cfg, 1, s),
-                out_shardings=to_shardings(self.mesh, bundle.in_specs[1]))
-        return self._scratch_inits[s]
+            self._scratch_inits[se] = jax.jit(
+                lambda: init_prefill_scratch(cfg, 1, se),
+                out_shardings=self._scratch_specs(se))
+        return self._scratch_inits[se]
 
     def _bulk_fn(self, s: int):
         if s not in self._bulk_bundles:
@@ -557,20 +597,43 @@ class Server:
             self._emit_first_token(i, req, logits)
             return
 
-        cuts = prefill_chunk_cuts(s, chunk_len=self.srv.prefill_chunk)
+        se = self._eff_len(s)
+        cuts = prefill_chunk_cuts(se, chunk_len=self._eff_chunk)
         lo, hi = cuts[req._cursor]
-        fn = self._chunk_bundle(s, lo, hi - lo).fn
-        req._scratch, logits = fn(self.params, req._scratch,
-                                  toks[:, lo:hi])
+        cfg = self.cfg
+        if cfg.family == "encdec":
+            # frames feed the encoder exactly once, on chunk 0
+            n_fe = cfg.frontend_tokens if lo == 0 else None
+            fe = (jnp.asarray(req.frontend_embeds[None, :])
+                  if lo == 0 else None)
+            tok_slice = toks[:, lo:hi]
+        elif cfg.frontend:
+            # vlm: frontend rows prefix the token rows of the scratch —
+            # slice each exactly as the bulk concat lays them out
+            ft = cfg.frontend_tokens
+            n_fe = max(0, min(hi, ft) - lo) if lo < ft else None
+            fe = (jnp.asarray(req.frontend_embeds[None, lo:min(hi, ft)])
+                  if n_fe else None)
+            if n_fe == 0:
+                n_fe = None
+            tok_slice = toks[:, max(0, lo - ft):max(0, hi - ft)]
+        else:
+            n_fe, fe = None, None
+            tok_slice = toks[:, lo:hi]
+        fn = self._chunk_bundle(se, lo, hi - lo, n_fe).fn
+        args = (self.params, req._scratch, tok_slice)
+        if n_fe is not None:
+            args += (fe,)
+        req._scratch, logits = fn(*args)
         req._cursor += 1
         if req._cursor < len(cuts):
             return                          # more chunks; decode proceeds
         if self._paged:
-            blocks = self._blocks_fn(s)(req._scratch)
+            blocks = self._blocks_fn(se)(req._scratch)
             req._scratch = None
             self._install_paged(i, req, blocks)
         else:
-            cache1 = self._finish_fn(s)(req._scratch)
+            cache1 = self._finish_fn(se)(req._scratch)
             req._scratch = None
             self.cache = self.writer.fn(self.cache, cache1, jnp.int32(i))
         self._emit_first_token(i, req, logits)
@@ -645,7 +708,7 @@ class Server:
 
     # -- metrics ---------------------------------------------------------------
 
-    def stats(self) -> Dict[str, float]:
+    def stats(self) -> Dict[str, object]:
         lat = [r.finished - r.submitted for r in self.done if r.finished]
         ttft = [r.first_token - r.submitted for r in self.done
                 if r.first_token]
@@ -662,6 +725,11 @@ class Server:
             "mean_latency_s": float(np.mean(lat)) if lat else 0.0,
             "mean_ttft_s": float(np.mean(ttft)) if ttft else 0.0,
             "mean_itl_s": float(np.mean(itl)) if itl else 0.0,
+            # admission mode is part of the serving surface: no arch may
+            # fall back to bulk without this signal (and a build warning)
+            "admission_mode": (f"chunked({self._eff_chunk})"
+                               if self._chunkable else "bulk"),
+            "admission_fallback": self._fallback_reason,
         }
         if self._paged:
             out.update({
@@ -676,13 +744,21 @@ class Server:
 def drive_arrivals(server: Server, prompts, every: int,
                    max_steps: int = 10_000) -> int:
     """Run ``server`` under synthetic arrivals: one prompt up front, one
-    more every ``every`` scheduler ticks, until the queue drains.  The one
-    arrival loop both the CLI (``launch/serve.py --arrive-every``) and the
-    measured benchmark section (``benchmarks/serve_bench.py``) drive, so
-    they always measure the same workload.  Returns the tick count.
+    more every ``every`` scheduler ticks, until the queue drains.  Each
+    item is a prompt array, or a ``(prompt, frontend_embeds)`` pair for
+    frontend archs (vlm patches / encdec frames).  The one arrival loop
+    both the CLI (``launch/serve.py --arrive-every``) and the measured
+    benchmark section (``benchmarks/serve_bench.py``) drive, so they
+    always measure the same workload.  Returns the tick count.
     """
+    def _submit(item):
+        if isinstance(item, tuple):
+            server.submit(item[0], item[1])
+        else:
+            server.submit(item)
+
     pending = list(prompts)
-    server.submit(pending.pop(0))
+    _submit(pending.pop(0))
     steps = 0
     while ((pending or server.queue
             or any(s is not None for s in server.slots))
@@ -690,5 +766,5 @@ def drive_arrivals(server: Server, prompts, every: int,
         server.step()
         steps += 1
         if pending and steps % max(1, every) == 0:
-            server.submit(pending.pop(0))
+            _submit(pending.pop(0))
     return steps

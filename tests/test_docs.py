@@ -109,12 +109,29 @@ class TestDocSnippets:
 
 
 class TestDocsGate:
-    def test_links_and_docstrings(self):
+    @staticmethod
+    def _docs_check():
         import importlib.util
 
         spec = importlib.util.spec_from_file_location(
             "docs_check", os.path.join(REPO, "tools", "docs_check.py"))
         mod = importlib.util.module_from_spec(spec)
         spec.loader.exec_module(mod)
+        return mod
+
+    def test_links_and_docstrings(self):
+        mod = self._docs_check()
         assert mod.check_links() == []
         assert mod.check_docstrings() == []
+
+    def test_serving_matrix_mirrors_capability_table(self):
+        """The arch × serving-feature matrix in docs/serving.md is
+        machine-checked against repro.configs.base in both directions —
+        here with jax importable, so the check cannot be skipped (the
+        no-jax CI docs job skips it by design)."""
+        mod = self._docs_check()
+        assert mod.check_serving_matrix() == []
+        rows = mod._parse_serving_matrix(
+            _read(os.path.join(DOCS, "serving.md")))
+        from repro.configs import ARCH_NAMES
+        assert set(rows) == set(ARCH_NAMES)

@@ -37,6 +37,7 @@ from repro.models.decode import (
 from repro.models.model import init_params
 from repro.models.prefill import (
     cache_to_blocks,
+    chunk_support,
     init_prefill_scratch,
     prefill,
     prefill_chunk,
@@ -121,9 +122,17 @@ class TestChunkedPrefill:
         cb, lb2 = decode_step(cfg, params, cb, nxt)
         np.testing.assert_array_equal(np.asarray(la2), np.asarray(lb2))
 
-    def test_unsupported_family_falls_back_to_bulk(self):
-        cfg, params = _setup("mamba2-2.7b")
+    def test_pallas_attn_gated_falls_back_to_bulk(self):
+        """A forced fused-attention (pallas) impl can't take the chunk
+        path's mid-sequence ``q_offset``, so the gate names that reason
+        and ``prefill_chunked`` falls back to bulk — while pure-SSM archs
+        chunk under *any* impl (their carry is SSD state, not
+        attention)."""
+        cfg, params = _setup("smollm-360m", attn_impl="pallas")
+        ok, why = chunk_support(cfg)
+        assert not ok and "pallas" in why
         assert not supports_chunked_prefill(cfg)
+        assert supports_chunked_prefill(get_config("mamba2-2.7b").reduced())
         toks = _tokens(cfg, 1, 8)
         ca, la = prefill(cfg, params, toks, cache_len=16)
         cb, lb = prefill_chunked(cfg, params, toks, cache_len=16,
@@ -339,8 +348,8 @@ class TestEPDecode:
 class TestFrontendServing:
     def test_vlm_requests_carry_embeds(self, mesh22):
         """Frontend (vlm) archs serve through real per-slot prefill with
-        per-request embeddings (bulk admission; the chunk path is
-        text-only)."""
+        per-request embeddings (bulk admission here; the chunked flavor
+        is covered zoo-wide by tests/test_zoo.py)."""
         from repro.dist.sharding import param_pspecs, to_shardings
         from repro.runtime.server import Server, ServerConfig
         cfg = get_config("internvl2-2b").reduced()

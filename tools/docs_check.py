@@ -19,6 +19,16 @@ Two checks, both exit-code gated (CI's docs job runs this file):
    job has no jax), so adding a public symbol without documenting it
    fails the docs job, not just review.
 
+4. **Serving matrix** — the arch × serving-feature table in
+   ``docs/serving.md`` must mirror the capability table
+   (``repro.configs.base.chunk_carry_spec`` / ``serving_features``) in
+   both directions: every registry arch has exactly one row with the
+   right carry kind and feature marks, and every row names a registry
+   arch.  This check imports ``repro.configs``, which transitively
+   needs jax; in a no-jax environment (the CI docs job) it is skipped
+   with a notice — tier-1 re-runs it with jax via
+   ``tests/test_docs.py``, so drift still fails CI.
+
 Run:  python tools/docs_check.py
 """
 
@@ -156,14 +166,86 @@ def check_api_symbols() -> list:
     return errors
 
 
+SERVING_DOC = "docs/serving.md"
+
+#: serving.md matrix column -> serving_features key (order must match the
+#: table header)
+_MATRIX_COLS = (("chunked", "chunked"), ("bit-exact", "chunked_exact"),
+                ("paged", "paged"), ("prefix cache", "prefix_cache"),
+                ("EP decode", "ep_decode"))
+
+
+def _parse_serving_matrix(text: str):
+    """Rows of the ``| arch | carry | ... |`` table as
+    ``{arch: (carry, {feature: bool})}``."""
+    lines = text.splitlines()
+    try:
+        start = next(i for i, ln in enumerate(lines)
+                     if ln.strip().startswith("| arch | carry |"))
+    except StopIteration:
+        return None
+    header = [c.strip() for c in lines[start].strip("|").split("|")]
+    assert header[2:] == [c for c, _ in _MATRIX_COLS], header
+    rows = {}
+    for ln in lines[start + 2:]:
+        if not ln.strip().startswith("|"):
+            break
+        cells = [c.strip() for c in ln.strip("|").split("|")]
+        arch = cells[0].strip("`")
+        rows[arch] = (cells[1], {key: cells[2 + i] == "✓"
+                                 for i, (_, key) in
+                                 enumerate(_MATRIX_COLS)})
+    return rows
+
+
+def check_serving_matrix() -> list:
+    """The serving.md matrix mirrors the capability table, both ways."""
+    try:
+        sys.path.insert(0, os.path.join(REPO, "src"))
+        from repro.configs import ARCH_NAMES, get_config
+        from repro.configs.base import chunk_carry_spec, serving_features
+    except ImportError as e:
+        print(f"docs-check: serving matrix skipped (no jax here: {e}); "
+              f"tier-1 runs it via tests/test_docs.py")
+        return []
+    with open(os.path.join(REPO, SERVING_DOC), encoding="utf-8") as f:
+        rows = _parse_serving_matrix(f.read())
+    if rows is None:
+        return [f"{SERVING_DOC}: arch × serving-feature matrix not found"]
+    errors = []
+    for arch in ARCH_NAMES:
+        if arch not in rows:
+            errors.append(f"{SERVING_DOC}: registry arch {arch} missing "
+                          f"from the serving matrix")
+            continue
+        cfg = get_config(arch).reduced()
+        carry, feats = rows[arch]
+        want_carry = chunk_carry_spec(cfg).kind
+        if carry != want_carry:
+            errors.append(f"{SERVING_DOC}: {arch} carry is {carry!r}, "
+                          f"capability table says {want_carry!r}")
+        want = serving_features(cfg)
+        for col, key in _MATRIX_COLS:
+            if feats[key] != want[key]:
+                errors.append(
+                    f"{SERVING_DOC}: {arch} column {col!r} is "
+                    f"{feats[key]}, capability table says {want[key]}")
+    for arch in rows:
+        if arch not in ARCH_NAMES:
+            errors.append(f"{SERVING_DOC}: matrix row {arch!r} is not a "
+                          f"registry arch (stale?)")
+    return errors
+
+
 def main() -> int:
-    errors = check_links() + check_docstrings() + check_api_symbols()
+    errors = (check_links() + check_docstrings() + check_api_symbols()
+              + check_serving_matrix())
     for e in errors:
         print(f"docs-check: {e}")
     if errors:
         print(f"docs-check: {len(errors)} problem(s)")
         return 1
-    print("docs-check: links + docstrings + API symbols OK")
+    print("docs-check: links + docstrings + API symbols + serving matrix OK")
     return 0
 
 
