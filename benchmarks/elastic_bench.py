@@ -1,0 +1,266 @@
+"""Elastic recovery sweep: what a rank loss costs, modeled and measured.
+
+The robustness artifact of the elastic membership PR.  Three sections:
+
+* **train recovery vs checkpoint interval (modeled)** — per arch × link
+  class, ``netmodel.train_recovery_time`` decomposed into its three
+  terms: the control-plane re-form (3 rounds of short AMs over the
+  survivors), the resharded checkpoint restore (one bulk PUT of the
+  state bytes onto the shrunk mesh), and the expected replay (half the
+  checkpoint interval at the modeled step time).  The swept interval is
+  the knob an operator actually holds; the rows quantify the
+  restore-bandwidth vs replay tradeoff per link class (QSFP pays more
+  for the restore, so its replay-optimal interval is shorter).
+* **serve recovery vs surviving prefix (modeled)** — per arch × prompt
+  length × surviving-prefix fraction, ``netmodel.serve_recovery_time``
+  for the drain/re-admit path the server runs: victims re-enter through
+  the prefix cache, committed blocks on surviving ranks are COW-reused,
+  and only the lost tail re-prefills.  The ``speedup`` column is the
+  full-re-prefill recovery (no prefix reuse — what a pool without
+  cache-aware re-admission would pay) over the tail-only recovery.
+* **measured CPU-mesh recovery** — the real ``runtime/server.py`` on a
+  host mesh, an unfailed run against a run with a scripted decode-rank
+  kill mid-stream (``runtime/faults.FaultPlan``): drain/re-admit wall,
+  recoveries, re-prefilled tokens, and the bit-identity assert — every
+  request's tokens must match the unfailed run exactly.
+
+Writes ``BENCH_elastic.json`` at the repo root; ``tools/bench_gate.py``
+gates CI on its preset rows.  ``--model-only`` skips the measured section.
+
+Internal assertions (a failed claim is a failed run):
+  * prefix-reusing re-admission models ≥ 1.3× over full re-prefill at
+    ≥ 1 operating point on the QSFP-class link;
+  * recovery time is monotone in the checkpoint interval (more replay
+    can never be free);
+  * the measured failed run is token-identical to the unfailed run.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+OUT_PATH = os.path.join(REPO_ROOT, "BENCH_elastic.json")
+
+try:
+    from benchmarks.serve_bench import (TPU_V5E_FLOPS, _kv_write_bytes_per_token,
+                                        _prefill_flops)
+except ImportError:                      # run as `python benchmarks/...`
+    from serve_bench import (TPU_V5E_FLOPS, _kv_write_bytes_per_token,
+                             _prefill_flops)
+
+#: archs swept (the serve presets: dense, GQA, multimodal)
+ARCHS = ("smollm-360m", "h2o-danube-1.8b", "internvl2-2b")
+#: checkpoint intervals swept (steps between saves — the operator's knob)
+CKPT_INTERVALS = (10, 50, 100, 500)
+#: surviving-prefix fractions: how much of a victim's committed KV the
+#: prefix cache can COW-reuse from surviving ranks' partitions
+SURVIVE_FRACS = (0.25, 0.5, 0.75)
+PROMPT_LENS = (2048, 8192)
+#: tokens per optimizer step at the modeled operating point
+TRAIN_TOKENS_PER_STEP = 1 << 20
+#: survivors after the loss (the modeled job ran data=9 before it)
+N_SURVIVORS = 8
+N_CHUNKS = 8
+
+
+def _param_bytes(cfg) -> int:
+    """At-rest checkpoint bytes of the arch (shape-only eval)."""
+    import jax
+
+    from repro.models.model import init_params
+
+    leaves = jax.tree.leaves(jax.eval_shape(
+        lambda k: init_params(cfg, k), jax.random.PRNGKey(0)))
+    return sum(v.size * v.dtype.itemsize for v in leaves)
+
+
+def _step_time(cfg) -> float:
+    """Modeled optimizer-step wall: forward+backward ~ 3x forward flops
+    at accelerator peak (both link classes — replay is compute-bound)."""
+    return 3 * _prefill_flops(cfg, TRAIN_TOKENS_PER_STEP) / TPU_V5E_FLOPS
+
+
+def model_train_recovery_rows():
+    from repro.configs import get_config
+    from repro.core import netmodel as nm
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        ckpt_bytes = _param_bytes(cfg)
+        step_time = _step_time(cfg)
+        for link_name, link in (("qsfp", nm.FSHMEM_QSFP),
+                                ("ici", nm.TPU_ICI)):
+            packet = max(link.packet_overhead_bytes)
+            worst = nm.train_recovery_time(
+                link, n_ranks=N_SURVIVORS, ckpt_bytes=ckpt_bytes,
+                ckpt_interval_steps=max(CKPT_INTERVALS),
+                step_time=step_time, packet_size=packet)
+            for interval in CKPT_INTERVALS:
+                t = nm.train_recovery_time(
+                    link, n_ranks=N_SURVIVORS, ckpt_bytes=ckpt_bytes,
+                    ckpt_interval_steps=interval, step_time=step_time,
+                    packet_size=packet)
+                rows.append({
+                    "source": "preset-model", "suite": "train_recovery",
+                    "arch": arch, "link": link_name,
+                    "ckpt_interval": interval,
+                    "ckpt_bytes": ckpt_bytes,
+                    "step_time_s": step_time,
+                    "reform_us": 1e6 * nm.reform_time(link, N_SURVIVORS,
+                                                      packet),
+                    "restore_s": nm.put_time(link, ckpt_bytes, packet),
+                    "replay_s": 0.5 * interval * step_time,
+                    "recovery_s": t,
+                    # floor metric: vs the longest swept interval —
+                    # shorter intervals must never model slower
+                    "speedup": worst / t,
+                })
+    return rows
+
+
+def model_serve_recovery_rows():
+    from repro.configs import get_config
+    from repro.core import netmodel as nm
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        per_tok = _kv_write_bytes_per_token(cfg)
+        for s in PROMPT_LENS:
+            for link_name, link in (("qsfp", nm.FSHMEM_QSFP),
+                                    ("ici", nm.TPU_ICI)):
+                packet = max(link.packet_overhead_bytes)
+                if link_name == "ici":
+                    tc = _prefill_flops(cfg, s) / TPU_V5E_FLOPS / s
+                else:
+                    tc = per_tok / link.peak_bandwidth
+                full = nm.serve_recovery_time(
+                    link, n_ranks=N_SURVIVORS, t_compute_per_tok=tc,
+                    reprefill_tokens=s, kv_bytes_per_tok=per_tok,
+                    n_chunks=N_CHUNKS, packet_size=packet)
+                for f in SURVIVE_FRACS:
+                    tail = int((1 - f) * s)
+                    t = nm.serve_recovery_time(
+                        link, n_ranks=N_SURVIVORS, t_compute_per_tok=tc,
+                        reprefill_tokens=tail, kv_bytes_per_tok=per_tok,
+                        n_chunks=N_CHUNKS, packet_size=packet)
+                    rows.append({
+                        "source": "preset-model", "suite": "serve_recovery",
+                        "arch": arch, "link": link_name, "prompt_len": s,
+                        "survive_frac": f,
+                        "reprefill_tokens": tail,
+                        "full_recovery_s": full,
+                        "tail_recovery_s": t,
+                        "speedup": full / t,
+                    })
+    return rows
+
+
+def measured_recovery_rows():
+    """The real server on a host mesh: unfailed vs scripted mid-stream
+    decode-rank kill, with the token-identity assert."""
+    import jax
+
+    if len(jax.devices()) < 4:
+        return []
+
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.dist.sharding import param_pspecs, to_shardings
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.model import init_params
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.server import Server, ServerConfig
+
+    cfg = get_config("smollm-360m").reduced()
+    mesh = make_host_mesh(2, 2)
+    shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                           jax.random.PRNGKey(0))
+    psh = to_shardings(mesh, param_pspecs(cfg, mesh, shape))
+    params = jax.jit(lambda k: init_params(cfg, k), out_shardings=psh)(
+        jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=s) for s in (8, 11, 7)]
+
+    rows, outs = [], {}
+    for mode, plan in (("clean", None),
+                       ("fail@6", FaultPlan().kill_rank(1, at_step=6))):
+        srv = Server(cfg, params, mesh, srv=ServerConfig(
+            max_batch=2, max_seq=64, max_new_tokens=6, prefill_chunk=4,
+            paged=True, block_size=4), fault_plan=plan)
+        for p in prompts:
+            srv.submit(p)
+        t0 = time.perf_counter()
+        steps = srv.run()
+        wall = time.perf_counter() - t0
+        stats = srv.stats()
+        srv.pool.check_conservation()
+        outs[mode] = {r.rid: r.out_tokens for r in srv.done}
+        rows.append({
+            "source": "measured-cpu-mesh", "suite": "measured_recovery",
+            "arch": cfg.name, "mode": mode,
+            "requests": stats["requests"], "tokens": stats["tokens"],
+            "steps": steps, "wall_s": wall,
+            "recoveries": stats["recoveries"],
+            "reprefilled_tokens": stats["reprefilled_tokens"],
+            "lost_blocks": stats["lost_blocks"],
+        })
+    assert outs["fail@6"] == outs["clean"], \
+        "recovered tokens != unfailed tokens"
+    assert rows[-1]["recoveries"] >= 1, "scripted kill never fired"
+    return rows
+
+
+def claims_from(rows) -> dict:
+    """Acceptance claims, computed from (and stored beside) the rows."""
+    serve = [r for r in rows if r["suite"] == "serve_recovery"]
+    qsfp_best = max(r["speedup"] for r in serve if r["link"] == "qsfp")
+    assert qsfp_best >= 1.3, \
+        f"prefix-reusing re-admission models only {qsfp_best:.2f}x on qsfp"
+
+    train = [r for r in rows if r["suite"] == "train_recovery"]
+    for (arch, link) in {(r["arch"], r["link"]) for r in train}:
+        ts = sorted((r["ckpt_interval"], r["recovery_s"]) for r in train
+                    if r["arch"] == arch and r["link"] == link)
+        assert all(a[1] <= b[1] for a, b in zip(ts, ts[1:])), \
+            f"recovery not monotone in ckpt interval ({arch}, {link})"
+
+    worst_serve = min(r["speedup"] for r in serve)
+    worst_train = min(r["speedup"] for r in train)
+    return {
+        "serve_recovery_max_speedup_qsfp": qsfp_best,
+        "serve_recovery_min_speedup": worst_serve,
+        "train_recovery_min_speedup": worst_train,
+    }
+
+
+def main(model_only: bool = False) -> dict:
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+    rows = model_train_recovery_rows() + model_serve_recovery_rows()
+    claims = claims_from(rows)
+    if not model_only:
+        rows += measured_recovery_rows()
+    payload = {
+        "suite": "elastic_bench",
+        "claims": claims,
+        "n_rows": len(rows),
+        "rows": rows,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"elastic_bench: {len(rows)} rows -> {OUT_PATH}")
+    for k, v in claims.items():
+        print(f"  {k}: {v}")
+    return payload
+
+
+if __name__ == "__main__":
+    # failures surface as uncaught assertions (nonzero exit)
+    main("--model-only" in sys.argv[1:])

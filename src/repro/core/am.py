@@ -168,9 +168,17 @@ def _put_reply_handler(heap, args, payload):
 
 
 def _deliver(msg, axis: str, perm: Perm):
-    """ppermute a pytree of message fields (one wire transfer)."""
+    """ppermute a pytree of message fields (one wire transfer).
+
+    Consults the conduit failure probe first (``conduit.check_failure``):
+    a dead peer surfaces as a typed ``RankFailure`` at injection time
+    instead of a hung wire — the AM layer shares the conduit's failure
+    surface because on hardware both ride the same NIC.
+    """
     import jax
 
+    from repro.core.conduit import check_failure
+    check_failure("am_deliver", axis)
     return jax.tree.map(lambda x: lax.ppermute(x, axis, list(perm)), msg)
 
 
@@ -279,6 +287,8 @@ def gasnet_get(registry, heap, src_offset, dst_offset, size, *, axis, perm):
     ``perm`` lists ``(requester, source)`` pairs.  The requested chunk lands
     at ``dst_offset`` in the requester's heap.
     """
+    from repro.core.conduit import check_failure
+    check_failure("gasnet_get", axis)
     req = [(r, s) for (r, s) in perm]
     args = make_args(src_offset, dst_offset)
     payload = jnp.zeros((size,), heap.dtype)  # shape carrier for the reply

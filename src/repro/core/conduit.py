@@ -58,6 +58,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
@@ -80,6 +81,71 @@ LINKS: Dict[str, nm.LinkParams] = {
     "qsfp": nm.FSHMEM_QSFP,
     "ici": nm.TPU_ICI,
 }
+
+# ---------------------------------------------------------------------------
+# Failure surface: a lost peer raises instead of hanging
+# ---------------------------------------------------------------------------
+
+
+class RankFailure(RuntimeError):
+    """A peer rank is unreachable: the typed failure every conduit and AM
+    entry point raises instead of hanging on a dead link.
+
+    On real hardware this is the NIC timeout / coordination-service
+    heartbeat miss; in simulation the fault-injection harness
+    (``repro.runtime.faults``) raises it through the installed failure
+    hook.  Carries the failing ``rank`` (or ``None`` when unattributed)
+    and the ``op`` that tripped it so the recovery path
+    (``repro.runtime.elastic.ElasticRuntime``) can exclude the dead
+    member and re-form.
+    """
+
+    def __init__(self, rank: Optional[int] = None, op: str = "",
+                 detail: str = ""):
+        """Record the failing ``rank`` and the conduit/AM ``op`` involved."""
+        self.rank, self.op = rank, op
+        msg = f"rank failure on {op or 'collective'}"
+        if rank is not None:
+            msg += f" (rank {rank})"
+        if detail:
+            msg += f": {detail}"
+        super().__init__(msg)
+
+
+#: installed failure probe: ``fn(op, axis)`` raises :class:`RankFailure`
+#: when the scripted/observed membership says a peer is gone
+_FAILURE_HOOK: Optional[Callable[[str, str], None]] = None
+
+
+def install_failure_hook(fn: Callable[[str, str], None]) -> None:
+    """Install ``fn(op, axis)`` as the conduit/AM failure probe.
+
+    Every :class:`Conduit` collective and every AM wire transfer calls it
+    before touching the network (at call/trace time); ``fn`` raises
+    :class:`RankFailure` to simulate or surface a lost peer.  One hook at
+    a time — installing replaces the previous hook.
+    """
+    global _FAILURE_HOOK
+    _FAILURE_HOOK = fn
+
+
+def clear_failure_hook() -> None:
+    """Remove the installed failure probe (collectives stop checking)."""
+    global _FAILURE_HOOK
+    _FAILURE_HOOK = None
+
+
+def check_failure(op: str, axis: str) -> None:
+    """Run the installed failure probe for ``(op, axis)``, if any.
+
+    Called by the conduit/AM entry points; a probe signals a dead peer by
+    raising :class:`RankFailure`, which propagates to the host-level
+    caller (trainer/server) that owns recovery.  No-op when no hook is
+    installed — the common case costs one global read.
+    """
+    if _FAILURE_HOOK is not None:
+        _FAILURE_HOOK(op, axis)
+
 
 # ---------------------------------------------------------------------------
 # Registry
@@ -905,6 +971,7 @@ class Conduit:
         return name, chunk
 
     def _call(self, op: str, x, **kw):
+        check_failure(op, self.axis)
         size = int(x.size) * jnp.dtype(x.dtype).itemsize
         if op == "all_gather":
             # estimate_time's convention is the *global* payload; the
@@ -917,6 +984,7 @@ class Conduit:
 
     def barrier(self) -> jnp.ndarray:
         """Full-axis rendezvous; returns the axis size on every rank."""
+        check_failure("barrier", self.axis)
         name, chunk = self._resolve("barrier", 4)
         return resolve("barrier", name)(axis=self.axis, chunk_bytes=chunk)
 
@@ -1020,9 +1088,85 @@ class Conduit:
                 best, best_t = name, t
         return best
 
+    # -- recovery-path flavor ------------------------------------------------
+
+    def with_retry(self, attempts: int = 3,
+                   backoff: float = 0.0) -> "RetryingConduit":
+        """A proxy that retries each collective on :class:`RankFailure`.
+
+        Used by the elastic recovery path (``runtime/elastic.py``): during
+        re-formation a peer may be transiently unreachable (drained, not
+        dead), so each collective is attempted up to ``attempts`` times
+        with exponential backoff (``backoff``, ``2·backoff``, ...; seconds
+        of host sleep between attempts; ``0.0`` retries immediately).  A
+        loss that persists through every attempt re-raises the last
+        :class:`RankFailure` — permanent death is the caller's problem.
+        """
+        return RetryingConduit(self, attempts=attempts, backoff=backoff)
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryingConduit:
+    """Retry/backoff wrapper around a :class:`Conduit` (see
+    :meth:`Conduit.with_retry`).
+
+    Exposes the same collective surface; each call funnels through
+    :meth:`_attempt`, which swallows transient :class:`RankFailure` and
+    re-raises the last one once ``attempts`` are exhausted.
+    """
+
+    conduit: Conduit
+    attempts: int = 3
+    backoff: float = 0.0
+
+    def __post_init__(self):
+        """Validate the retry budget (at least one attempt)."""
+        if self.attempts < 1:
+            raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+
+    def _attempt(self, fn: Callable, *args, **kw):
+        delay = self.backoff
+        last: Optional[RankFailure] = None
+        for k in range(self.attempts):
+            try:
+                return fn(*args, **kw)
+            except RankFailure as e:
+                last = e
+                if k + 1 < self.attempts and delay > 0:
+                    time.sleep(delay)
+                    delay *= 2
+        assert last is not None
+        raise last
+
+    def barrier(self):
+        """Retrying :meth:`Conduit.barrier`."""
+        return self._attempt(self.conduit.barrier)
+
+    def broadcast(self, x, root: int):
+        """Retrying :meth:`Conduit.broadcast`."""
+        return self._attempt(self.conduit.broadcast, x, root)
+
+    def all_gather(self, x):
+        """Retrying :meth:`Conduit.all_gather`."""
+        return self._attempt(self.conduit.all_gather, x)
+
+    def reduce_scatter(self, x):
+        """Retrying :meth:`Conduit.reduce_scatter`."""
+        return self._attempt(self.conduit.reduce_scatter, x)
+
+    def all_reduce(self, x):
+        """Retrying :meth:`Conduit.all_reduce`."""
+        return self._attempt(self.conduit.all_reduce, x)
+
+    def all_to_all(self, x):
+        """Retrying :meth:`Conduit.all_to_all`."""
+        return self._attempt(self.conduit.all_to_all, x)
+
 
 __all__ = [
     "OPS", "LINKS", "CHUNK_CANDIDATES", "PIPELINE_CHUNKS", "Conduit",
+    "RetryingConduit", "RankFailure",
+    "install_failure_hook", "clear_failure_hook", "check_failure",
     "register", "transports", "resolve",
     "estimate_time", "matmul_edge_estimate", "auto_select",
     "crossover_bytes", "pipeline_estimate", "auto_select_pipeline",

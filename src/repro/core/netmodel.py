@@ -520,3 +520,100 @@ def saturation_size(link: LinkParams, packet_size: int, frac: float = 0.95) -> i
         if s > 1 << 30:
             raise RuntimeError("no saturation")
     return s
+
+
+# ---------------------------------------------------------------------------
+# Elastic recovery costs (runtime/elastic.py + runtime/faults.py)
+# ---------------------------------------------------------------------------
+
+#: control rounds of a membership change: failure detect/agree, segment
+#: re-register, conduit re-form barrier — each a ring of short AMs
+REFORM_ROUNDS = 3
+
+#: control-message payload of one membership round (a short AM: header,
+#: member id, epoch, segment descriptor)
+REFORM_MSG_BYTES = 64
+
+
+def reform_time(link: LinkParams, n_ranks: int, packet_size: int) -> float:
+    """Control-plane latency of re-forming the runtime after a rank loss.
+
+    :data:`REFORM_ROUNDS` rounds (detect/agree, segment re-register,
+    conduit re-form barrier), each a ring of :data:`REFORM_MSG_BYTES`
+    short AMs across the ``n_ranks`` survivors — latency-bound, so the
+    per-message overhead term dominates and the link *class* (QSFP vs
+    ICI) sets the constant.  This is what ``ElasticRuntime.on_failure``
+    spends *before* any state moves.
+    """
+    short = put_time(link, REFORM_MSG_BYTES, packet_size)
+    return REFORM_ROUNDS * max(1, int(n_ranks) - 1) * short
+
+
+def reprefill_time(
+    link: LinkParams,
+    t_compute_per_tok: float,
+    tokens: int,
+    kv_bytes_per_tok: float,
+    n_chunks: int,
+    packet_size: int,
+) -> float:
+    """Cost of re-establishing the KV state a dead rank took with it.
+
+    The drained requests replay ``tokens`` positions through the chunked
+    prefill path (:func:`serve_prefill_time` — compute rides over the
+    block PUTs); prefix-cache hits on surviving ranks shrink ``tokens``
+    before this is called (the caller passes only the *lost tail*).
+    """
+    toks = max(0, int(tokens))
+    if toks == 0:
+        return 0.0
+    return serve_prefill_time(link, t_compute_per_tok * toks,
+                              kv_bytes_per_tok * toks, n_chunks,
+                              packet_size)
+
+
+def serve_recovery_time(
+    link: LinkParams,
+    *,
+    n_ranks: int,
+    t_compute_per_tok: float,
+    reprefill_tokens: int,
+    kv_bytes_per_tok: float,
+    n_chunks: int,
+    packet_size: int,
+) -> float:
+    """End-to-end serving recovery wall: re-form + re-prefill.
+
+    The drain itself is host-side bookkeeping (block releases, queue
+    surgery) — negligible against the wire terms; what a decode-rank loss
+    costs is the membership re-formation plus replaying the lost KV
+    (``stats()['reprefilled_tokens']`` is the measured analogue).
+    """
+    return (reform_time(link, n_ranks, packet_size)
+            + reprefill_time(link, t_compute_per_tok, reprefill_tokens,
+                             kv_bytes_per_tok, n_chunks, packet_size))
+
+
+def train_recovery_time(
+    link: LinkParams,
+    *,
+    n_ranks: int,
+    ckpt_bytes: float,
+    ckpt_interval_steps: int,
+    step_time: float,
+    packet_size: int,
+) -> float:
+    """Expected training recovery wall after a rank loss.
+
+    Three terms: membership re-formation (:func:`reform_time`); streaming
+    the checkpoint back resharded onto the survivors (one bulk
+    ``ckpt_bytes`` transfer — restore-after-remesh moves every shard);
+    and replaying the steps since the last checkpoint — on average half
+    the interval (failures land uniformly within it).  This is the
+    ``interval × link class`` trade ``benchmarks/elastic_bench.py``
+    sweeps: short intervals pay checkpoint writes steadily, long ones pay
+    replay on failure.
+    """
+    restore = put_time(link, max(1, int(ckpt_bytes)), packet_size)
+    replay = 0.5 * max(0, int(ckpt_interval_steps)) * step_time
+    return reform_time(link, n_ranks, packet_size) + restore + replay

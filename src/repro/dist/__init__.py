@@ -10,7 +10,8 @@ transport the once-per-step cross-pod gradient all-reduce takes
 """
 
 from repro.dist import bucketing, grad_sync, loss, sharding, steps
-from repro.dist.bucketing import BucketPlan, bucket_plan
+from repro.dist.bucketing import (BucketPlan, bucket_plan,
+                                  span_scaled_target)
 from repro.dist.grad_sync import (
     Int8Conduit,
     bucket_wire_bytes,
@@ -38,11 +39,12 @@ from repro.dist.steps import (
     build_serve_step,
     build_slot_write_step,
     build_train_step,
+    refit_step_config,
 )
 
 __all__ = [
     "bucketing", "grad_sync", "loss", "sharding", "steps",
-    "BucketPlan", "bucket_plan",
+    "BucketPlan", "bucket_plan", "span_scaled_target",
     "Int8Conduit", "bucket_wire_bytes", "bucketed_cross_pod_all_reduce",
     "cross_pod_all_reduce", "wire_bytes", "chunked_ce_loss",
     "MeshAxes", "batch_pspecs", "cache_pspecs", "opt_pspecs",
@@ -50,5 +52,5 @@ __all__ = [
     "StepBundle", "StepConfig", "TransportPolicy",
     "build_block_write_step", "build_init",
     "build_prefill_chunk_step", "build_prefill_step", "build_serve_step",
-    "build_slot_write_step", "build_train_step",
+    "build_slot_write_step", "build_train_step", "refit_step_config",
 ]

@@ -100,6 +100,24 @@ def bucket_plan(tree, *, target_bytes: int = DEFAULT_BUCKET_BYTES,
     )
 
 
+def span_scaled_target(target_bytes: int, old_span: int,
+                       new_span: int) -> int:
+    """Bucket size target re-fitted to a changed gradient-sync span.
+
+    A ring all-reduce of a ``target_bytes`` bucket over an ``n``-rank span
+    puts ``target/n`` bytes on each hop — the quantity the target was
+    tuned for (the ~2 MiB QSFP / ~16 MiB ICI sweet spots in
+    ``BENCH_overlap.json`` are *per-hop* numbers).  When elastic recovery
+    shrinks the data axis, keeping the per-hop message constant means
+    scaling the bucket target by ``new_span / old_span`` — this is the
+    re-fit :meth:`repro.runtime.elastic.ElasticRuntime.on_failure` applies
+    before :func:`bucket_plan` runs against the survivors.
+    """
+    if old_span < 1 or new_span < 1:
+        raise ValueError(f"spans must be >= 1 ({old_span} -> {new_span})")
+    return max(1, int(target_bytes) * int(new_span) // int(old_span))
+
+
 def pack(tree, plan: BucketPlan, dtype=jnp.float32) -> List[jnp.ndarray]:
     """Flatten ``tree`` into the plan's buckets: one 1-D ``dtype`` buffer
     per bucket, leaves raveled and concatenated in flatten order."""
@@ -128,5 +146,5 @@ def unpack(buffers: Sequence[jnp.ndarray], plan: BucketPlan, dtype=None):
     return plan.treedef.unflatten(out)
 
 
-__all__ = ["DEFAULT_BUCKET_BYTES", "BucketPlan", "bucket_plan", "pack",
-           "unpack"]
+__all__ = ["DEFAULT_BUCKET_BYTES", "BucketPlan", "bucket_plan",
+           "span_scaled_target", "pack", "unpack"]

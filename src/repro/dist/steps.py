@@ -188,6 +188,36 @@ class StepConfig:
         return TransportPolicy()
 
 
+def refit_step_config(scfg: StepConfig, old_data: int,
+                      new_data: int) -> StepConfig:
+    """Re-fit a :class:`StepConfig` after the data axis shrank.
+
+    Elastic recovery (``runtime/elastic.py``) keeps two invariants when
+    survivors re-form over a smaller data axis:
+
+    * **global batch constant** — ``microbatches`` scales by
+      ``old_data // new_data`` so each survivor accumulates the shards
+      the dead rank used to hold (the shrink must divide cleanly, which
+      :func:`repro.runtime.elastic.viable_mesh_shapes` guarantees);
+    * **per-hop ring message constant** — ``grad_bucket_bytes`` (when
+      set) scales by ``new_data / old_data`` via
+      :func:`repro.dist.bucketing.span_scaled_target`, since a ring
+      all-reduce puts ``target/span`` bytes on each hop.
+    """
+    if old_data < 1 or new_data < 1:
+        raise ValueError(f"data spans must be >= 1 ({old_data} -> {new_data})")
+    if old_data % new_data != 0:
+        raise RuntimeError(
+            f"cannot hold global batch: data axis {old_data} -> {new_data} "
+            f"does not divide")
+    changes: Dict[str, Any] = {
+        "microbatches": scfg.microbatches * (old_data // new_data)}
+    if scfg.grad_bucket_bytes is not None:
+        changes["grad_bucket_bytes"] = bucketing.span_scaled_target(
+            scfg.grad_bucket_bytes, old_data, new_data)
+    return dataclasses.replace(scfg, **changes)
+
+
 @dataclasses.dataclass
 class StepBundle:
     """A built step: jitted fn + the specs/shapes runtimes need around it."""
@@ -792,7 +822,8 @@ def build_block_write_step(cfg: ModelConfig, mesh, batch: int,
 
 
 __all__ = [
-    "StepConfig", "StepBundle", "TransportPolicy", "build_init",
+    "StepConfig", "StepBundle", "TransportPolicy", "refit_step_config",
+    "build_init",
     "build_train_step", "build_prefill_step", "build_serve_step",
     "build_prefill_chunk_step", "build_slot_write_step",
     "build_block_write_step", "MeshAxes",

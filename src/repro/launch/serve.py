@@ -47,6 +47,14 @@ def main():
     p.add_argument("--dump-tokens", default=None, metavar="PATH",
                    help="write {rid: out_tokens} JSON (CI diffs paged vs "
                         "contiguous runs)")
+    p.add_argument("--fail-at-step", type=int, default=None, metavar="N",
+                   help="fault injection: kill a decode rank at scheduler "
+                        "step N (requires --paged; the server drains and "
+                        "re-admits — tokens stay identical to an unfailed "
+                        "run)")
+    p.add_argument("--fail-rank", type=int, default=1, metavar="R",
+                   help="which decode rank dies at --fail-at-step "
+                        "(pool-partition index over the data axis)")
     args = p.parse_args()
 
     n_dev = args.data_axis * args.model_axis * args.expert_axis
@@ -70,10 +78,16 @@ def main():
         jax.random.PRNGKey(0))
 
     scfg = StepConfig(transport=TransportPolicy(moe=args.moe_transport))
+    plan = None
+    if args.fail_at_step is not None:
+        assert args.paged, "--fail-at-step needs --paged (the pool " \
+            "partition is what a decode rank owns)"
+        from repro.runtime.faults import FaultPlan
+        plan = FaultPlan.from_cli(args.fail_at_step, args.fail_rank)
     srv = Server(cfg, params, mesh, scfg=scfg, srv=ServerConfig(
         max_batch=args.max_batch, max_seq=256, max_new_tokens=args.max_new,
         prefill_chunk=args.prefill_chunk or None,
-        paged=args.paged, block_size=args.block_size))
+        paged=args.paged, block_size=args.block_size), fault_plan=plan)
     rng = np.random.default_rng(0)
     plen = args.prompt_len
     if cfg.family == "encdec":
@@ -110,6 +124,14 @@ def main():
               f"misses {stats['prefix_misses']:.0f}, "
               f"pool evictions {stats['pool_evictions']:.0f}, "
               f"free blocks {stats['pool_free_blocks']:.0f}")
+    if plan is not None:
+        srv.pool.check_conservation()
+        print(f"[serve:{mode}] fault injected at step {args.fail_at_step} "
+              f"(rank {args.fail_rank}): {stats['recoveries']:.0f} slots "
+              f"drained/re-admitted, "
+              f"{stats['reprefilled_tokens']:.0f} tokens re-prefilled, "
+              f"{stats['lost_blocks']:.0f} blocks lost "
+              f"(conservation holds)")
     if args.dump_tokens:
         import json
         with open(args.dump_tokens, "w") as f:

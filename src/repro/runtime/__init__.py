@@ -1,8 +1,15 @@
-"""Fault-tolerant runtime: training loop, elastic re-meshing, serving."""
+"""Fault-tolerant runtime: training loop, elastic membership, fault
+injection, serving."""
 
 from repro.runtime.trainer import Trainer, TrainerConfig
-from repro.runtime.elastic import ElasticMesh, remesh
+from repro.runtime.elastic import (ElasticMesh, ElasticRuntime,
+                                   RecoveryReport, reform_conduits, remesh,
+                                   scaled_microbatches, viable_mesh_shapes)
+from repro.runtime.faults import FaultEvent, FaultPlan, RankFailure
 from repro.runtime.server import BlockPool, Server, ServerConfig
 
-__all__ = ["Trainer", "TrainerConfig", "ElasticMesh", "remesh",
+__all__ = ["Trainer", "TrainerConfig", "ElasticMesh", "ElasticRuntime",
+           "RecoveryReport", "reform_conduits", "remesh",
+           "scaled_microbatches", "viable_mesh_shapes",
+           "FaultEvent", "FaultPlan", "RankFailure",
            "BlockPool", "Server", "ServerConfig"]

@@ -1,39 +1,66 @@
-"""Elastic re-meshing: rebuild the device mesh after failures and reshard.
+"""Elastic membership: rebuild mesh, conduits, buckets and state on rank loss.
 
 On a real multi-host deployment a device/host failure surfaces as an XLA
 error (or a missed heartbeat in the coordination service); recovery is:
 
   1. drop the failed hosts from the device set,
   2. rebuild the largest mesh of the same *shape family* that fits,
-  3. restore the last checkpoint **resharded** onto the new mesh
+  3. **re-form every conduit** over the surviving axes — axis sizes
+     changed, so the netmodel-driven transport choices
+     (``conduit.auto_select``) and the collective-matmul schedule family
+     (``conduit.matmul_edge_estimate``) must be re-negotiated, exactly as
+     "A PGAS Communication Library for Heterogeneous Clusters" re-picks
+     algorithms when the topology changes,
+  4. **re-fit the gradient buckets** (``dist/bucketing.bucket_plan``) —
+     the sync span (data extent) changed, so per-bucket wire accounting
+     (``dist/grad_sync.bucket_wire_bytes``) changes with it,
+  5. restore the last checkpoint **resharded** onto the new mesh
      (``checkpoint.load_checkpoint`` takes the new NamedShardings —
      checkpoints store logical arrays, the mesh maps them physically),
-  4. resume from the checkpointed step; the data pipeline is stateless
-     (step-indexed PRNG) so no data is lost or repeated.
+  6. resume from the checkpointed step with **grad accumulation scaled**
+     to hold the global batch constant; the data pipeline is stateless
+     (step-indexed PRNG) so no data is lost or repeated and the loss
+     trajectory continues exactly where the unfailed run would be.
 
 The mesh-shape policy keeps the "model" (TP) extent fixed — param shards
 must keep dividing — and shrinks the data axes, which only changes the
-gradient all-reduce span and per-shard batch (grad accumulation grows to
-hold the global batch constant).
+gradient all-reduce span and per-shard batch.
+
+:class:`ElasticRuntime` is the orchestrator that runs 1–6 as one
+membership-change operation (:meth:`ElasticRuntime.on_failure`), driven
+by the typed :class:`~repro.core.conduit.RankFailure` the conduit/AM
+failure surface raises (``runtime/faults.py`` scripts it in tests).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 from jax.sharding import Mesh
 
+from repro.core.conduit import (LINKS, Conduit, RankFailure, auto_select,
+                                matmul_edge_estimate)
+from repro.dist.bucketing import (DEFAULT_BUCKET_BYTES, BucketPlan,
+                                  bucket_plan, span_scaled_target)
+
 
 def viable_mesh_shapes(n_devices: int, model: int) -> List[Tuple[int, int]]:
-    """(data, model) shapes with fixed TP extent, largest data first."""
-    shapes = []
-    d = n_devices // model
-    while d >= 1:
-        shapes.append((d, model))
-        d -= 1
-    return shapes
+    """(data, model) shapes with fixed TP extent, largest data first.
+
+    Only shapes whose data extent divides cleanly into the surviving
+    device pool are viable — a non-divisor data extent would strand
+    devices *and* break the even per-rank batch split the data pipeline
+    assumes.  ``model > n_devices`` raises the same typed error as
+    :func:`remesh` (TP shards must keep dividing; there is no viable
+    shape at all).
+    """
+    if model < 1 or n_devices // model == 0:
+        raise RuntimeError(
+            f"cannot keep TP={model} with {n_devices} devices")
+    d_max = n_devices // model
+    return [(d, model) for d in range(d_max, 0, -1) if d_max % d == 0]
 
 
 def remesh(devices: Sequence, model: int,
@@ -64,9 +91,181 @@ class ElasticMesh:
             self.devices = list(jax.devices())
 
     def mesh(self) -> Mesh:
+        """The current largest viable mesh over the live devices."""
         return remesh(self.devices, self.model, self.axis_names)
 
     def fail(self, *indices: int) -> Mesh:
+        """Drop the devices at ``indices`` and return the rebuilt mesh."""
         dead = {self.devices[i].id for i in indices}
         self.devices = [d for d in self.devices if d.id not in dead]
         return self.mesh()
+
+
+# ---------------------------------------------------------------------------
+# Conduit re-formation: transport choices are per-topology, not per-process
+# ---------------------------------------------------------------------------
+
+#: collective ops re-priced per axis on re-formation (barrier always xla)
+_REFORM_OPS = ("all_gather", "reduce_scatter", "all_reduce", "all_to_all")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConduitPlan:
+    """One axis's re-formed conduit: the handle plus the transport the
+    cost model picked for each collective at the *new* axis size, and the
+    collective-matmul schedule family for its TP edges."""
+
+    axis: str
+    size: int
+    conduit: Conduit
+    op_transports: Dict[str, Tuple[str, Optional[int]]]
+    matmul_family: str
+
+
+def reform_conduits(mesh: Mesh, *, link: str = "qsfp",
+                    payload_bytes: int = 4 << 20,
+                    compute_time: float = 1e-4) -> Dict[str, ConduitPlan]:
+    """Re-negotiate every axis's conduit against the shrunk topology.
+
+    A transport choice is a function of (op, payload, **axis size**, link)
+    — so a membership change invalidates it.  For each mesh axis this
+    re-runs :func:`~repro.core.conduit.auto_select` per collective op at
+    the surviving axis size and re-prices the collective-matmul schedule
+    family (ring/bidir/fused) via
+    :func:`~repro.core.conduit.matmul_edge_estimate`, returning fresh
+    ``auto`` :class:`~repro.core.conduit.Conduit` handles (axis size
+    resolves per call inside ``shard_map``) *plus* the resolved decisions
+    for logging/benchmarks.  Size-1 axes need no conduit and are skipped.
+    """
+    lp = LINKS[link]
+    plans: Dict[str, ConduitPlan] = {}
+    for axis, size in mesh.shape.items():
+        n = int(size)
+        if n <= 1:
+            continue
+        ops = {op: auto_select(op, size_bytes=payload_bytes, axis_size=n,
+                               link=lp) for op in _REFORM_OPS}
+        best, best_t = "ring", float("inf")
+        for fam in ("ring", "bidir", "fused"):
+            t = matmul_edge_estimate(
+                "all_gather", fam, size_bytes=payload_bytes, axis_size=n,
+                compute_time=compute_time, link=lp)
+            if t < best_t:
+                best, best_t = fam, t
+        plans[axis] = ConduitPlan(
+            axis=axis, size=n, conduit=Conduit(axis, "auto", link=link),
+            op_transports=ops, matmul_family=best)
+    return plans
+
+
+def scaled_microbatches(microbatches: int, old_data: int,
+                        new_data: int) -> int:
+    """Grad-accumulation steps after the data axis shrank, holding the
+    global batch (and per-microbatch per-rank rows) constant.
+
+    The global batch is a *training* invariant (it sets the loss
+    trajectory); the data pipeline keeps serving it, so per-rank rows grow
+    by ``old_data / new_data`` and accumulation must absorb the growth.
+    Requires the divisor relationship :func:`viable_mesh_shapes`
+    guarantees.
+    """
+    if old_data % new_data != 0:
+        raise RuntimeError(
+            f"data extent {old_data} -> {new_data} is not a clean shrink "
+            f"(viable_mesh_shapes only yields divisors)")
+    return int(microbatches) * (old_data // new_data)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryReport:
+    """What one membership change did — the audit record
+    :meth:`ElasticRuntime.on_failure` returns (and benchmarks price)."""
+
+    dead_rank: Optional[int]
+    old_shape: Tuple[Tuple[str, int], ...]
+    new_shape: Tuple[Tuple[str, int], ...]
+    conduits: Dict[str, ConduitPlan]
+    bucket_plan: Optional[BucketPlan]
+    microbatches: int
+    restored_step: Optional[int]
+
+
+class ElasticRuntime:
+    """The membership-change orchestrator (module steps 1–6 as one call).
+
+    Owns the live device set (an :class:`ElasticMesh`), the link class the
+    re-formed conduits are priced against, and an optional
+    :class:`~repro.runtime.faults.FaultPlan` to notify of repairs (so the
+    scripted kill stops firing once its rank is excluded — matching a real
+    coordination service marking the member left).
+    """
+
+    def __init__(self, model: int, axis_names=("data", "model"),
+                 devices: Optional[List] = None, link: str = "qsfp",
+                 fault_plan=None):
+        """Bind the TP extent, axis names, device pool and link class."""
+        self.members = ElasticMesh(model=model, axis_names=tuple(axis_names),
+                                   devices=devices)
+        self.link = link
+        self.fault_plan = fault_plan
+        self.reports: List[RecoveryReport] = []
+
+    def mesh(self) -> Mesh:
+        """The current mesh over the live membership."""
+        return self.members.mesh()
+
+    def on_failure(self, failure: Optional[RankFailure] = None, *,
+                   rank: Optional[int] = None,
+                   params_tree=None,
+                   grad_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                   microbatches: int = 1,
+                   ckpt_dir: Optional[str] = None,
+                   template=None, shardings=None) -> RecoveryReport:
+        """Run the full recovery for one dead rank; returns the report.
+
+        ``failure`` (or an explicit ``rank``) names the dead member —
+        ``None`` rank means unattributed, and the policy excludes device 0
+        of the current list (a heartbeat sweep would identify it; the
+        *shape* outcome is identical for any single loss).  Steps: exclude
+        → remesh → re-form conduits → re-fit buckets (when a
+        ``params_tree`` is given) → scale accumulation → optionally
+        restore resharded state (when ``ckpt_dir``/``template``/
+        ``shardings`` are given; the restored ``(state, manifest)`` is
+        stashed on ``self.restored``).
+        """
+        dead = rank if rank is not None else (
+            failure.rank if failure is not None and failure.rank is not None
+            else 0)
+        dead = min(dead, len(self.members.devices) - 1)
+        old_shape = tuple(self.mesh().shape.items())
+        old_data = dict(old_shape).get("data", 1)
+        mesh = self.members.fail(dead)
+        if self.fault_plan is not None:
+            self.fault_plan.repair(dead)
+        new_data = mesh.shape.get("data", 1)
+        plans = reform_conduits(mesh, link=self.link)
+        # keep the per-hop ring message constant across the span shrink
+        target = span_scaled_target(grad_bucket_bytes, old_data, new_data)
+        bplan = (bucket_plan(params_tree, target_bytes=target)
+                 if params_tree is not None else None)
+        micro = scaled_microbatches(microbatches, old_data, new_data)
+        restored_step = None
+        self.restored = None
+        if ckpt_dir is not None and template is not None:
+            from repro.checkpoint import load_checkpoint
+            state, manifest = load_checkpoint(ckpt_dir, template,
+                                              shardings=shardings)
+            self.restored = (state, manifest)
+            restored_step = manifest["step"]
+        report = RecoveryReport(
+            dead_rank=dead, old_shape=old_shape,
+            new_shape=tuple(mesh.shape.items()), conduits=plans,
+            bucket_plan=bplan, microbatches=micro,
+            restored_step=restored_step)
+        self.reports.append(report)
+        return report
+
+
+__all__ = ["viable_mesh_shapes", "remesh", "ElasticMesh", "ElasticRuntime",
+           "ConduitPlan", "RecoveryReport", "reform_conduits",
+           "scaled_microbatches"]

@@ -1,0 +1,226 @@
+"""Deterministic fault injection for the elastic runtime.
+
+A :class:`FaultPlan` scripts failures against *step counters*, never
+wall-clocks or RNGs, so every run of a plan is bit-reproducible — the
+property the recovery tests lean on (a failed-and-recovered run must
+produce tokens/losses identical to an unfailed run, which is only
+checkable if the failure itself is deterministic).
+
+Three fault kinds (:class:`FaultEvent`):
+
+``kill_rank``
+    From ``step`` on, rank ``rank`` is dead: every conduit collective and
+    AM delivery raises :class:`~repro.core.conduit.RankFailure` until the
+    plan is told the membership was repaired (:meth:`FaultPlan.repair`).
+    This is the paper's node-loss case — a PGAS member stops answering.
+
+``drop_op``
+    The next ``count`` calls matching ``op`` (or any op when ``None``)
+    at/after ``step`` raise — then traffic flows again.  A *transient*
+    fault: this is what :meth:`~repro.core.conduit.Conduit.with_retry`
+    exists to absorb.
+
+``delay_am``
+    AM deliveries at/after ``step`` sleep ``delay_s`` on the host — a
+    slow-NIC model for straggler-path tests.  Never changes results, only
+    timing.
+
+Delivery has two surfaces:
+
+* **trace/call time** — :meth:`FaultPlan.install` registers the plan as
+  the conduit failure hook (``core/conduit.py`` /``core/am.py``), so any
+  collective issued while a fault is active raises.
+* **host step time** — jitted steps are traced once and cached, so
+  steady-state training/serving never re-enters the conduit.  The
+  runtime loops (``runtime/trainer.py``, ``runtime/server.py``) call
+  :meth:`FaultPlan.on_step` once per host step, which both advances the
+  plan's clock and raises for freshly-killed ranks.
+
+``FaultPlan.from_cli(fail_at_step, fail_rank)`` builds the one-kill plan
+the CI smoke drives through ``launch/serve.py --fail-at-step/--fail-rank``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.conduit import (RankFailure, clear_failure_hook,
+                                install_failure_hook)
+
+KINDS = ("kill_rank", "drop_op", "delay_am")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scripted fault: ``kind`` armed from ``step`` on.
+
+    Fields beyond ``kind``/``step`` are kind-specific: ``rank`` for
+    ``kill_rank``, ``op``/``count`` for ``drop_op``, ``delay_s`` for
+    ``delay_am``.  Frozen — a plan's script never mutates, only its
+    delivery state does.
+    """
+
+    kind: str
+    step: int = 0
+    rank: Optional[int] = None
+    op: Optional[str] = None
+    count: int = 1
+    delay_s: float = 0.0
+
+    def __post_init__(self):
+        """Validate the kind and its kind-specific fields."""
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} "
+                             f"(one of {KINDS})")
+        if self.kind == "kill_rank" and self.rank is None:
+            raise ValueError("kill_rank needs a rank")
+        if self.kind == "drop_op" and self.count < 1:
+            raise ValueError("drop_op needs count >= 1")
+
+
+class FaultPlan:
+    """A deterministic script of :class:`FaultEvent` s plus its delivery
+    state (current step, remaining drop budgets, repaired ranks, a log).
+
+    Build with the chainable helpers::
+
+        plan = (FaultPlan()
+                .kill_rank(2, at_step=5)
+                .drop_op("all_reduce", at_step=0, count=2)
+                .delay_am(1e-3, at_step=3))
+
+    then either ``plan.install()`` it as the conduit hook (trace-time
+    faults) or hand it to a runtime loop that calls :meth:`on_step`
+    (host-time faults) — usually both, via the context manager::
+
+        with plan:
+            trainer.train(mesh)
+    """
+
+    def __init__(self, events: Sequence[FaultEvent] = ()):
+        """Start a plan with ``events`` (more can be chained on)."""
+        self.events: List[FaultEvent] = list(events)
+        self.step = 0
+        self._drops_left = {id(e): e.count for e in self.events
+                            if e.kind == "drop_op"}
+        self._repaired: set = set()     # ranks the runtime has recovered
+        self._announced: set = set()    # kills already raised at host level
+        self.log: List[Tuple[int, str, str]] = []
+
+    # -- script builders ------------------------------------------------------
+
+    def _add(self, ev: FaultEvent) -> "FaultPlan":
+        self.events.append(ev)
+        if ev.kind == "drop_op":
+            self._drops_left[id(ev)] = ev.count
+        return self
+
+    def kill_rank(self, rank: int, *, at_step: int = 0) -> "FaultPlan":
+        """Script a permanent rank death at ``at_step``."""
+        return self._add(FaultEvent("kill_rank", step=at_step, rank=rank))
+
+    def drop_op(self, op: Optional[str] = None, *, at_step: int = 0,
+                count: int = 1) -> "FaultPlan":
+        """Script ``count`` transient drops of ``op`` (any op if ``None``)."""
+        return self._add(FaultEvent("drop_op", step=at_step, op=op,
+                                    count=count))
+
+    def delay_am(self, delay_s: float, *, at_step: int = 0) -> "FaultPlan":
+        """Script a per-delivery host sleep on AM traffic from ``at_step``."""
+        return self._add(FaultEvent("delay_am", step=at_step,
+                                    delay_s=delay_s))
+
+    @classmethod
+    def from_cli(cls, fail_at_step: Optional[int],
+                 fail_rank: Optional[int]) -> Optional["FaultPlan"]:
+        """The ``--fail-at-step N --fail-rank R`` plan (CI smoke), or
+        ``None`` when no failure was requested."""
+        if fail_at_step is None or fail_at_step < 0:
+            return None
+        return cls().kill_rank(fail_rank or 0, at_step=fail_at_step)
+
+    # -- membership view ------------------------------------------------------
+
+    def dead_ranks(self) -> frozenset:
+        """Ranks whose ``kill_rank`` has fired and is not yet repaired."""
+        return frozenset(e.rank for e in self.events
+                         if e.kind == "kill_rank" and self.step >= e.step
+                         and e.rank not in self._repaired)
+
+    def repair(self, *ranks: int) -> None:
+        """Tell the plan the runtime excluded ``ranks`` and re-formed —
+        their kill events stop firing (the membership no longer includes
+        them, so there is nothing left to kill)."""
+        self._repaired.update(ranks)
+
+    # -- delivery -------------------------------------------------------------
+
+    def on_step(self, step: int, op: str = "step") -> None:
+        """Host-level delivery: advance the plan clock to ``step`` and
+        raise for any freshly-fired ``kill_rank``.
+
+        Runtime loops call this once per host step *before* running the
+        jitted step — the cached-executable analogue of the trace-time
+        hook (a compiled step never re-enters the conduit, so the loop
+        has to ask).  Each kill announces at host level exactly once;
+        conduit-level traffic keeps raising until :meth:`repair`.
+        """
+        self.step = max(self.step, int(step))
+        for e in self.events:
+            if (e.kind == "kill_rank" and self.step >= e.step
+                    and e.rank not in self._repaired
+                    and id(e) not in self._announced):
+                self._announced.add(id(e))
+                self.log.append((self.step, "kill_rank",
+                                 f"rank {e.rank} op {op}"))
+                raise RankFailure(e.rank, op,
+                                  f"scripted kill at step {e.step}")
+
+    def __call__(self, op: str, axis: str) -> None:
+        """The conduit failure probe (``install_failure_hook`` target).
+
+        Checks, in order: dead ranks (permanent, every call raises),
+        armed ``drop_op`` budgets (transient, raises ``count`` times then
+        passes), ``delay_am`` sleeps (AM deliveries only).
+        """
+        dead = self.dead_ranks()
+        if dead:
+            rank = min(dead)
+            self.log.append((self.step, "kill_rank", f"{op}@{axis}"))
+            raise RankFailure(rank, op, f"peer dead on axis {axis!r}")
+        for e in self.events:
+            if (e.kind == "drop_op" and self.step >= e.step
+                    and e.op in (None, op)
+                    and self._drops_left.get(id(e), 0) > 0):
+                self._drops_left[id(e)] -= 1
+                self.log.append((self.step, "drop_op", f"{op}@{axis}"))
+                raise RankFailure(None, op, "scripted transient drop")
+        if op == "am_deliver":
+            for e in self.events:
+                if e.kind == "delay_am" and self.step >= e.step:
+                    self.log.append((self.step, "delay_am", f"{e.delay_s}s"))
+                    time.sleep(e.delay_s)
+
+    # -- hook lifecycle -------------------------------------------------------
+
+    def install(self) -> "FaultPlan":
+        """Register this plan as the conduit/AM failure hook."""
+        install_failure_hook(self)
+        return self
+
+    def uninstall(self) -> None:
+        """Deregister the conduit/AM failure hook."""
+        clear_failure_hook()
+
+    def __enter__(self) -> "FaultPlan":
+        """Context manager: install on entry."""
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        """Context manager: uninstall on exit (exceptions propagate)."""
+        self.uninstall()
+
+
+__all__ = ["FaultEvent", "FaultPlan", "RankFailure", "KINDS"]

@@ -108,6 +108,8 @@ class BlockPool:
         self._refs: Dict[int, int] = {}
         self._entries: "dict[bytes, List[int]]" = {}   # insertion = LRU order
         self.evictions = 0
+        self._lost: set = set()          # ids on failed partitions
+        self._quarantined: set = set()   # lost ids already swept off free/live
 
     # -- invariant surface (the hypothesis tests drive these) ---------------
 
@@ -126,13 +128,58 @@ class BlockPool:
         """Resident prefix-cache entries."""
         return len(self._entries)
 
+    @property
+    def lost_blocks(self) -> int:
+        """Ids on dead partitions (``fail_partition``), reserved included."""
+        return len(self._lost)
+
     def check_conservation(self):
-        """Every non-reserved block is free xor referenced — no leaks, no
-        aliasing between the free list and live tables."""
-        assert self.free_blocks + self.live_blocks \
+        """Every non-reserved block is free xor referenced xor quarantined
+        — no leaks, no aliasing between the free list and live tables, and
+        the invariant *holds across a partition shrink*: a lost block is
+        quarantined the moment its last reference drops (or immediately,
+        when it was free), never re-entering circulation."""
+        assert (self.free_blocks + self.live_blocks
+                + len(self._quarantined)) \
             == self.n_blocks - self.reserved, (
-                self.free_blocks, self.live_blocks, self.n_blocks)
+                self.free_blocks, self.live_blocks,
+                len(self._quarantined), self.n_blocks)
         assert not set(self._free) & set(self._refs)
+        assert not set(self._free) & self._quarantined
+        assert not self._quarantined & set(self._refs)
+        # a quarantined block is always a lost one
+        assert self._quarantined <= self._lost
+
+    # -- partition shrink (decode-rank loss) ---------------------------------
+
+    def partition(self, rank: int, n_ranks: int) -> range:
+        """Contiguous id range owned by decode rank ``rank`` of
+        ``n_ranks`` — the pool's PGAS segment map (each rank backs an
+        equal contiguous span of block ids, remainders to the tail)."""
+        assert 0 <= rank < n_ranks, (rank, n_ranks)
+        lo = rank * self.n_blocks // n_ranks
+        hi = (rank + 1) * self.n_blocks // n_ranks
+        return range(lo, hi)
+
+    def fail_partition(self, rank: int, n_ranks: int) -> frozenset:
+        """Mark rank ``rank``'s id span dead and shrink the pool around it.
+
+        Free lost ids quarantine immediately; live lost ids stay counted
+        as live until their holders drain and ``release`` them (at which
+        point they quarantine instead of returning to the free list);
+        prefix-cache entries pinning any lost block are purged (their pin
+        refs dropped — surviving entries keep serving COW hits).  Returns
+        the lost id set so the server can find the victim slots.
+        """
+        lost = frozenset(self.partition(rank, n_ranks))
+        self._lost |= lost
+        self._free = [b for b in self._free if b not in lost]
+        self._quarantined |= {b for b in lost
+                              if b >= self.reserved and b not in self._refs}
+        for key in [k for k, bids in self._entries.items()
+                    if set(bids) & lost]:
+            self.release(self._entries.pop(key))
+        return lost
 
     # -- alloc / refcount ----------------------------------------------------
 
@@ -159,14 +206,20 @@ class BlockPool:
 
     def release(self, bids: List[int]):
         """Drop one reference from each block; blocks reaching zero return
-        to the free list.  Releasing a free block raises (double free)."""
+        to the free list — or to quarantine when their partition died
+        (``fail_partition``), so a lost id never re-enters circulation.
+        Releasing a free block raises (double free)."""
         for b in bids:
             if b not in self._refs:
                 raise ValueError(f"double free of block {b}")
             self._refs[b] -= 1
             if self._refs[b] == 0:
                 del self._refs[b]
-                self._free.append(b)
+                if b in self._lost:
+                    if b >= self.reserved:
+                        self._quarantined.add(b)
+                else:
+                    self._free.append(b)
 
     # -- prefix cache --------------------------------------------------------
 
@@ -235,16 +288,18 @@ class Request:
     _cursor: int = 0               # next prompt position to prefill
     _blocks: List[int] = dataclasses.field(default_factory=list)
     _shared: int = 0               # leading blocks aliased from the cache
+    _recovered: bool = False       # drained off a dead rank, awaiting re-admit
 
 
 class Server:
     """Fixed-slot continuous-batching server over the serve step bundles."""
 
     def __init__(self, cfg: ModelConfig, params, mesh, scfg=None,
-                 srv: ServerConfig = ServerConfig()):
+                 srv: ServerConfig = ServerConfig(), fault_plan=None):
         self.cfg, self.params, self.srv = cfg, params, srv
         self.mesh = mesh
         self.scfg = scfg or StepConfig()
+        self.fault_plan = fault_plan
         assert srv.greedy, "only greedy sampling is implemented"
         ok, why = chunk_support(cfg)
         if srv.prefill_chunk and not ok:
@@ -333,6 +388,10 @@ class Server:
         self._next_tok = np.zeros((srv.max_batch,), np.int32)
         self.prefix_hits = 0
         self.prefix_misses = 0
+        self._ticks = 0
+        self._dead_slots: set = set()   # rows whose parking block died
+        self.recoveries = 0             # drain/re-admit cycles survived
+        self.reprefilled_tokens = 0     # positions re-prefilled on recovery
 
     @property
     def chunked_admission(self) -> bool:
@@ -385,6 +444,8 @@ class Server:
         blocks are already resident; a dry pool leaves the request queued
         (backpressure) until a retire frees blocks."""
         for i, slot in enumerate(self.slots):
+            if i in self._dead_slots:
+                continue        # parking block lost: row capacity is gone
             if slot is None and self.queue:
                 req = self.queue[0]
                 if self._paged and not self._claim_blocks(req):
@@ -402,6 +463,13 @@ class Server:
                                         jnp.int32))
                         req._cursor = (req._shared * self._blk
                                        // self._eff_chunk)
+                if req._recovered:
+                    # the surviving committed prefix came back COW
+                    # (``_shared`` blocks); only the rest re-prefills
+                    req._recovered = False
+                    self.reprefilled_tokens += (
+                        self._eff_len(int(req.prompt.size))
+                        - req._shared * (self._blk if self._paged else 0))
                 self.slots[i] = req
 
     # -- paged block accounting ----------------------------------------------
@@ -562,7 +630,10 @@ class Server:
         stamped *here* — after the id has been computed and fetched, i.e.
         at the first decode token, not at prefill completion."""
         tok = int(jnp.argmax(logits[0], axis=-1))
-        req.first_token = time.perf_counter()
+        if req.first_token is None:
+            # a re-admitted (recovered) request already stamped TTFT on
+            # its genuine first token, pre-failure
+            req.first_token = time.perf_counter()
         req.out_tokens.append(tok)
         req.phase = "decode"
         self._next_tok[i] = tok
@@ -677,8 +748,82 @@ class Server:
 
     # -- decode loop ----------------------------------------------------------
 
+    def fail_decode_rank(self, rank: int, n_ranks: Optional[int] = None):
+        """Survive the loss of decode rank ``rank``: drain and re-admit.
+
+        The pool's block ids are partitioned contiguously across
+        ``n_ranks`` decode ranks (default: the mesh's data extent — the
+        replicated rows that host pool shards).  Losing a rank loses its
+        id span: the pool quarantines it (:meth:`BlockPool.fail_partition`,
+        conservation holds throughout), prefix-cache entries pinning lost
+        blocks are purged, and every in-flight slot whose table touches
+        the span — or whose parking block died — is *drained*: blocks
+        released, scratch dropped, and the request re-queued at the front
+        with a **replay prompt** of ``prompt + tokens emitted so far``.
+        Greedy decode is deterministic and prefill ≡ decode (asserted
+        repo-wide), so the re-admitted continuation emits exactly the
+        tokens the unfailed run would have; committed prefix blocks on
+        surviving ranks come back copy-on-write through the prefix cache,
+        so only the lost tail actually re-prefills.  Rows whose parking
+        block died are retired from capacity (``_dead_slots``).
+
+        In this single-process simulation the lost span's *array data* is
+        physically intact — what the failure costs is re-prefill work and
+        pool capacity, which is exactly what ``netmodel`` prices
+        (``recovery_time``) and ``stats()`` reports.
+        """
+        assert self._paged, \
+            "decode-rank loss recovery needs the paged pool (paged=True)"
+        if n_ranks is None:
+            n_ranks = max(1, int(self.mesh.shape.get("data", 1)))
+        rank = min(int(rank), n_ranks - 1)
+        lost = self.pool.fail_partition(rank, n_ranks)
+        self._dead_slots |= {i for i in range(self.srv.max_batch)
+                             if i in lost and i < self.pool.reserved}
+        victims = [(req.rid, i, req) for i, req in enumerate(self.slots)
+                   if req is not None
+                   and (i in self._dead_slots or set(req._blocks) & lost)]
+        drained = []
+        for _, i, req in sorted(victims):
+            if req._blocks:
+                self.pool.release(req._blocks)
+                req._blocks, req._shared = [], 0
+            req._scratch = None
+            req._cursor = 0
+            if req.out_tokens:
+                # replay = everything the request has already established;
+                # re-prefilling it reproduces the decode state bit-exactly
+                req.prompt = np.concatenate(
+                    [req.prompt,
+                     np.asarray(req.out_tokens, np.int32)]).astype(np.int32)
+            req.phase = "queued"
+            req._recovered = True
+            self.slots[i] = None
+            if i not in self._dead_slots:
+                self.cache = self._park_fn(self.cache, jnp.int32(i))
+            drained.append(req)
+            self.recoveries += 1
+        self.queue = drained + self.queue   # victims re-admit first
+        self.pool.check_conservation()
+        return len(drained)
+
     def step(self):
-        """One scheduler tick: admit, run one prefill chunk, decode."""
+        """One scheduler tick: admit, run one prefill chunk, decode.
+
+        With a :class:`~repro.runtime.faults.FaultPlan` attached, scripted
+        kills are delivered here at host level (compiled steps never
+        re-enter the conduit) and handled in place via
+        :meth:`fail_decode_rank` — serving absorbs the loss instead of
+        propagating it."""
+        self._ticks += 1
+        if self.fault_plan is not None:
+            from repro.core.conduit import RankFailure
+            try:
+                self.fault_plan.on_step(self._ticks, "serve_step")
+            except RankFailure as e:
+                dead = e.rank if e.rank is not None else 0
+                self.fault_plan.repair(dead)
+                self.fail_decode_rank(dead)
         self._admit()
         self._prefill_tick()
         if not any(r is not None and r.phase == "decode"
@@ -737,6 +882,10 @@ class Server:
                 "prefix_misses": float(self.prefix_misses),
                 "pool_evictions": float(self.pool.evictions),
                 "pool_free_blocks": float(self.pool.free_blocks),
+                "recoveries": float(self.recoveries),
+                "reprefilled_tokens": float(self.reprefilled_tokens),
+                "lost_blocks": float(self.pool.lost_blocks),
+                "dead_slots": float(len(self._dead_slots)),
             })
         return out
 

@@ -34,9 +34,12 @@ import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ModelConfig
+from repro.core.conduit import RankFailure
 from repro.data.pipeline import SyntheticLM
-from repro.dist.steps import StepConfig, build_init, build_train_step
-from repro.runtime.elastic import ElasticMesh
+from repro.dist.bucketing import DEFAULT_BUCKET_BYTES
+from repro.dist.steps import (StepConfig, build_init, build_train_step,
+                              refit_step_config)
+from repro.runtime.elastic import ElasticRuntime
 
 
 @dataclasses.dataclass
@@ -54,11 +57,14 @@ class TrainerConfig:
 class Trainer:
     def __init__(self, cfg: ModelConfig, scfg: StepConfig, tcfg: TrainerConfig,
                  data: SyntheticLM, mesh=None,
-                 log_fn: Callable[[str], None] = print):
+                 log_fn: Callable[[str], None] = print,
+                 fault_plan=None):
         self.cfg, self.scfg, self.tcfg = cfg, scfg, tcfg
         self.data = data
         self.log = log_fn
         self.mesh = mesh
+        self.fault_plan = fault_plan
+        self.elastic: Optional[ElasticRuntime] = None
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_interval,
                                       tcfg.keep_last)
         self._preempted = False
@@ -134,6 +140,10 @@ class Trainer:
             batch = self.data.global_batch(step)
             t0 = time.perf_counter()
             try:
+                if self.fault_plan is not None:
+                    # compiled steps never re-enter the conduit: scripted
+                    # kills must be delivered at host-step level too
+                    self.fault_plan.on_step(step, "train_step")
                 params, opt, metrics = self.bundle.fn(
                     params, opt, batch, jnp.int32(step))
                 jax.block_until_ready(metrics["loss"])
@@ -141,7 +151,7 @@ class Trainer:
                 n_failures += 1
                 self.log(f"[trainer] step {step} failed ({type(e).__name__}: "
                          f"{e}); elastic recovery #{n_failures}")
-                mesh = self._recover_mesh(mesh)
+                mesh = self._recover_mesh(mesh, e)
                 params, opt, step = self._restore_or_init(mesh)
                 continue
             dt = time.perf_counter() - t0
@@ -177,8 +187,34 @@ class Trainer:
                               if self.history else None})
         return params, opt, step
 
-    def _recover_mesh(self, mesh):
-        """Rebuild the mesh from the devices that still respond."""
+    def _recover_mesh(self, mesh, failure: Optional[Exception] = None):
+        """Rebuild the mesh from the devices that still respond.
+
+        A typed :class:`~repro.core.conduit.RankFailure` names the dead
+        member; the :class:`~repro.runtime.elastic.ElasticRuntime` then
+        excludes it, re-forms the conduits, and scales grad accumulation
+        so the global batch survives the data-axis shrink (the rebuilt
+        step bundle picks the new ``microbatches`` up from ``self.scfg``).
+        Untyped failures keep the legacy behavior: rebuild over whatever
+        ``jax.devices()`` still answers.
+        """
         model = mesh.shape.get("model", 1)
-        elastic = ElasticMesh(model=model)
-        return elastic.mesh()
+        if self.elastic is None:
+            self.elastic = ElasticRuntime(
+                model=model, axis_names=tuple(mesh.axis_names),
+                devices=list(mesh.devices.flat),
+                fault_plan=self.fault_plan)
+        if isinstance(failure, RankFailure):
+            report = self.elastic.on_failure(
+                failure, microbatches=self.scfg.microbatches,
+                grad_bucket_bytes=self.scfg.grad_bucket_bytes
+                or DEFAULT_BUCKET_BYTES)
+            old_data = dict(report.old_shape).get("data", 1)
+            new_data = dict(report.new_shape).get("data", 1)
+            if new_data != old_data:
+                self.log(f"[trainer] data axis {old_data} -> {new_data}: "
+                         f"grad accumulation x{old_data // new_data} "
+                         f"to hold the global batch")
+                self.scfg = refit_step_config(self.scfg, old_data, new_data)
+            return self.elastic.mesh()
+        return self.elastic.mesh()

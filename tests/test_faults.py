@@ -1,0 +1,363 @@
+"""Fault injection + elastic recovery: scripted rank kills, retrying
+conduits, viable-shape enumeration, step-config re-fit, reshard-on-restore,
+BlockPool partition loss, and the two end-to-end identity guarantees —
+mid-serve token identity and mid-train loss-trajectory identity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import conduit
+from repro.core import netmodel as nm
+from repro.data import DataConfig, SyntheticLM
+from repro.dist.bucketing import span_scaled_target
+from repro.dist.sharding import param_pspecs, to_shardings
+from repro.dist.steps import StepConfig, refit_step_config
+from repro.models.model import init_params
+from repro.runtime.elastic import (reform_conduits, scaled_microbatches,
+                                   viable_mesh_shapes)
+from repro.runtime.faults import FaultEvent, FaultPlan, RankFailure
+from repro.runtime.server import BlockPool, Server, ServerConfig
+from repro.runtime.trainer import Trainer, TrainerConfig
+
+
+def _mesh1d(n):
+    return jax.sharding.Mesh(np.array(jax.devices()[:n]), ("x",))
+
+
+def _params_on(cfg, mesh, key=0):
+    shape = jax.eval_shape(lambda k: init_params(cfg, k),
+                           jax.random.PRNGKey(key))
+    psh = to_shardings(mesh, param_pspecs(cfg, mesh, shape))
+    return jax.jit(lambda k: init_params(cfg, k), out_shardings=psh)(
+        jax.random.PRNGKey(key)), shape, psh
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan semantics
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            FaultEvent("melt_rack")
+        with pytest.raises(ValueError):
+            FaultEvent("kill_rank")            # needs a rank
+        with pytest.raises(ValueError):
+            FaultEvent("drop_op", op="all_reduce", count=0)
+
+    def test_kill_fires_once_at_step(self):
+        plan = FaultPlan().kill_rank(1, at_step=3)
+        for s in range(3):
+            plan.on_step(s)                    # steps 0..2: healthy
+        assert plan.dead_ranks() == frozenset()
+        with pytest.raises(RankFailure) as ei:
+            plan.on_step(3)
+        assert ei.value.rank == 1
+        assert plan.dead_ranks() == frozenset({1})
+        plan.on_step(4)                        # announced once, not again
+
+    def test_dead_rank_poisons_conduit_hook(self):
+        plan = FaultPlan().kill_rank(0, at_step=0)
+        with pytest.raises(RankFailure):
+            plan.on_step(0)
+        with pytest.raises(RankFailure):
+            plan("all_reduce", "data")         # every op on the axis fails
+        plan.repair(0)
+        plan("all_reduce", "data")             # survivor re-form succeeds
+
+    def test_drop_op_budget(self):
+        plan = FaultPlan().drop_op(op="all_gather", count=2)
+        for _ in range(2):
+            with pytest.raises(RankFailure):
+                plan("all_gather", "x")
+        plan("all_gather", "x")                # budget spent: transient over
+        plan("all_reduce", "x")                # other ops never dropped
+
+    def test_from_cli(self):
+        assert FaultPlan.from_cli(None, 1) is None
+        plan = FaultPlan.from_cli(4, 2)
+        assert plan.events[0].kind == "kill_rank"
+        assert plan.events[0].step == 4 and plan.events[0].rank == 2
+
+    def test_install_context_manager(self):
+        plan = FaultPlan().kill_rank(0, at_step=0)
+        with pytest.raises(RankFailure):
+            plan.on_step(0)
+        with plan:
+            with pytest.raises(RankFailure):
+                conduit.check_failure("barrier", "data")
+        conduit.check_failure("barrier", "data")   # uninstalled: no-op
+
+
+# ---------------------------------------------------------------------------
+# retrying conduit (satellite: transient vs permanent failures)
+# ---------------------------------------------------------------------------
+
+
+class TestRetryingConduit:
+    def test_attempts_validated(self):
+        with pytest.raises(ValueError):
+            conduit.Conduit("x").with_retry(attempts=0)
+
+    def test_transient_drop_succeeds_on_retry(self):
+        n = min(4, len(jax.devices()))
+        mesh = _mesh1d(n)
+        cd = conduit.Conduit("x", "xla")
+        rc = cd.with_retry(attempts=3)
+        x = jax.random.normal(jax.random.PRNGKey(0), (n * 4, 6))
+        want = np.asarray(jax.shard_map(
+            lambda v: cd.all_gather(v), mesh=mesh,
+            in_specs=P("x"), out_specs=P("x"))(x))
+        plan = FaultPlan().drop_op(op="all_gather", count=2)
+        with plan:
+            got = np.asarray(jax.shard_map(
+                lambda v: rc.all_gather(v), mesh=mesh,
+                in_specs=P("x"), out_specs=P("x"))(x))
+        np.testing.assert_array_equal(got, want)
+
+    def test_permanent_loss_exhausts_attempts(self):
+        n = min(4, len(jax.devices()))
+        mesh = _mesh1d(n)
+        rc = conduit.Conduit("x", "xla").with_retry(attempts=2)
+        x = jnp.ones((n * 2, 3))
+        plan = FaultPlan().kill_rank(1, at_step=0)   # dead until repaired
+        with plan:
+            with pytest.raises(RankFailure) as ei:
+                jax.shard_map(lambda v: rc.all_gather(v), mesh=mesh,
+                              in_specs=P("x"), out_specs=P("x"))(x)
+        assert ei.value.rank == 1
+
+
+# ---------------------------------------------------------------------------
+# viable shapes + re-fit arithmetic (satellite: clean division only)
+# ---------------------------------------------------------------------------
+
+
+class TestViableShapes:
+    def test_only_cleanly_dividing_shapes(self):
+        # 8 devices, TP=2: data spans that divide 4 — never (3, 2)
+        assert viable_mesh_shapes(8, model=2) == [(4, 2), (2, 2), (1, 2)]
+        assert viable_mesh_shapes(6, model=2) == [(3, 2), (1, 2)]
+        assert viable_mesh_shapes(7, model=1) == [(7, 1), (1, 1)]
+
+    def test_model_exceeding_devices_raises(self):
+        with pytest.raises(RuntimeError):
+            viable_mesh_shapes(2, model=4)
+        with pytest.raises(RuntimeError):
+            viable_mesh_shapes(4, model=0)
+
+    def test_scaled_microbatches(self):
+        assert scaled_microbatches(2, 4, 2) == 4
+        assert scaled_microbatches(1, 4, 1) == 4
+        with pytest.raises(RuntimeError):
+            scaled_microbatches(1, 3, 2)       # global batch can't survive
+
+    def test_span_scaled_target(self):
+        assert span_scaled_target(4 << 20, 4, 2) == 2 << 20
+        assert span_scaled_target(4 << 20, 2, 2) == 4 << 20
+        assert span_scaled_target(7, 8, 1) >= 1          # floor at 1 byte
+        with pytest.raises(ValueError):
+            span_scaled_target(1 << 20, 0, 2)
+
+    def test_refit_step_config(self):
+        s = StepConfig(microbatches=2, grad_bucket_bytes=4 << 20)
+        r = refit_step_config(s, 4, 2)
+        assert r.microbatches == 4                       # global batch held
+        assert r.grad_bucket_bytes == 2 << 20            # per-hop msg held
+        assert refit_step_config(StepConfig(), 2, 1).grad_bucket_bytes is None
+        with pytest.raises(RuntimeError):
+            refit_step_config(s, 3, 2)
+
+
+# ---------------------------------------------------------------------------
+# conduit re-form + recovery-cost model
+# ---------------------------------------------------------------------------
+
+
+class TestReformConduits:
+    def test_plans_cover_multi_extent_axes(self, mesh22):
+        plans = reform_conduits(mesh22)
+        assert set(plans) == {"data", "model"}
+        for axis, plan in plans.items():
+            assert plan.size == 2
+            assert set(plan.op_transports) == {
+                "all_gather", "reduce_scatter", "all_reduce", "all_to_all"}
+            assert plan.matmul_family in ("ring", "bidir", "fused")
+            assert plan.conduit.axis == axis
+
+    def test_recovery_cost_model(self):
+        link = nm.FSHMEM_QSFP
+        pkt = max(link.packet_overhead_bytes)
+        # re-form is a few short control rounds: grows with rank count
+        assert nm.reform_time(link, 8, pkt) > nm.reform_time(link, 4, pkt) > 0
+        assert nm.reprefill_time(link, 1e-4, 0, 256, 4, pkt) == 0.0
+        assert (nm.reprefill_time(link, 1e-4, 128, 256, 4, pkt)
+                > nm.reprefill_time(link, 1e-4, 16, 256, 4, pkt))
+        s = nm.serve_recovery_time(link, n_ranks=4, t_compute_per_tok=1e-4,
+                                   reprefill_tokens=64, kv_bytes_per_tok=4096,
+                                   n_chunks=4, packet_size=pkt)
+        assert s > nm.reform_time(link, 4, pkt)
+        # shorter checkpoint interval -> less replay -> faster recovery
+        fast = nm.train_recovery_time(link, n_ranks=4, ckpt_bytes=1 << 30,
+                                      ckpt_interval_steps=10, step_time=0.5,
+                                      packet_size=pkt)
+        slow = nm.train_recovery_time(link, n_ranks=4, ckpt_bytes=1 << 30,
+                                      ckpt_interval_steps=100, step_time=0.5,
+                                      packet_size=pkt)
+        assert fast < slow
+
+
+# ---------------------------------------------------------------------------
+# BlockPool partition loss (conservation under drain)
+# ---------------------------------------------------------------------------
+
+
+class TestBlockPoolPartition:
+    def test_partitions_tile_the_pool(self):
+        pool = BlockPool(32, reserved=4)
+        ids = [b for r in range(3) for b in pool.partition(r, 3)]
+        assert ids == list(range(32))          # disjoint, exhaustive
+
+    def test_fail_partition_conserves_blocks(self):
+        pool = BlockPool(16, reserved=2)
+        a = pool.alloc(4)                       # live on various partitions
+        b = pool.alloc(3)
+        pool.cache_insert(b"k", b)              # pinned by a cache entry too
+        lost = pool.fail_partition(1, 2)        # ids [8, 16) go dark
+        assert lost == frozenset(range(8, 16))
+        pool.check_conservation()
+        # nothing allocatable from the dead partition anymore
+        assert not set(pool._free) & lost
+        # releasing a lost live block quarantines it instead of freeing it
+        pool.release(a)
+        pool.check_conservation()
+        assert not set(pool._free) & lost
+
+    def test_entries_on_lost_blocks_are_purged(self):
+        pool = BlockPool(16, reserved=0)
+        bids = pool.alloc(3)
+        pool.cache_insert(b"prefix", bids)
+        pool.release(bids)                      # entry pin is the only ref
+        assert pool.cached_entries == 1
+        pool.fail_partition(0, 2)               # low ids die with rank 0
+        assert pool.cached_entries == 0         # entry gone, not dangling
+        pool.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# checkpoint reshard-on-restore (satellite: save (n,1) -> restore shrunk)
+# ---------------------------------------------------------------------------
+
+
+class TestCheckpointReshard:
+    @pytest.mark.parametrize("new_model", [1, 2])
+    def test_restore_resharded_bitwise(self, tmp_path, new_model):
+        """Save params + opt state on an (n, 1) mesh, restore onto the
+        shrunk (n/2, model) variants: every leaf bitwise-equal after
+        regather (checkpoints store logical arrays; the mesh only maps
+        them physically)."""
+        from repro.checkpoint import load_checkpoint, save_checkpoint
+        from repro.dist.steps import build_init
+        n = len(jax.devices())
+        if n < 4:
+            pytest.skip("needs >= 4 host devices")
+        cfg = get_config("smollm-360m").reduced()
+        scfg = StepConfig(microbatches=1, seq_chunk=8)
+
+        def mk(data, model):
+            return jax.make_mesh(
+                (data, model), ("data", "model"),
+                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+        init_fn, _ = build_init(cfg, mk(n, 1), scfg)
+        state = init_fn(jax.random.PRNGKey(0))    # (params, opt)
+        save_checkpoint(str(tmp_path), 0, state)
+        want = jax.tree.map(np.asarray, jax.device_get(state))
+
+        mesh2 = mk(n // 2, new_model)             # half the ranks survive
+        init_fn2, (pspecs2, ospecs2) = build_init(cfg, mesh2, scfg)
+        template = jax.eval_shape(init_fn2, jax.random.PRNGKey(0))
+        sh2 = (to_shardings(mesh2, pspecs2), to_shardings(mesh2, ospecs2))
+        got, manifest = load_checkpoint(str(tmp_path), template,
+                                        shardings=sh2)
+        assert manifest["step"] == 0
+        flat_w, td = jax.tree.flatten(want)
+        flat_g = td.flatten_up_to(jax.tree.map(np.asarray,
+                                               jax.device_get(got)))
+        for w, g in zip(flat_w, flat_g):
+            assert w.dtype == g.dtype
+            np.testing.assert_array_equal(w, g)   # bitwise after regather
+
+
+# ---------------------------------------------------------------------------
+# end-to-end identity guarantees
+# ---------------------------------------------------------------------------
+
+
+class TestServeRecovery:
+    def _serve(self, mesh, prompts, plan):
+        cfg = get_config("smollm-360m").reduced()
+        params, _, _ = _params_on(cfg, mesh)
+        srv = Server(cfg, params, mesh, srv=ServerConfig(
+            max_batch=2, max_seq=64, max_new_tokens=6, prefill_chunk=4,
+            paged=True, block_size=4), fault_plan=plan)
+        for p in prompts:
+            srv.submit(p)
+        srv.run()
+        return srv
+
+    def test_decode_rank_loss_tokens_identical(self, mesh22):
+        """Kill a decode rank mid-stream: every in-flight request still
+        completes with tokens bitwise-identical to an unfailed run."""
+        rng = np.random.default_rng(0)
+        cfg = get_config("smollm-360m").reduced()
+        prompts = [rng.integers(0, cfg.vocab_size, size=s)
+                   for s in (8, 11, 7)]
+        clean = self._serve(mesh22, prompts, None)
+        failed = self._serve(mesh22, prompts,
+                             FaultPlan().kill_rank(1, at_step=6))
+        want = {r.rid: r.out_tokens for r in clean.done}
+        got = {r.rid: r.out_tokens for r in failed.done}
+        assert got == want                      # bitwise token identity
+        s = failed.stats()
+        assert s["recoveries"] >= 1
+        assert s["reprefilled_tokens"] > 0
+        assert s["lost_blocks"] > 0
+        failed.pool.check_conservation()        # holds after full drain
+
+
+class TestTrainRecovery:
+    def _trainer(self, tmp_path, mesh, total, plan=None):
+        cfg = get_config("smollm-360m").reduced()
+        scfg = StepConfig(microbatches=1, seq_chunk=8, warmup_steps=2,
+                          total_steps=total, peak_lr=1e-3)
+        data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=17,
+                                      global_batch=4, seed=0))
+        tcfg = TrainerConfig(total_steps=total, ckpt_dir=str(tmp_path / "ck"),
+                             ckpt_interval=2, log_interval=100)
+        return Trainer(cfg, scfg, tcfg, data, mesh=mesh,
+                       log_fn=lambda s: None, fault_plan=plan)
+
+    def test_rank_loss_trajectory_identical(self, tmp_path, mesh22):
+        """Kill a rank mid-run: the survivors re-form, restore the last
+        checkpoint resharded, scale grad accumulation, and the resumed loss
+        trajectory matches an unfailed run step for step."""
+        t_clean = self._trainer(tmp_path / "a", mesh22, total=6)
+        t_clean.train()
+        clean = {h["step"]: round(h["loss"], 5) for h in t_clean.history}
+
+        plan = FaultPlan().kill_rank(3, at_step=4)
+        t = self._trainer(tmp_path / "b", mesh22, total=6, plan=plan)
+        t.train()
+        assert t.elastic is not None            # the recovery path ran
+        report = t.elastic.reports[0]
+        assert dict(report.new_shape)["data"] == 1
+        assert t.scfg.microbatches == 2         # global batch held constant
+        got = {h["step"]: round(h["loss"], 5) for h in t.history}
+        for step in range(5, 7):                # post-recovery steps
+            assert got[step] == clean[step], (step, got[step], clean[step])

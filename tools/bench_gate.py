@@ -1,6 +1,6 @@
 """CI gate over the modeled perf artifacts: streamed must never lose.
 
-Two artifacts, one floor:
+Three artifacts, one floor:
 
 * ``BENCH_overlap.json`` (``benchmarks/overlap_pipeline.py``) — per EP
   preset operating point, the best-link streamed EP schedule must model
@@ -14,13 +14,18 @@ Two artifacts, one floor:
   operating point (arch × prompt length), the best-link chunked-prefill
   TTFT must model ≥ 1.0× of bulk prefill (the ≥ 1.3× QSFP acceptance
   claim lives in the benchmark).
+* ``BENCH_elastic.json`` (``benchmarks/elastic_bench.py``) — per elastic
+  operating point, shorter checkpoint intervals must never model slower
+  train recovery, and prefix-reusing re-admission must never model
+  slower than full re-prefill (the ≥ 1.3× QSFP acceptance claim lives
+  in the benchmark).
 
 The gate fails (exit 1) if any preset operating point regresses below the
 floor — i.e. if a change to the scheduler, the conduit cost model, or the
 netmodel makes the pipeline the *wrong* choice at an operating point the
 presets actually ship.
 
-Usage: ``python tools/bench_gate.py [overlap.json [serve.json]]``
+Usage: ``python tools/bench_gate.py [overlap.json [serve.json [elastic.json]]]``
 """
 
 from __future__ import annotations
@@ -159,12 +164,72 @@ def check_serve(path: str) -> int:
     return 0
 
 
+def check_elastic(path: str) -> int:
+    """Elastic gate: recovery must never model slower than its baseline.
+
+    Two floors over ``BENCH_elastic.json``: per (arch, ckpt interval),
+    the best-link train recovery vs the longest swept interval (shorter
+    intervals can never cost more); per (arch, prompt, surviving
+    fraction), the best-link tail-only re-admission vs full re-prefill
+    (prefix COW reuse can never lose)."""
+    with open(path) as f:
+        payload = json.load(f)
+    failures = []
+
+    train = [r for r in payload.get("rows", [])
+             if r.get("suite") == "train_recovery"]
+    if not train:
+        print(f"bench_gate: no train_recovery rows in {path}")
+        return 1
+    points = {}
+    for r in train:
+        points.setdefault((r["arch"], r["ckpt_interval"]), []).append(r)
+    for (arch, interval), rs in sorted(points.items()):
+        best = max(rs, key=lambda r: r["speedup"])
+        status = "ok" if best["speedup"] >= FLOOR else "FAIL"
+        print(f"bench_gate: {arch} ckpt@{interval}: recovery "
+              f"{best['recovery_s']:.2f}s ({best['speedup']:.2f}x vs "
+              f"longest interval) on {best['link']} [{status}]")
+        if best["speedup"] < FLOOR:
+            failures.append((arch, interval, best["speedup"]))
+
+    serve = [r for r in payload.get("rows", [])
+             if r.get("suite") == "serve_recovery"]
+    if not serve:
+        print(f"bench_gate: no serve_recovery rows in {path}")
+        return 1
+    points = {}
+    for r in serve:
+        points.setdefault((r["arch"], r["prompt_len"], r["survive_frac"]),
+                          []).append(r)
+    for (arch, s, f_), rs in sorted(points.items()):
+        best = max(rs, key=lambda r: r["speedup"])
+        status = "ok" if best["speedup"] >= FLOOR else "FAIL"
+        print(f"bench_gate: {arch} @ {s} prompt, {f_:.0%} surviving: "
+              f"re-admit {best['speedup']:.2f}x vs full re-prefill on "
+              f"{best['link']} [{status}]")
+        if best["speedup"] < FLOOR:
+            failures.append((arch, s, f_, best["speedup"]))
+
+    claim = payload.get("claims", {}).get("serve_recovery_max_speedup_qsfp")
+    print(f"bench_gate: best qsfp re-admission speedup: {claim}")
+    if failures:
+        print(f"bench_gate: {len(failures)} elastic operating point(s) "
+              f"below {FLOOR}x: {failures}")
+        return 1
+    print("bench_gate: all elastic operating points clear the floor")
+    return 0
+
+
 if __name__ == "__main__":
     overlap = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
         REPO_ROOT, "BENCH_overlap.json")
     serve = sys.argv[2] if len(sys.argv) > 2 else os.path.join(
         REPO_ROOT, "BENCH_serve.json")
+    elastic = sys.argv[3] if len(sys.argv) > 3 else os.path.join(
+        REPO_ROOT, "BENCH_elastic.json")
     rc = check(overlap)
     rc = check_fused(overlap) or rc
     rc = check_serve(serve) or rc
+    rc = check_elastic(elastic) or rc
     sys.exit(rc)
