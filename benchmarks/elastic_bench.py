@@ -1,6 +1,6 @@
 """Elastic recovery sweep: what a rank loss costs, modeled and measured.
 
-The robustness artifact of the elastic membership PR.  Three sections:
+The robustness artifact of the elastic membership PRs.  Five sections:
 
 * **train recovery vs checkpoint interval (modeled)** — per arch × link
   class, ``netmodel.train_recovery_time`` decomposed into its three
@@ -18,11 +18,23 @@ The robustness artifact of the elastic membership PR.  Three sections:
   and only the lost tail re-prefills.  The ``speedup`` column is the
   full-re-prefill recovery (no prefix reuse — what a pool without
   cache-aware re-admission would pay) over the tail-only recovery.
+* **detection latency and false positives (measured host detector)** —
+  per lease period × K, the real ``runtime/membership.MembershipService``
+  driven through a lease-suppressed kill: steps from suppression to the
+  epoch bump, gated against the closed-form ``netmodel.detection_latency``
+  bound ``lease_period x (K+1)``; plus the false-positive rate over a
+  ``delay_am`` jitter sweep up to ``(K-1)`` lease periods (must be 0) and
+  the modeled heartbeat wire overhead per link class.
+* **join MTTR (modeled)** — per arch × link,
+  ``netmodel.scaleout_mttr``: announce, epoch-boundary admit, conduit
+  re-form at ``n+1``, resharded state hand-off to the joiner.
 * **measured CPU-mesh recovery** — the real ``runtime/server.py`` on a
-  host mesh, an unfailed run against a run with a scripted decode-rank
-  kill mid-stream (``runtime/faults.FaultPlan``): drain/re-admit wall,
-  recoveries, re-prefilled tokens, and the bit-identity assert — every
-  request's tokens must match the unfailed run exactly.
+  host mesh, an unfailed run against (a) a run with a scripted
+  decode-rank kill mid-stream (``runtime/faults.FaultPlan``) and (b) a
+  live-detector churn run (two ranks lose their lease in one window —
+  one epoch bump — and one rejoins): drain/re-admit wall, recoveries,
+  re-prefilled tokens, and the bit-identity assert — every request's
+  tokens must match the unfailed run exactly.
 
 Writes ``BENCH_elastic.json`` at the repo root; ``tools/bench_gate.py``
 gates CI on its preset rows.  ``--model-only`` skips the measured section.
@@ -161,6 +173,91 @@ def model_serve_recovery_rows():
     return rows
 
 
+#: lease periods swept, in host steps (detection suite)
+LEASE_PERIODS = (1, 2, 5)
+#: miss thresholds swept (K consecutive missed deadlines => dead)
+K_SWEEP = (2, 3, 5)
+#: host-step wall at the modeled serving operating point
+STEP_TIME_S = 1e-3
+
+
+def detection_rows():
+    """Detector latency and false-positive rows, *measured* against the
+    real :class:`~repro.runtime.membership.MembershipService` (a pure
+    host simulation — no mesh needed) and gated against the closed-form
+    ``netmodel.detection_latency`` bound.  The jitter sweep spans
+    ``delay_am`` bursts up to ``(K-1)`` lease periods — the worst lag the
+    detector must absorb without a false positive."""
+    from repro.core import netmodel as nm
+    from repro.runtime.faults import FaultPlan
+    from repro.runtime.membership import LeaseConfig, MembershipService
+
+    rows = []
+    for p in LEASE_PERIODS:
+        for k in K_SWEEP:
+            p_s = p * STEP_TIME_S
+            kill_at = 3 * p + 1
+            plan = FaultPlan(deliver="lease").kill_rank(1, at_step=kill_at)
+            svc = MembershipService(
+                4, LeaseConfig(lease_period=p, k_misses=k,
+                               step_time_s=STEP_TIME_S), fault_plan=plan)
+            ev = None
+            for s in range(kill_at + p * (k + 2) + 2):
+                ev = svc.on_step(s) or ev
+            assert ev is not None and ev.died == (1,), (p, k, ev)
+            latency_s = (ev.step - kill_at) * STEP_TIME_S
+            bound_s = nm.detection_latency(p_s, k)
+            # jitter the detector must ride out without declaring anyone
+            delays = (0.0, 0.5 * p_s, (k - 1) * p_s)
+            fp = nm.false_positive_rate(p_s, k, delays)
+            for link_name, link in (("qsfp", nm.FSHMEM_QSFP),
+                                    ("ici", nm.TPU_ICI)):
+                packet = max(link.packet_overhead_bytes)
+                rows.append({
+                    "source": "measured-host-detector", "suite": "detection",
+                    "link": link_name,
+                    "lease_period_s": p_s, "k_misses": k,
+                    "detection_latency_s": latency_s,
+                    "bound_s": bound_s,
+                    "fp_rate": fp,
+                    "lease_overhead": nm.lease_overhead(
+                        link, N_SURVIVORS, p_s, packet),
+                })
+    return rows
+
+
+def join_mttr_rows():
+    """Scale-out MTTR rows: announce -> epoch-boundary admit -> conduit
+    re-form at ``n+1`` -> resharded state hand-off to the joiner
+    (``netmodel.scaleout_mttr``)."""
+    from repro.configs import get_config
+    from repro.core import netmodel as nm
+
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        state_bytes = _param_bytes(cfg)
+        for link_name, link in (("qsfp", nm.FSHMEM_QSFP),
+                                ("ici", nm.TPU_ICI)):
+            packet = max(link.packet_overhead_bytes)
+            p_s = STEP_TIME_S
+            admit = nm.join_admit_time(link, n_ranks=N_SURVIVORS,
+                                       lease_period_s=p_s,
+                                       packet_size=packet)
+            mttr = nm.scaleout_mttr(link, n_ranks=N_SURVIVORS,
+                                    state_bytes=state_bytes,
+                                    lease_period_s=p_s, packet_size=packet)
+            rows.append({
+                "source": "preset-model", "suite": "join_mttr",
+                "arch": arch, "link": link_name,
+                "state_bytes": state_bytes,
+                "lease_period_s": p_s,
+                "join_admit_s": admit,
+                "mttr_s": mttr,
+            })
+    return rows
+
+
 def measured_recovery_rows():
     """The real server on a host mesh: unfailed vs scripted mid-stream
     decode-rank kill, with the token-identity assert."""
@@ -188,21 +285,43 @@ def measured_recovery_rows():
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, cfg.vocab_size, size=s) for s in (8, 11, 7)]
 
+    from repro.runtime.membership import LeaseConfig, MembershipService
+
+    def _chaos():
+        # live-detector churn: two ranks lose their lease in one window,
+        # one of them rejoins later — all via heartbeats, no scripted raise
+        plan = (FaultPlan(deliver="lease")
+                .kill_rank(1, at_step=6).kill_rank(2, at_step=6))
+        svc = MembershipService(4, LeaseConfig(lease_period=1, k_misses=2),
+                                fault_plan=plan)
+        svc.schedule_join(1, at_step=16)
+        return plan, svc
+
     rows, outs = [], {}
-    for mode, plan in (("clean", None),
-                       ("fail@6", FaultPlan().kill_rank(1, at_step=6))):
+    epochs = {}
+    for mode, mk in (("clean", lambda: (None, None)),
+                     ("fail@6",
+                      lambda: (FaultPlan().kill_rank(1, at_step=6), None)),
+                     ("chaos@lease", _chaos)):
+        plan, membership = mk()
         srv = Server(cfg, params, mesh, srv=ServerConfig(
             max_batch=2, max_seq=64, max_new_tokens=6, prefill_chunk=4,
-            paged=True, block_size=4), fault_plan=plan)
+            paged=True, block_size=4), fault_plan=plan,
+            membership=membership)
         for p in prompts:
             srv.submit(p)
         t0 = time.perf_counter()
         steps = srv.run()
+        if membership is not None:
+            while (not any(ev.joined for ev in membership.events)
+                   and steps < 200):
+                srv.step()
+                steps += 1
         wall = time.perf_counter() - t0
         stats = srv.stats()
         srv.pool.check_conservation()
         outs[mode] = {r.rid: r.out_tokens for r in srv.done}
-        rows.append({
+        row = {
             "source": "measured-cpu-mesh", "suite": "measured_recovery",
             "arch": cfg.name, "mode": mode,
             "requests": stats["requests"], "tokens": stats["tokens"],
@@ -210,10 +329,22 @@ def measured_recovery_rows():
             "recoveries": stats["recoveries"],
             "reprefilled_tokens": stats["reprefilled_tokens"],
             "lost_blocks": stats["lost_blocks"],
-        })
+        }
+        if membership is not None:
+            deaths = [ev for ev in membership.events if ev.died]
+            epochs[mode] = (membership.epoch, deaths)
+            row["epoch"] = membership.epoch
+            row["quarantined_blocks"] = stats["quarantined_blocks"]
+        rows.append(row)
     assert outs["fail@6"] == outs["clean"], \
         "recovered tokens != unfailed tokens"
-    assert rows[-1]["recoveries"] >= 1, "scripted kill never fired"
+    assert outs["chaos@lease"] == outs["clean"], \
+        "detector-recovered tokens != unfailed tokens"
+    assert any(r["mode"] == "fail@6" and r["recoveries"] >= 1
+               for r in rows), "scripted kill never fired"
+    _, deaths = epochs["chaos@lease"]
+    assert len(deaths) == 1 and deaths[0].died == (1, 2), \
+        f"double loss must be one epoch bump, got {deaths}"
     return rows
 
 
@@ -231,19 +362,31 @@ def claims_from(rows) -> dict:
         assert all(a[1] <= b[1] for a, b in zip(ts, ts[1:])), \
             f"recovery not monotone in ckpt interval ({arch}, {link})"
 
+    detect = [r for r in rows if r["suite"] == "detection"]
+    assert detect, "no detection rows"
+    for r in detect:
+        assert r["detection_latency_s"] <= r["bound_s"], \
+            (f"measured detection {r['detection_latency_s']} beyond the "
+             f"modeled bound {r['bound_s']} at {r}")
+        assert r["fp_rate"] == 0.0, f"false positive under jitter: {r}"
+
     worst_serve = min(r["speedup"] for r in serve)
     worst_train = min(r["speedup"] for r in train)
     return {
         "serve_recovery_max_speedup_qsfp": qsfp_best,
         "serve_recovery_min_speedup": worst_serve,
         "train_recovery_min_speedup": worst_train,
+        "detection_latency_max_ratio": max(
+            r["detection_latency_s"] / r["bound_s"] for r in detect),
+        "detection_fp_rate_max": max(r["fp_rate"] for r in detect),
     }
 
 
 def main(model_only: bool = False) -> dict:
     os.environ.setdefault(
         "XLA_FLAGS", "--xla_force_host_platform_device_count=4")
-    rows = model_train_recovery_rows() + model_serve_recovery_rows()
+    rows = (model_train_recovery_rows() + model_serve_recovery_rows()
+            + detection_rows() + join_mttr_rows())
     claims = claims_from(rows)
     if not model_only:
         rows += measured_recovery_rows()

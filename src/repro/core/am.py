@@ -167,18 +167,22 @@ def _put_reply_handler(heap, args, payload):
 # ---------------------------------------------------------------------------
 
 
-def _deliver(msg, axis: str, perm: Perm):
+def _deliver(msg, axis: str, perm: Perm, *, epoch=None):
     """ppermute a pytree of message fields (one wire transfer).
 
     Consults the conduit failure probe first (``conduit.check_failure``):
     a dead peer surfaces as a typed ``RankFailure`` at injection time
     instead of a hung wire — the AM layer shares the conduit's failure
-    surface because on hardware both ride the same NIC.
+    surface because on hardware both ride the same NIC.  When the caller
+    pins a membership ``epoch``, the conduit epoch check runs too
+    (``conduit.check_epoch``): a delivery built against a superseded view
+    raises ``StaleEpoch`` instead of landing in the new one.
     """
     import jax
 
-    from repro.core.conduit import check_failure
+    from repro.core.conduit import check_epoch, check_failure
     check_failure("am_deliver", axis)
+    check_epoch("am_deliver", epoch)
     return jax.tree.map(lambda x: lax.ppermute(x, axis, list(perm)), msg)
 
 
@@ -191,6 +195,7 @@ def am_request(
     *,
     axis: str,
     perm: Perm,
+    epoch=None,
 ) -> jnp.ndarray:
     """Send an AM request from each ``src`` to ``dst`` in ``perm``, run the
     request handler at the destination, deliver its reply back, and run the
@@ -199,14 +204,16 @@ def am_request(
     Non-participating ranks dispatch opcode 0 with zero payloads, which the
     mask then discards — the SPMD cost of the one-sided model (same trick a
     hardware NIC uses: every port always clocks, idle ports carry null
-    frames).
+    frames).  ``epoch`` (optional) pins both wire transfers to a
+    membership epoch (see ``_deliver``).
     """
     perm = list(perm)
     rev = [(d, s) for (s, d) in perm]
     opcode = jnp.asarray(opcode, jnp.int32)
 
     # --- request wire transfer (header + body) ---
-    op_r, args_r, body_r = _deliver((opcode, args, payload), axis, perm)
+    op_r, args_r, body_r = _deliver((opcode, args, payload), axis, perm,
+                                    epoch=epoch)
     recv = _recv_mask(axis, perm)
     op_safe = jnp.where(recv, op_r, 0)
 
@@ -217,7 +224,8 @@ def am_request(
     rep_op = jnp.where(recv, rep_op, 0)
 
     # --- reply wire transfer (destination -> origin) ---
-    rop_b, rargs_b, rbody_b = _deliver((rep_op, rep_args, rep_payload), axis, rev)
+    rop_b, rargs_b, rbody_b = _deliver((rep_op, rep_args, rep_payload), axis,
+                                       rev, epoch=epoch)
     recv_rep = _recv_mask(axis, rev)
     rop_safe = jnp.where(recv_rep, rop_b, 0)
     replied = registry.dispatch_reply(rop_safe, heap, rargs_b, rbody_b, axis=axis)
@@ -227,14 +235,15 @@ def am_request(
 # -- message-class wrappers (Table I) ----------------------------------------
 
 
-def am_request_short(registry, heap, opcode, args, *, axis, perm):
+def am_request_short(registry, heap, opcode, args, *, axis, perm, epoch=None):
     """Short AM: header + args, zero-length payload."""
     payload = jnp.zeros((1,), heap.dtype)  # 1-word null frame (shape-static)
-    return am_request(registry, heap, opcode, args, payload, axis=axis, perm=perm)
+    return am_request(registry, heap, opcode, args, payload, axis=axis,
+                      perm=perm, epoch=epoch)
 
 
 def am_request_medium(
-    registry, heap, opcode, args, payload, *, axis, perm
+    registry, heap, opcode, args, payload, *, axis, perm, epoch=None
 ):
     """Medium AM: payload handed to the handler as scratch (not heap-addressed).
 
@@ -242,7 +251,9 @@ def am_request_medium(
     receiving ranks — the "local memory address" of the spec.
     """
     perm = list(perm)
-    op_r, args_r, body_r = _deliver((jnp.asarray(opcode, jnp.int32), args, payload), axis, perm)
+    op_r, args_r, body_r = _deliver(
+        (jnp.asarray(opcode, jnp.int32), args, payload), axis, perm,
+        epoch=epoch)
     recv = _recv_mask(axis, perm)
     op_safe = jnp.where(recv, op_r, 0)
     new_heap, _, _, _ = registry.dispatch_request(op_safe, heap, args_r, body_r, axis=axis)
@@ -251,9 +262,12 @@ def am_request_medium(
     return heap, scratch
 
 
-def am_request_long(registry, heap, opcode, args, payload, dst_offset, *, axis, perm):
+def am_request_long(registry, heap, opcode, args, payload, dst_offset, *,
+                    axis, perm, epoch=None):
     """Long AM: payload is deposited at ``dst_offset`` in the destination's
     heap **before** the handler runs (the spec's ordering guarantee)."""
+    from repro.core.conduit import check_epoch
+    check_epoch("am_deliver", epoch)
     perm = list(perm)
     body_r = lax.ppermute(payload, axis, perm)
     off_r = lax.ppermute(jnp.asarray(dst_offset, jnp.int32), axis, perm)
@@ -272,16 +286,17 @@ def am_request_long(registry, heap, opcode, args, payload, dst_offset, *, axis, 
 # -- extended API on top of AM (the paper's gasnet_put / gasnet_get) ---------
 
 
-def gasnet_put(registry, heap, payload, dst_offset, *, axis, perm):
+def gasnet_put(registry, heap, payload, dst_offset, *, axis, perm, epoch=None):
     """PUT = long AM request invoking the PUT handler (paper Sec. III-A)."""
     args = make_args(dst_offset)
     return am_request(
         registry, heap, registry.request_opcode("PUT"), args, payload,
-        axis=axis, perm=perm,
+        axis=axis, perm=perm, epoch=epoch,
     )
 
 
-def gasnet_get(registry, heap, src_offset, dst_offset, size, *, axis, perm):
+def gasnet_get(registry, heap, src_offset, dst_offset, size, *, axis, perm,
+               epoch=None):
     """GET = short AM request; its handler issues a long PUT reply.
 
     ``perm`` lists ``(requester, source)`` pairs.  The requested chunk lands
@@ -294,5 +309,5 @@ def gasnet_get(registry, heap, src_offset, dst_offset, size, *, axis, perm):
     payload = jnp.zeros((size,), heap.dtype)  # shape carrier for the reply
     return am_request(
         registry, heap, registry.request_opcode("GET"), args, payload,
-        axis=axis, perm=req,
+        axis=axis, perm=req, epoch=epoch,
     )

@@ -101,15 +101,47 @@ class RankFailure(RuntimeError):
     """
 
     def __init__(self, rank: Optional[int] = None, op: str = "",
-                 detail: str = ""):
-        """Record the failing ``rank`` and the conduit/AM ``op`` involved."""
+                 detail: str = "", ranks: Optional[Sequence[int]] = None):
+        """Record the failing ``rank``/``ranks`` and the op involved.
+
+        ``ranks`` carries a *batch* of simultaneous losses (the membership
+        detector declares every rank that missed the same deadline in one
+        exception so recovery re-forms once); it defaults to ``(rank,)``.
+        """
         self.rank, self.op = rank, op
+        if ranks is not None:
+            self.ranks: Tuple[int, ...] = tuple(int(r) for r in ranks)
+        else:
+            self.ranks = (rank,) if rank is not None else ()
         msg = f"rank failure on {op or 'collective'}"
-        if rank is not None:
+        if len(self.ranks) > 1:
+            msg += f" (ranks {list(self.ranks)})"
+        elif rank is not None:
             msg += f" (rank {rank})"
         if detail:
             msg += f": {detail}"
         super().__init__(msg)
+
+
+class StaleEpoch(RankFailure):
+    """An operation built against a superseded membership view ran anyway.
+
+    Membership changes are versioned **epochs** (``runtime/membership.py``):
+    a conduit or AM wire pinned at epoch ``built`` that executes after the
+    membership advanced to ``current`` raises this instead of touching the
+    network — in-flight work from a dead view can never corrupt the new
+    one.  A subclass of :class:`RankFailure` so every existing recovery
+    catch path already handles it; :class:`RetryingConduit` never retries
+    it (the view is gone, not wobbling — the caller must rebuild against
+    :func:`current_epoch`).
+    """
+
+    def __init__(self, built: int, current: int, op: str = ""):
+        """Record the epoch the op was ``built`` at vs the ``current`` one."""
+        self.built, self.current = int(built), int(current)
+        super().__init__(
+            None, op,
+            f"built at epoch {self.built}, membership now at {self.current}")
 
 
 #: installed failure probe: ``fn(op, axis)`` raises :class:`RankFailure`
@@ -145,6 +177,50 @@ def check_failure(op: str, axis: str) -> None:
     """
     if _FAILURE_HOOK is not None:
         _FAILURE_HOOK(op, axis)
+
+
+#: installed epoch source: ``fn()`` returns the current membership epoch
+#: (``runtime/membership.MembershipService`` installs its own counter)
+_EPOCH_PROVIDER: Optional[Callable[[], int]] = None
+
+
+def install_epoch_provider(fn: Callable[[], int]) -> None:
+    """Install ``fn() -> int`` as the membership-epoch source.
+
+    Epoch-pinned conduits (:meth:`Conduit.at_epoch`) and AM deliveries
+    compare their build-time epoch against ``fn()`` before touching the
+    network and raise :class:`StaleEpoch` on mismatch.  One provider at a
+    time — installing replaces the previous one.
+    """
+    global _EPOCH_PROVIDER
+    _EPOCH_PROVIDER = fn
+
+
+def clear_epoch_provider() -> None:
+    """Remove the installed epoch source (epoch checks become no-ops)."""
+    global _EPOCH_PROVIDER
+    _EPOCH_PROVIDER = None
+
+
+def current_epoch() -> Optional[int]:
+    """The installed provider's epoch, or ``None`` when none is installed."""
+    return None if _EPOCH_PROVIDER is None else int(_EPOCH_PROVIDER())
+
+
+def check_epoch(op: str, built: Optional[int]) -> None:
+    """Raise :class:`StaleEpoch` if ``built`` lags the provider's epoch.
+
+    No-op when the op is unpinned (``built is None``) or no provider is
+    installed — legacy callers pay one global read.  Like
+    :func:`check_failure` this runs at call/trace time, which is exactly
+    when a cached jitted step would otherwise be reused across a
+    membership change.
+    """
+    if built is None or _EPOCH_PROVIDER is None:
+        return
+    cur = int(_EPOCH_PROVIDER())
+    if cur != int(built):
+        raise StaleEpoch(built, cur, op)
 
 
 # ---------------------------------------------------------------------------
@@ -952,12 +1028,22 @@ class Conduit:
     Hashable and immutable, so it can be closed over by jitted/shard_mapped
     code.  ``transport='auto'`` resolves per call from the payload's static
     byte size via :func:`auto_select`.
+
+    ``epoch`` pins the handle to the membership epoch it was built
+    against (:meth:`at_epoch`): with an epoch provider installed, every
+    op first runs :func:`check_epoch` and raises :class:`StaleEpoch` once
+    the membership has moved on.  ``None`` (the default) opts out.
     """
 
     axis: str
     transport: str = "auto"    # "xla" | "ring" | "bidir" | "fused" | "auto"
     chunk_bytes: Optional[int] = None
     link: str = "qsfp"               # key into LINKS (netmodel params)
+    epoch: Optional[int] = None      # membership epoch this handle targets
+
+    def at_epoch(self, epoch: Optional[int]) -> "Conduit":
+        """A copy of this handle pinned to membership ``epoch``."""
+        return dataclasses.replace(self, epoch=epoch)
 
     # -- resolution ---------------------------------------------------------
 
@@ -972,6 +1058,7 @@ class Conduit:
 
     def _call(self, op: str, x, **kw):
         check_failure(op, self.axis)
+        check_epoch(op, self.epoch)
         size = int(x.size) * jnp.dtype(x.dtype).itemsize
         if op == "all_gather":
             # estimate_time's convention is the *global* payload; the
@@ -985,6 +1072,7 @@ class Conduit:
     def barrier(self) -> jnp.ndarray:
         """Full-axis rendezvous; returns the axis size on every rank."""
         check_failure("barrier", self.axis)
+        check_epoch("barrier", self.epoch)
         name, chunk = self._resolve("barrier", 4)
         return resolve("barrier", name)(axis=self.axis, chunk_bytes=chunk)
 
@@ -1072,6 +1160,8 @@ class Conduit:
         :func:`matmul_edge_estimate` when ``compute_time`` is given —
         without it the fused family cannot be priced, so the choice
         degrades to the plain ring-vs-bidir cost model."""
+        check_failure("matmul_schedule", self.axis)
+        check_epoch("matmul_schedule", self.epoch)
         if self.transport in ("ring", "bidir", "fused"):
             return self.transport
         if compute_time is None:
@@ -1090,19 +1180,25 @@ class Conduit:
 
     # -- recovery-path flavor ------------------------------------------------
 
-    def with_retry(self, attempts: int = 3,
-                   backoff: float = 0.0) -> "RetryingConduit":
+    def with_retry(self, attempts: int = 3, backoff: float = 0.0,
+                   max_elapsed_s: Optional[float] = None
+                   ) -> "RetryingConduit":
         """A proxy that retries each collective on :class:`RankFailure`.
 
         Used by the elastic recovery path (``runtime/elastic.py``): during
         re-formation a peer may be transiently unreachable (drained, not
         dead), so each collective is attempted up to ``attempts`` times
-        with exponential backoff (``backoff``, ``2·backoff``, ...; seconds
-        of host sleep between attempts; ``0.0`` retries immediately).  A
-        loss that persists through every attempt re-raises the last
-        :class:`RankFailure` — permanent death is the caller's problem.
+        with deterministic exponential backoff (``backoff``, ``2·backoff``,
+        ``4·backoff``, ...; seconds of host sleep between attempts; ``0.0``
+        retries immediately).  ``max_elapsed_s`` caps the *total* backoff
+        budget per call: an attempt whose preceding sleeps would exceed it
+        is not made.  A loss that persists through every attempt (or past
+        the budget) re-raises the last :class:`RankFailure` — permanent
+        death is the caller's problem.  :class:`StaleEpoch` is never
+        retried: a superseded membership view cannot come back.
         """
-        return RetryingConduit(self, attempts=attempts, backoff=backoff)
+        return RetryingConduit(self, attempts=attempts, backoff=backoff,
+                               max_elapsed_s=max_elapsed_s)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -1110,31 +1206,51 @@ class RetryingConduit:
     """Retry/backoff wrapper around a :class:`Conduit` (see
     :meth:`Conduit.with_retry`).
 
-    Exposes the same collective surface; each call funnels through
+    Exposes the same collective surface — including the streamed and
+    fused-matmul entry points — and each call funnels through
     :meth:`_attempt`, which swallows transient :class:`RankFailure` and
-    re-raises the last one once ``attempts`` are exhausted.
+    re-raises the last one once ``attempts`` (or the ``max_elapsed_s``
+    deadline budget) are exhausted.  The backoff schedule is
+    deterministic — attempt *k* sleeps ``backoff · 2^k`` and the deadline
+    budget is charged by that *planned* schedule, not a wall clock — so a
+    retried run makes the same decisions every time.  :class:`StaleEpoch`
+    is re-raised immediately: a stale view is permanent, and absorbing it
+    would hide exactly the cross-epoch completion the epoch check exists
+    to prevent.
     """
 
     conduit: Conduit
     attempts: int = 3
     backoff: float = 0.0
+    max_elapsed_s: Optional[float] = None
 
     def __post_init__(self):
-        """Validate the retry budget (at least one attempt)."""
+        """Validate the retry budgets (≥1 attempt, non-negative deadline)."""
         if self.attempts < 1:
             raise ValueError(f"attempts must be >= 1, got {self.attempts}")
+        if self.max_elapsed_s is not None and self.max_elapsed_s < 0:
+            raise ValueError(
+                f"max_elapsed_s must be >= 0, got {self.max_elapsed_s}")
 
     def _attempt(self, fn: Callable, *args, **kw):
-        delay = self.backoff
+        elapsed = 0.0
         last: Optional[RankFailure] = None
         for k in range(self.attempts):
             try:
                 return fn(*args, **kw)
+            except StaleEpoch:
+                raise                        # a dead view never comes back
             except RankFailure as e:
                 last = e
-                if k + 1 < self.attempts and delay > 0:
+                if k + 1 >= self.attempts:
+                    break
+                delay = self.backoff * (2 ** k)
+                if (self.max_elapsed_s is not None
+                        and elapsed + delay > self.max_elapsed_s):
+                    break                    # deadline budget exhausted
+                elapsed += delay
+                if delay > 0:
                     time.sleep(delay)
-                    delay *= 2
         assert last is not None
         raise last
 
@@ -1162,11 +1278,36 @@ class RetryingConduit:
         """Retrying :meth:`Conduit.all_to_all`."""
         return self._attempt(self.conduit.all_to_all, x)
 
+    def streamed(self, op: str, payloads, *, work=None, **kw):
+        """Retrying :meth:`Conduit.streamed`: each per-chunk collective
+        gets its own attempt/backoff budget, so one transient hop loss
+        costs one chunk retry instead of restarting the whole stream."""
+        return pl.streamed(
+            len(payloads),
+            lambda k: self._attempt(self.conduit._call, op, payloads[k],
+                                    **kw),
+            work,
+        )
+
+    def matmul_bidirectional(self, size_bytes: int) -> bool:
+        """Retrying :meth:`Conduit.matmul_bidirectional`."""
+        return self._attempt(self.conduit.matmul_bidirectional, size_bytes)
+
+    def matmul_schedule(self, op: str, size_bytes: int,
+                        compute_time: Optional[float] = None) -> str:
+        """Retrying :meth:`Conduit.matmul_schedule`: schedule selection at
+        a fused/pipelined TP edge absorbs the same transient faults as the
+        plain collectives."""
+        return self._attempt(self.conduit.matmul_schedule, op, size_bytes,
+                             compute_time)
+
 
 __all__ = [
     "OPS", "LINKS", "CHUNK_CANDIDATES", "PIPELINE_CHUNKS", "Conduit",
-    "RetryingConduit", "RankFailure",
+    "RetryingConduit", "RankFailure", "StaleEpoch",
     "install_failure_hook", "clear_failure_hook", "check_failure",
+    "install_epoch_provider", "clear_epoch_provider", "current_epoch",
+    "check_epoch",
     "register", "transports", "resolve",
     "estimate_time", "matmul_edge_estimate", "auto_select",
     "crossover_bytes", "pipeline_estimate", "auto_select_pipeline",

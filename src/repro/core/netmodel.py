@@ -617,3 +617,115 @@ def train_recovery_time(
     restore = put_time(link, max(1, int(ckpt_bytes)), packet_size)
     replay = 0.5 * max(0, int(ckpt_interval_steps)) * step_time
     return reform_time(link, n_ranks, packet_size) + restore + replay
+
+
+# ---------------------------------------------------------------------------
+# Live membership costs (runtime/membership.py)
+# ---------------------------------------------------------------------------
+
+#: one heartbeat message: AM header + (rank, lease, epoch) words
+HEARTBEAT_MSG_BYTES = 16
+
+
+def detection_latency(lease_period_s: float, k_misses: int) -> float:
+    """Worst-case heartbeat detection wall (seconds).
+
+    A victim dying just *after* a publish stays fresh through that
+    deadline, then accrues ``k_misses`` consecutive missed deadlines —
+    ``k_misses`` periods plus up to one period of phase slack:
+    strictly bounded by ``lease_period_s × (k_misses + 1)``, the bound
+    ``tools/bench_gate.py`` holds on every detection row.
+    """
+    return float(lease_period_s) * (int(k_misses) + 1)
+
+
+def heartbeat_misses(lease_period_s: float, delay_s: float) -> int:
+    """Consecutive deadlines a delivery-jitter onset of ``delay_s`` costs.
+
+    Steady jitter shifts the whole arrival lattice and misses nothing
+    (arrivals stay one per period); the damage is at *onset*, where the
+    gap between the last prompt arrival and the first delayed one spans
+    ``ceil(delay_s / lease_period_s)`` deadlines.  Matches the
+    step-quantized detector exactly.
+    """
+    if lease_period_s <= 0:
+        raise ValueError(f"lease_period_s must be > 0, got {lease_period_s}")
+    if delay_s <= 0:
+        return 0
+    return int(math.ceil(delay_s / lease_period_s - 1e-9))
+
+
+def false_positive(lease_period_s: float, k_misses: int,
+                   delay_s: float) -> bool:
+    """Whether jitter ``delay_s`` alone trips a K-miss declaration.
+
+    True iff :func:`heartbeat_misses` reaches ``k_misses`` — so any
+    jitter below ``(k_misses − 1) × lease_period_s`` can never kill a
+    live rank.  This is the lease-period/K design tradeoff: shorter
+    periods detect faster but tolerate less jitter.
+    """
+    return heartbeat_misses(lease_period_s, delay_s) >= int(k_misses)
+
+
+def false_positive_rate(lease_period_s: float, k_misses: int,
+                        delays_s) -> float:
+    """Fraction of a jitter sweep that would false-positive.
+
+    ``delays_s`` is the scripted ``delay_am`` sweep; the bench gate holds
+    this at exactly 0 for the shipped detector operating points.
+    """
+    ds = list(delays_s)
+    if not ds:
+        return 0.0
+    hits = sum(1 for d in ds
+               if false_positive(lease_period_s, k_misses, d))
+    return hits / len(ds)
+
+
+def lease_overhead(link: LinkParams, n_ranks: int, lease_period_s: float,
+                   packet_size: int) -> float:
+    """Fraction of wall time the heartbeat wire consumes per rank.
+
+    Each period every rank PUTs its lease to the ``n_ranks − 1`` peers
+    (:data:`HEARTBEAT_MSG_BYTES` short AMs).  Latency-bound like
+    :func:`reform_time`; the returned fraction is what the lease-period
+    knob trades against :func:`detection_latency`.
+    """
+    if lease_period_s <= 0:
+        raise ValueError(f"lease_period_s must be > 0, got {lease_period_s}")
+    per_period = (max(1, int(n_ranks) - 1)
+                  * put_time(link, HEARTBEAT_MSG_BYTES, packet_size))
+    return per_period / lease_period_s
+
+
+def join_admit_time(link: LinkParams, *, n_ranks: int,
+                    lease_period_s: float, packet_size: int) -> float:
+    """Wall from a JOIN announcement to membership admission.
+
+    Announce (one ring of :data:`HEARTBEAT_MSG_BYTES` short AMs to the
+    current members), wait out up to one lease period for the epoch
+    boundary (joins are only admitted at deadlines, riding the same view
+    change as any batched deaths), then re-form conduits over the grown
+    membership.
+    """
+    announce = (max(1, int(n_ranks) - 1)
+                * put_time(link, HEARTBEAT_MSG_BYTES, packet_size))
+    return (announce + float(lease_period_s)
+            + reform_time(link, int(n_ranks) + 1, packet_size))
+
+
+def scaleout_mttr(link: LinkParams, *, n_ranks: int, state_bytes: float,
+                  lease_period_s: float, packet_size: int) -> float:
+    """Join-recovery MTTR: admission plus resharding state back out.
+
+    After admission the joiner must receive its data-parallel shard of
+    the training state — ``state_bytes / (n_ranks + 1)`` streamed over
+    the link (the scale-out analogue of the restore term in
+    :func:`train_recovery_time`; no replay term, because survivors never
+    lost their state).
+    """
+    shard = max(1, int(state_bytes // (int(n_ranks) + 1)))
+    return (join_admit_time(link, n_ranks=n_ranks,
+                            lease_period_s=lease_period_s,
+                            packet_size=packet_size)
+            + put_time(link, shard, packet_size))

@@ -143,6 +143,43 @@ class BlockSegment:
         return self.owner(bid), self.local_offset(bid)
 
 
+@dataclasses.dataclass
+class HeartbeatSegment:
+    """Membership wire state in the symmetric heap: one lease counter and
+    one join flag per rank.
+
+    Layout (word offsets from ``symbol.offset``, identical on every rank —
+    the symmetric-heap property is exactly what lets rank ``r`` PUT its
+    lease into slot ``r`` of *every* peer's segment with one short AM):
+
+    * ``[0, n_ranks)`` — lease counters: slot ``r`` holds the freshest
+      lease counter heard from rank ``r``.
+    * ``[n_ranks, 2·n_ranks)`` — join flags: slot ``r`` is set when rank
+      ``r`` has announced it wants to (re)join the membership.
+
+    The host-side detector (``runtime/membership.MembershipService``)
+    remains the deterministic source of truth — this segment is the wire
+    image it would read on hardware, validated against the host mirror in
+    ``tests/test_membership.py``.
+    """
+
+    symbol: Symbol
+    n_ranks: int
+
+    @property
+    def words(self) -> int:
+        """Total heap words the segment occupies (leases + join flags)."""
+        return 2 * self.n_ranks
+
+    def lease_offset(self, rank) -> int:
+        """Heap word offset of rank ``rank``'s lease slot."""
+        return self.symbol.offset + rank
+
+    def join_offset(self, rank) -> int:
+        """Heap word offset of rank ``rank``'s join flag."""
+        return self.symbol.offset + self.n_ranks + rank
+
+
 # ---------------------------------------------------------------------------
 # One-sided primitives (call inside shard_map)
 # ---------------------------------------------------------------------------
@@ -317,6 +354,24 @@ class GlobalAddressSpace:
             blocks_per_rank=sym.size // int(block_words),
             n_ranks=self.n_ranks,
         )
+
+    def heartbeat_segment(self, name: str = "hb_leases") -> HeartbeatSegment:
+        """Allocate (or reuse) the membership heartbeat segment.
+
+        ``2 · n_ranks`` words: per-rank lease counters plus per-rank join
+        flags (:class:`HeartbeatSegment`).  Idempotent — a second call
+        returns a view of the already-allocated symbol, so the membership
+        service and the wire builder can both ask for it.
+        """
+        try:
+            sym = self.heap.symbol(name)
+        except KeyError:
+            sym = self.heap.alloc(name, 2 * self.n_ranks)
+        if sym.size != 2 * self.n_ranks:
+            raise ValueError(
+                f"symbol {name!r} has {sym.size} words, heartbeat needs "
+                f"{2 * self.n_ranks}")
+        return HeartbeatSegment(symbol=sym, n_ranks=self.n_ranks)
 
     def write_block(self, name: str, block_words: int, *, perm: Perm) -> Callable:
         """A jitted ``f(global_heap, payload, bid)`` PUTting one block into

@@ -190,15 +190,19 @@ class StepConfig:
 
 def refit_step_config(scfg: StepConfig, old_data: int,
                       new_data: int) -> StepConfig:
-    """Re-fit a :class:`StepConfig` after the data axis shrank.
+    """Re-fit a :class:`StepConfig` after the data axis changed size.
 
-    Elastic recovery (``runtime/elastic.py``) keeps two invariants when
-    survivors re-form over a smaller data axis:
+    Elastic membership changes (``runtime/elastic.py``) keep two
+    invariants whether the data axis shrank (rank loss) or grew
+    (scale-out join):
 
     * **global batch constant** — ``microbatches`` scales by
-      ``old_data // new_data`` so each survivor accumulates the shards
-      the dead rank used to hold (the shrink must divide cleanly, which
-      :func:`repro.runtime.elastic.viable_mesh_shapes` guarantees);
+      ``old_data // new_data`` on a shrink (each survivor accumulates the
+      shards the dead rank used to hold) and *divides* by
+      ``new_data // old_data`` on a growth (the joiner takes shards
+      back); either direction must divide cleanly, which
+      :func:`repro.runtime.elastic.viable_mesh_shapes` guarantees for
+      shrinks and the join admission checks for growths;
     * **per-hop ring message constant** — ``grad_bucket_bytes`` (when
       set) scales by ``new_data / old_data`` via
       :func:`repro.dist.bucketing.span_scaled_target`, since a ring
@@ -206,12 +210,20 @@ def refit_step_config(scfg: StepConfig, old_data: int,
     """
     if old_data < 1 or new_data < 1:
         raise ValueError(f"data spans must be >= 1 ({old_data} -> {new_data})")
-    if old_data % new_data != 0:
+    if old_data % new_data == 0:
+        micro = scfg.microbatches * (old_data // new_data)
+    elif new_data % old_data == 0:
+        factor = new_data // old_data
+        if scfg.microbatches % factor != 0:
+            raise RuntimeError(
+                f"cannot hold global batch: {scfg.microbatches} microbatches "
+                f"do not split over growth {old_data} -> {new_data}")
+        micro = scfg.microbatches // factor
+    else:
         raise RuntimeError(
             f"cannot hold global batch: data axis {old_data} -> {new_data} "
-            f"does not divide")
-    changes: Dict[str, Any] = {
-        "microbatches": scfg.microbatches * (old_data // new_data)}
+            f"is not a clean shrink or growth")
+    changes: Dict[str, Any] = {"microbatches": micro}
     if scfg.grad_bucket_bytes is not None:
         changes["grad_bucket_bytes"] = bucketing.span_scaled_target(
             scfg.grad_bucket_bytes, old_data, new_data)

@@ -55,6 +55,14 @@ def main():
     p.add_argument("--fail-rank", type=int, default=1, metavar="R",
                    help="which decode rank dies at --fail-at-step "
                         "(pool-partition index over the data axis)")
+    p.add_argument("--chaos-seed", type=int, default=None, metavar="N",
+                   help="live-detector churn: a fixed-seed plan (two "
+                        "decode ranks lose their lease in one window, an "
+                        "AM-delay burst jitters heartbeats, one victim "
+                        "later rejoins) delivered through the membership "
+                        "detector — NOT scripted raises (requires "
+                        "--paged; tokens stay identical to an unfailed "
+                        "run)")
     args = p.parse_args()
 
     n_dev = args.data_axis * args.model_axis * args.expert_axis
@@ -79,15 +87,38 @@ def main():
 
     scfg = StepConfig(transport=TransportPolicy(moe=args.moe_transport))
     plan = None
+    membership = None
     if args.fail_at_step is not None:
         assert args.paged, "--fail-at-step needs --paged (the pool " \
             "partition is what a decode rank owns)"
         from repro.runtime.faults import FaultPlan
         plan = FaultPlan.from_cli(args.fail_at_step, args.fail_rank)
+    if args.chaos_seed is not None:
+        assert args.paged, "--chaos-seed needs --paged (the pool " \
+            "partition is what a decode rank owns)"
+        assert plan is None, "--chaos-seed and --fail-at-step are " \
+            "mutually exclusive chaos drivers"
+        from repro.runtime.faults import FaultPlan
+        from repro.runtime.membership import LeaseConfig, MembershipService
+        crng = np.random.default_rng(args.chaos_seed)
+        n_pool = 4                       # logical decode-pool ranks
+        kill_at = int(crng.integers(4, 9))
+        victims = sorted(crng.choice(np.arange(1, n_pool), size=2,
+                                     replace=False).tolist())
+        lease = LeaseConfig(lease_period=1, k_misses=3, step_time_s=1e-3)
+        # the delay burst (2 lease periods of jitter) stays under K=3
+        # misses — the detector must NOT declare anyone for it
+        plan = (FaultPlan(deliver="lease")
+                .delay_am(2 * lease.step_time_s, at_step=2)
+                .kill_rank(victims[0], at_step=kill_at)
+                .kill_rank(victims[1], at_step=kill_at))
+        membership = MembershipService(n_pool, lease, fault_plan=plan)
+        membership.schedule_join(victims[0], at_step=kill_at + 10)
     srv = Server(cfg, params, mesh, scfg=scfg, srv=ServerConfig(
         max_batch=args.max_batch, max_seq=256, max_new_tokens=args.max_new,
         prefill_chunk=args.prefill_chunk or None,
-        paged=args.paged, block_size=args.block_size), fault_plan=plan)
+        paged=args.paged, block_size=args.block_size), fault_plan=plan,
+        membership=membership)
     rng = np.random.default_rng(0)
     plen = args.prompt_len
     if cfg.family == "encdec":
@@ -108,6 +139,14 @@ def main():
         for pr in prompts:
             srv.submit(*pr) if isinstance(pr, tuple) else srv.submit(pr)
         steps = srv.run()
+    if membership is not None:
+        # idle-tick until the scheduled rejoin lands (requests may all
+        # finish first; the detector keeps running on the step clock)
+        extra = 0
+        while not any(ev.joined for ev in membership.events) and extra < 200:
+            srv.step()
+            extra += 1
+        steps += extra
 
     stats = srv.stats()
     mode = str(stats["admission_mode"])
@@ -124,7 +163,23 @@ def main():
               f"misses {stats['prefix_misses']:.0f}, "
               f"pool evictions {stats['pool_evictions']:.0f}, "
               f"free blocks {stats['pool_free_blocks']:.0f}")
-    if plan is not None:
+    if membership is not None:
+        srv.pool.check_conservation()
+        deaths = [ev for ev in membership.events if ev.died]
+        joins = [ev for ev in membership.events if ev.joined]
+        assert len(deaths) == 1 and deaths[0].died == tuple(victims), \
+            (deaths, victims)           # double loss = exactly one bump
+        assert len(joins) == 1, joins
+        print(f"[serve:{mode}] chaos seed {args.chaos_seed}: leases of "
+              f"ranks {victims} suppressed at step {kill_at}, detector "
+              f"declared both at step {deaths[0].step} (one epoch bump), "
+              f"rank {victims[0]} rejoined at step {joins[0].step}; "
+              f"epoch {membership.epoch}, "
+              f"{stats['recoveries']:.0f} slots drained/re-admitted, "
+              f"{stats['reprefilled_tokens']:.0f} tokens re-prefilled, "
+              f"{stats['quarantined_blocks']:.0f} blocks quarantined "
+              f"(conservation holds)")
+    elif plan is not None:
         srv.pool.check_conservation()
         print(f"[serve:{mode}] fault injected at step {args.fail_at_step} "
               f"(rank {args.fail_rank}): {stats['recoveries']:.0f} slots "

@@ -1,15 +1,20 @@
 """Fault-tolerant runtime: training loop, elastic membership, fault
-injection, serving."""
+injection, live failure detection, serving."""
 
 from repro.runtime.trainer import Trainer, TrainerConfig
 from repro.runtime.elastic import (ElasticMesh, ElasticRuntime,
                                    RecoveryReport, reform_conduits, remesh,
                                    scaled_microbatches, viable_mesh_shapes)
 from repro.runtime.faults import FaultEvent, FaultPlan, RankFailure
+from repro.runtime.membership import (LeaseConfig, MembershipEvent,
+                                      MembershipService, MembershipView,
+                                      StaleEpoch)
 from repro.runtime.server import BlockPool, Server, ServerConfig
 
 __all__ = ["Trainer", "TrainerConfig", "ElasticMesh", "ElasticRuntime",
            "RecoveryReport", "reform_conduits", "remesh",
            "scaled_microbatches", "viable_mesh_shapes",
            "FaultEvent", "FaultPlan", "RankFailure",
+           "LeaseConfig", "MembershipEvent", "MembershipService",
+           "MembershipView", "StaleEpoch",
            "BlockPool", "Server", "ServerConfig"]

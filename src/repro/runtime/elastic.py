@@ -100,6 +100,22 @@ class ElasticMesh:
         self.devices = [d for d in self.devices if d.id not in dead]
         return self.mesh()
 
+    def join(self, *devices) -> Mesh:
+        """Admit ``devices`` into the pool (ignoring ones already live)
+        and return the rebuilt — grown — mesh (the scale-out path)."""
+        have = {d.id for d in self.devices}
+        for d in devices:
+            if d.id not in have:
+                self.devices.append(d)
+                have.add(d.id)
+        return self.mesh()
+
+    def spares(self) -> List:
+        """Host devices not currently in the pool — join candidates (a
+        previously-failed device coming back, or fresh capacity)."""
+        have = {d.id for d in self.devices}
+        return [d for d in jax.devices() if d.id not in have]
+
 
 # ---------------------------------------------------------------------------
 # Conduit re-formation: transport choices are per-topology, not per-process
@@ -160,20 +176,33 @@ def reform_conduits(mesh: Mesh, *, link: str = "qsfp",
 
 def scaled_microbatches(microbatches: int, old_data: int,
                         new_data: int) -> int:
-    """Grad-accumulation steps after the data axis shrank, holding the
+    """Grad-accumulation steps after the data axis changed, holding the
     global batch (and per-microbatch per-rank rows) constant.
 
     The global batch is a *training* invariant (it sets the loss
-    trajectory); the data pipeline keeps serving it, so per-rank rows grow
-    by ``old_data / new_data`` and accumulation must absorb the growth.
-    Requires the divisor relationship :func:`viable_mesh_shapes`
-    guarantees.
+    trajectory); the data pipeline keeps serving it, so a shrink grows
+    per-rank rows by ``old_data / new_data`` and accumulation absorbs the
+    growth; a scale-out *join* divides accumulation by
+    ``new_data / old_data`` instead (more ranks, fewer passes — the
+    speedup a join buys).  Either direction requires the clean divisor
+    relationship :func:`viable_mesh_shapes` guarantees; growth further
+    requires ``microbatches`` divisible by the factor (otherwise the
+    global batch cannot be re-split exactly and the caller must keep the
+    old accumulation).
     """
-    if old_data % new_data != 0:
-        raise RuntimeError(
-            f"data extent {old_data} -> {new_data} is not a clean shrink "
-            f"(viable_mesh_shapes only yields divisors)")
-    return int(microbatches) * (old_data // new_data)
+    if old_data % new_data == 0:                 # shrink (or no change)
+        return int(microbatches) * (old_data // new_data)
+    if new_data % old_data == 0:                 # growth (scale-out join)
+        factor = new_data // old_data
+        if int(microbatches) % factor != 0:
+            raise RuntimeError(
+                f"microbatches {microbatches} not divisible by growth "
+                f"factor {factor} ({old_data} -> {new_data} ranks): the "
+                f"global batch cannot be re-split exactly")
+        return int(microbatches) // factor
+    raise RuntimeError(
+        f"data extent {old_data} -> {new_data} is not a clean shrink or "
+        f"growth (viable_mesh_shapes only yields divisors)")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -188,6 +217,11 @@ class RecoveryReport:
     bucket_plan: Optional[BucketPlan]
     microbatches: int
     restored_step: Optional[int]
+    #: every rank excluded by this change (multi-rank batches share one
+    #: report — one remesh, one re-form); ``(dead_rank,)`` for singles
+    dead_ranks: Tuple[int, ...] = ()
+    #: device index admitted by a scale-out join (None for failures)
+    joined_rank: Optional[int] = None
 
 
 class ElasticRuntime:
@@ -216,35 +250,99 @@ class ElasticRuntime:
 
     def on_failure(self, failure: Optional[RankFailure] = None, *,
                    rank: Optional[int] = None,
+                   ranks: Optional[Sequence[int]] = None,
                    params_tree=None,
                    grad_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
                    microbatches: int = 1,
                    ckpt_dir: Optional[str] = None,
                    template=None, shardings=None) -> RecoveryReport:
-        """Run the full recovery for one dead rank; returns the report.
+        """Run the full recovery for one *batch* of dead ranks; returns
+        the report.
 
-        ``failure`` (or an explicit ``rank``) names the dead member —
-        ``None`` rank means unattributed, and the policy excludes device 0
-        of the current list (a heartbeat sweep would identify it; the
-        *shape* outcome is identical for any single loss).  Steps: exclude
-        → remesh → re-form conduits → re-fit buckets (when a
-        ``params_tree`` is given) → scale accumulation → optionally
+        ``failure`` (or an explicit ``rank``/``ranks``) names the dead
+        members — a :class:`RankFailure` carrying several ``.ranks``
+        (the membership detector batches every rank that missed the same
+        deadline) is excluded in **one** membership change: one remesh,
+        one conduit re-formation, one restore — never N sequential
+        recoveries.  ``None`` means unattributed, and the policy excludes
+        device 0 of the current list (a heartbeat sweep would identify
+        it; the *shape* outcome is identical for any single loss).
+        Steps: exclude → remesh → re-form conduits → re-fit buckets (when
+        a ``params_tree`` is given) → scale accumulation → optionally
         restore resharded state (when ``ckpt_dir``/``template``/
         ``shardings`` are given; the restored ``(state, manifest)`` is
         stashed on ``self.restored``).
         """
-        dead = rank if rank is not None else (
-            failure.rank if failure is not None and failure.rank is not None
-            else 0)
-        dead = min(dead, len(self.members.devices) - 1)
+        if ranks is None:
+            if rank is not None:
+                ranks = [rank]
+            elif failure is not None and len(failure.ranks) > 0:
+                ranks = list(failure.ranks)
+            else:
+                ranks = [0]
+        limit = len(self.members.devices) - 1
+        dead = sorted({min(int(r), limit) for r in ranks})
         old_shape = tuple(self.mesh().shape.items())
         old_data = dict(old_shape).get("data", 1)
-        mesh = self.members.fail(dead)
+        mesh = self.members.fail(*dead)
         if self.fault_plan is not None:
-            self.fault_plan.repair(dead)
+            self.fault_plan.repair(*dead)
+        report = self._refit(mesh, old_shape, old_data,
+                             params_tree=params_tree,
+                             grad_bucket_bytes=grad_bucket_bytes,
+                             microbatches=microbatches, ckpt_dir=ckpt_dir,
+                             template=template, shardings=shardings,
+                             dead_rank=dead[0], dead_ranks=tuple(dead))
+        return report
+
+    def on_failures(self, ranks: Sequence[int], **kw) -> RecoveryReport:
+        """Batch convenience: :meth:`on_failure` with explicit ``ranks``
+        (all excluded atomically — one epoch of recovery work)."""
+        return self.on_failure(ranks=ranks, **kw)
+
+    def on_join(self, device=None, *, params_tree=None,
+                grad_bucket_bytes: int = DEFAULT_BUCKET_BYTES,
+                microbatches: int = 1,
+                ckpt_dir: Optional[str] = None,
+                template=None, shardings=None) -> RecoveryReport:
+        """Scale-out: admit a joining device and re-expand the data axis.
+
+        The joiner is ``device`` (or the first spare host device when
+        ``None``); the mesh re-expands via the same
+        :func:`viable_mesh_shapes` family recovery shrinks through,
+        conduits re-form at the grown axis size, buckets re-fit to the
+        wider sync span, grad accumulation *divides* by the growth factor
+        (global batch held constant), and — when checkpoint args are
+        given — the checkpoint is resharded back **out** over the grown
+        mesh, handing the joiner its shard.  Raises ``RuntimeError`` when
+        no spare device exists.
+        """
+        if device is None:
+            pool = self.members.spares()
+            if not pool:
+                raise RuntimeError("no spare device to join")
+            device = pool[0]
+        old_shape = tuple(self.mesh().shape.items())
+        old_data = dict(old_shape).get("data", 1)
+        mesh = self.members.join(device)
+        joined = next(i for i, d in enumerate(self.members.devices)
+                      if d.id == device.id)
+        return self._refit(mesh, old_shape, old_data,
+                           params_tree=params_tree,
+                           grad_bucket_bytes=grad_bucket_bytes,
+                           microbatches=microbatches, ckpt_dir=ckpt_dir,
+                           template=template, shardings=shardings,
+                           dead_rank=None, dead_ranks=(),
+                           joined_rank=joined)
+
+    def _refit(self, mesh: Mesh, old_shape, old_data: int, *, params_tree,
+               grad_bucket_bytes: int, microbatches: int, ckpt_dir,
+               template, shardings, dead_rank, dead_ranks,
+               joined_rank: Optional[int] = None) -> RecoveryReport:
+        """Steps 3–6 shared by failure and join: re-form, re-fit, restore."""
         new_data = mesh.shape.get("data", 1)
         plans = reform_conduits(mesh, link=self.link)
-        # keep the per-hop ring message constant across the span shrink
+        # keep the per-hop ring message constant across the span change
         target = span_scaled_target(grad_bucket_bytes, old_data, new_data)
         bplan = (bucket_plan(params_tree, target_bytes=target)
                  if params_tree is not None else None)
@@ -258,10 +356,11 @@ class ElasticRuntime:
             self.restored = (state, manifest)
             restored_step = manifest["step"]
         report = RecoveryReport(
-            dead_rank=dead, old_shape=old_shape,
+            dead_rank=dead_rank, old_shape=old_shape,
             new_shape=tuple(mesh.shape.items()), conduits=plans,
             bucket_plan=bplan, microbatches=micro,
-            restored_step=restored_step)
+            restored_step=restored_step, dead_ranks=dead_ranks,
+            joined_rank=joined_rank)
         self.reports.append(report)
         return report
 

@@ -25,6 +25,19 @@ Three fault kinds (:class:`FaultEvent`):
     slow-NIC model for straggler-path tests.  Never changes results, only
     timing.
 
+``miss_lease``
+    Rank ``rank`` skips its next ``count`` heartbeat publishes at/after
+    ``step`` — a transient lease wobble for the membership detector
+    (``runtime/membership.py``): fewer consecutive misses than the
+    detector's K threshold must *not* change the membership.
+
+**Delivery modes.**  ``deliver="raise"`` (default) is the scripted legacy
+path: kills raise at :meth:`FaultPlan.on_step` and at the conduit hook.
+``deliver="lease"`` turns the plan into a detector *input*: kills only
+suppress the victim's heartbeat leases (:meth:`FaultPlan.lease_suppressed`)
+and the membership detector does the declaring — ``on_step`` never raises
+and the conduit hook passes dead ranks through (only transients fire).
+
 Delivery has two surfaces:
 
 * **trace/call time** — :meth:`FaultPlan.install` registers the plan as
@@ -49,7 +62,9 @@ from typing import List, Optional, Sequence, Tuple
 from repro.core.conduit import (RankFailure, clear_failure_hook,
                                 install_failure_hook)
 
-KINDS = ("kill_rank", "drop_op", "delay_am")
+KINDS = ("kill_rank", "drop_op", "delay_am", "miss_lease")
+
+DELIVER_MODES = ("raise", "lease")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,6 +93,11 @@ class FaultEvent:
             raise ValueError("kill_rank needs a rank")
         if self.kind == "drop_op" and self.count < 1:
             raise ValueError("drop_op needs count >= 1")
+        if self.kind == "miss_lease":
+            if self.rank is None:
+                raise ValueError("miss_lease needs a rank")
+            if self.count < 1:
+                raise ValueError("miss_lease needs count >= 1")
 
 
 class FaultPlan:
@@ -99,12 +119,24 @@ class FaultPlan:
             trainer.train(mesh)
     """
 
-    def __init__(self, events: Sequence[FaultEvent] = ()):
-        """Start a plan with ``events`` (more can be chained on)."""
+    def __init__(self, events: Sequence[FaultEvent] = (),
+                 deliver: str = "raise"):
+        """Start a plan with ``events`` (more can be chained on).
+
+        ``deliver``: ``"raise"`` (scripted legacy — kills raise) or
+        ``"lease"`` (kills only suppress heartbeats; the membership
+        detector declares).
+        """
+        if deliver not in DELIVER_MODES:
+            raise ValueError(f"unknown deliver mode {deliver!r} "
+                             f"(one of {DELIVER_MODES})")
+        self.deliver = deliver
         self.events: List[FaultEvent] = list(events)
         self.step = 0
         self._drops_left = {id(e): e.count for e in self.events
                             if e.kind == "drop_op"}
+        self._misses_left = {id(e): e.count for e in self.events
+                             if e.kind == "miss_lease"}
         self._repaired: set = set()     # ranks the runtime has recovered
         self._announced: set = set()    # kills already raised at host level
         self.log: List[Tuple[int, str, str]] = []
@@ -115,6 +147,8 @@ class FaultPlan:
         self.events.append(ev)
         if ev.kind == "drop_op":
             self._drops_left[id(ev)] = ev.count
+        if ev.kind == "miss_lease":
+            self._misses_left[id(ev)] = ev.count
         return self
 
     def kill_rank(self, rank: int, *, at_step: int = 0) -> "FaultPlan":
@@ -131,6 +165,13 @@ class FaultPlan:
         """Script a per-delivery host sleep on AM traffic from ``at_step``."""
         return self._add(FaultEvent("delay_am", step=at_step,
                                     delay_s=delay_s))
+
+    def miss_lease(self, rank: int, *, at_step: int = 0,
+                   count: int = 1) -> "FaultPlan":
+        """Script ``count`` skipped heartbeat publishes for ``rank`` —
+        a transient lease wobble below the detector's K threshold."""
+        return self._add(FaultEvent("miss_lease", step=at_step, rank=rank,
+                                    count=count))
 
     @classmethod
     def from_cli(cls, fail_at_step: Optional[int],
@@ -155,6 +196,44 @@ class FaultPlan:
         them, so there is nothing left to kill)."""
         self._repaired.update(ranks)
 
+    # -- detector inputs (lease mode) -----------------------------------------
+
+    def tick(self, step: int) -> None:
+        """Advance the plan clock to ``step`` without any raise path —
+        the detector's way of keeping the script on the shared host-step
+        clock while it does the declaring itself."""
+        self.step = max(self.step, int(step))
+
+    def lease_suppressed(self, rank: int, step: int) -> bool:
+        """Whether ``rank``'s heartbeat publish at ``step`` is suppressed.
+
+        True while a ``kill_rank`` for ``rank`` is active (a dead rank
+        publishes nothing), and for the next ``count`` queries of an armed
+        ``miss_lease`` (transient — each query at/after its step consumes
+        one unit of budget, mirroring ``drop_op``).  The detector calls
+        this exactly once per (rank, publish step), so budget consumption
+        is deterministic.
+        """
+        step = int(step)
+        for e in self.events:
+            if (e.kind == "kill_rank" and e.rank == rank and step >= e.step
+                    and rank not in self._repaired):
+                return True
+        for e in self.events:
+            if (e.kind == "miss_lease" and e.rank == rank
+                    and step >= e.step
+                    and self._misses_left.get(id(e), 0) > 0):
+                self._misses_left[id(e)] -= 1
+                self.log.append((step, "miss_lease", f"rank {rank}"))
+                return True
+        return False
+
+    def am_delay_at(self, step: int) -> float:
+        """Total scripted AM delivery delay (seconds) active at ``step`` —
+        the jitter the detector converts into heartbeat arrival lag."""
+        return sum(e.delay_s for e in self.events
+                   if e.kind == "delay_am" and int(step) >= e.step)
+
     # -- delivery -------------------------------------------------------------
 
     def on_step(self, step: int, op: str = "step") -> None:
@@ -166,8 +245,13 @@ class FaultPlan:
         hook (a compiled step never re-enters the conduit, so the loop
         has to ask).  Each kill announces at host level exactly once;
         conduit-level traffic keeps raising until :meth:`repair`.
+
+        In ``deliver="lease"`` mode this only advances the clock: kills
+        suppress leases and the membership detector declares.
         """
         self.step = max(self.step, int(step))
+        if self.deliver == "lease":
+            return
         for e in self.events:
             if (e.kind == "kill_rank" and self.step >= e.step
                     and e.rank not in self._repaired
@@ -181,11 +265,13 @@ class FaultPlan:
     def __call__(self, op: str, axis: str) -> None:
         """The conduit failure probe (``install_failure_hook`` target).
 
-        Checks, in order: dead ranks (permanent, every call raises),
-        armed ``drop_op`` budgets (transient, raises ``count`` times then
+        Checks, in order: dead ranks (permanent, every call raises;
+        skipped in ``deliver="lease"`` mode — an undetected death is
+        invisible to the wire until the detector declares it), armed
+        ``drop_op`` budgets (transient, raises ``count`` times then
         passes), ``delay_am`` sleeps (AM deliveries only).
         """
-        dead = self.dead_ranks()
+        dead = self.dead_ranks() if self.deliver == "raise" else frozenset()
         if dead:
             rank = min(dead)
             self.log.append((self.step, "kill_rank", f"{op}@{axis}"))
@@ -223,4 +309,5 @@ class FaultPlan:
         self.uninstall()
 
 
-__all__ = ["FaultEvent", "FaultPlan", "RankFailure", "KINDS"]
+__all__ = ["FaultEvent", "FaultPlan", "RankFailure", "KINDS",
+           "DELIVER_MODES"]

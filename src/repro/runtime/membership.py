@@ -1,0 +1,447 @@
+"""Live membership: heartbeat leases, miss-count detection, epochs.
+
+PR 9 made recovery *possible*; this module makes it *live*.  Instead of a
+scripted ``FaultPlan`` declaring deaths, every rank publishes a **lease
+counter** into a PGAS heartbeat segment (``pgas.HeartbeatSegment``) via
+short Active Messages, and a deterministic miss-count detector — a
+phi-accrual detector quantized to the host-step clock, "phi-accrual-lite"
+— declares a rank dead after **K consecutive missed lease deadlines**.
+The scripted plan survives as one detector *input*: ``kill_rank`` only
+suppresses the victim's lease publishes (``FaultPlan.lease_suppressed``),
+``delay_am`` only lags heartbeat arrivals, and the detector does all the
+declaring.  Every decision is a function of (events, step, call counts),
+so chaos runs stay bit-reproducible.
+
+**Epochs.**  Each membership change — deaths, joins, or both — bumps a
+single **epoch** counter.  The service installs itself as the conduit
+epoch provider (``conduit.install_epoch_provider``); a conduit or AM wire
+pinned at a stale epoch (:meth:`~repro.core.conduit.Conduit.at_epoch`)
+raises :class:`~repro.core.conduit.StaleEpoch` instead of touching the
+network, so in-flight work from a dead view can never complete into a new
+one.  All ranks that miss the same deadline are batched into **one**
+epoch bump — recovery re-forms conduits once, not N times — and pending
+joins admitted at that deadline ride the same view change.
+
+**Clock model.**  The detector runs on the host-step clock: publishes and
+deadline checks happen at steps where ``step % lease_period == 0``
+(publish first, then check, so a healthy same-step publish is always
+fresh).  ``step_time_s`` maps scripted ``delay_am`` jitter (seconds) onto
+arrival lag (steps).  Worst-case detection latency is strictly below
+``lease_period × (k_misses + 1)`` steps — the bound the bench gate holds
+(``core/netmodel.detection_latency``) — and a delivery jitter of ``d``
+seconds causes ``ceil(d / lease_period_s)`` consecutive misses
+(``core/netmodel.heartbeat_misses``), so any jitter below
+``(k_misses − 1) × lease_period_s`` can never false-positive.
+
+The host-side mirror in :class:`MembershipService` is the deterministic
+source of truth; :func:`build_heartbeat_wire` builds the actual AM wire
+image (lease PUTs + join announcements into every peer's segment), which
+the tests validate against the mirror.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.conduit import (Conduit, RankFailure, StaleEpoch,
+                                clear_epoch_provider, clear_failure_hook,
+                                install_epoch_provider, install_failure_hook)
+from repro.runtime.faults import FaultPlan
+
+
+@dataclasses.dataclass(frozen=True)
+class LeaseConfig:
+    """Detector tuning: how often leases publish, how many misses kill.
+
+    ``lease_period`` — host steps between lease publishes (and deadline
+    checks).  ``k_misses`` — consecutive missed deadlines before a rank
+    is declared dead.  ``step_time_s`` — nominal wall seconds per host
+    step, the bridge between scripted ``delay_am`` jitter (seconds) and
+    the step-quantized detector; also what the netmodel detection rows
+    price against.
+    """
+
+    lease_period: int = 1
+    k_misses: int = 3
+    step_time_s: float = 1e-3
+
+    def __post_init__(self):
+        """Validate the detector parameters."""
+        if self.lease_period < 1:
+            raise ValueError(f"lease_period must be >= 1, "
+                             f"got {self.lease_period}")
+        if self.k_misses < 1:
+            raise ValueError(f"k_misses must be >= 1, got {self.k_misses}")
+        if self.step_time_s <= 0:
+            raise ValueError(f"step_time_s must be > 0, "
+                             f"got {self.step_time_s}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipView:
+    """One immutable membership version: ``epoch`` plus the live ranks."""
+
+    epoch: int
+    ranks: Tuple[int, ...]
+
+    def contains(self, rank: int) -> bool:
+        """Whether ``rank`` is live in this view."""
+        return rank in self.ranks
+
+
+@dataclasses.dataclass(frozen=True)
+class MembershipEvent:
+    """One epoch bump: who ``died`` and who ``joined`` at ``step``.
+
+    Deaths and joins landing at the same deadline share one event (and
+    one epoch) by construction — the batching invariant the property
+    suite holds.
+    """
+
+    step: int
+    epoch: int
+    died: Tuple[int, ...] = ()
+    joined: Tuple[int, ...] = ()
+
+
+class MembershipService:
+    """The live membership: lease table, miss-count detector, epoch source.
+
+    Drive it with :meth:`on_step` once per host step (the same clock
+    ``FaultPlan.on_step`` rides); it returns a :class:`MembershipEvent`
+    when the view changed, ``None`` otherwise.  Install it
+    (:meth:`install` / ``with service:``) to become both the conduit
+    failure hook (delegating transient ``drop_op``/``delay_am`` to the
+    wrapped plan) and the conduit **epoch provider** — epoch-pinned
+    conduits and AM wires then raise ``StaleEpoch`` the moment the view
+    they were built against is superseded.
+
+    ``n_ranks`` is the initial rank universe ``[0, n_ranks)``; ranks can
+    die, rejoin (:meth:`schedule_join`), or join fresh with a new id (the
+    training scale-out path).  All decisions are deterministic functions
+    of (events, step): no wall clocks, no RNG.
+    """
+
+    def __init__(self, n_ranks: int, cfg: LeaseConfig = LeaseConfig(),
+                 fault_plan: Optional[FaultPlan] = None):
+        """Start with ranks ``[0, n_ranks)`` live at epoch 0.
+
+        ``fault_plan`` (optional) is the scripted chaos input: its kills
+        suppress leases, its ``delay_am`` lags arrivals, its transient
+        drops pass through the failure hook.  A plan in ``deliver="raise"``
+        mode would double-deliver kills, so lease mode is required.
+        """
+        if n_ranks < 1:
+            raise ValueError(f"n_ranks must be >= 1, got {n_ranks}")
+        if fault_plan is not None and fault_plan.deliver != "lease":
+            raise ValueError(
+                "MembershipService needs FaultPlan(deliver='lease'): in "
+                "'raise' mode the script would declare deaths itself")
+        self.n_ranks = int(n_ranks)
+        self.cfg = cfg
+        self.fault_plan = fault_plan
+        self._epoch = 0
+        self._ranks: Tuple[int, ...] = tuple(range(self.n_ranks))
+        self._step = -1                      # last processed host step
+        self._lease: Dict[int, int] = {r: 0 for r in self._ranks}
+        self._last_arrival: Dict[int, int] = {r: 0 for r in self._ranks}
+        self._misses: Dict[int, int] = {r: 0 for r in self._ranks}
+        self._arrivals: List[Tuple[int, int, int]] = []  # (arrive, rank, lease)
+        self._pending_joins: List[Tuple[int, int]] = []  # (rank, at_step)
+        self.events: List[MembershipEvent] = []
+        self.log: List[Tuple[int, str, str]] = []
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        """The current membership epoch (monotone, starts at 0)."""
+        return self._epoch
+
+    def view(self) -> MembershipView:
+        """The current immutable :class:`MembershipView`."""
+        return MembershipView(self._epoch, self._ranks)
+
+    def alive(self, rank: int) -> bool:
+        """Whether ``rank`` is in the current view."""
+        return rank in self._ranks
+
+    def leases(self) -> Dict[int, int]:
+        """Freshest lease counter heard per live rank (the host mirror of
+        the PGAS heartbeat segment's lease slots)."""
+        return dict(self._lease)
+
+    def bind(self, conduit: Conduit) -> Conduit:
+        """Pin ``conduit`` to the current epoch (:meth:`Conduit.at_epoch`):
+        it raises ``StaleEpoch`` once this view is superseded."""
+        return conduit.at_epoch(self._epoch)
+
+    # -- joins ---------------------------------------------------------------
+
+    def schedule_join(self, rank: int, *, at_step: int) -> None:
+        """Script a join announcement for ``rank`` at host step
+        ``at_step`` — the deterministic analogue of a new node's JOIN AM
+        arriving.  Admission happens at the first deadline ≥ the
+        announcement; a rank already live by then is dropped silently."""
+        if rank < 0:
+            raise ValueError(f"rank must be >= 0, got {rank}")
+        self._pending_joins.append((int(rank), int(at_step)))
+
+    def announce_join(self, rank: int) -> None:
+        """A join announcement arriving *now* (next processed step)."""
+        self.schedule_join(rank, at_step=self._step + 1)
+
+    # -- the detector --------------------------------------------------------
+
+    def on_step(self, step: int) -> Optional[MembershipEvent]:
+        """Advance the detector to host ``step``; returns the (last)
+        :class:`MembershipEvent` if the view changed, else ``None``.
+
+        Every intermediate step is processed exactly once, so the result
+        is independent of how the caller paces its calls — the property
+        that keeps chaos runs bit-reproducible.
+        """
+        step = int(step)
+        out: Optional[MembershipEvent] = None
+        while self._step < step:
+            self._step += 1
+            ev = self._tick(self._step)
+            if ev is not None:
+                out = ev
+        return out
+
+    def _delay_steps(self, step: int) -> int:
+        """Scripted AM jitter at ``step``, quantized to host steps."""
+        if self.fault_plan is None:
+            return 0
+        return int(self.fault_plan.am_delay_at(step)
+                   // self.cfg.step_time_s)
+
+    def _suppressed(self, rank: int, step: int) -> bool:
+        """Whether ``rank``'s publish at ``step`` is scripted away."""
+        if self.fault_plan is None:
+            return False
+        return self.fault_plan.lease_suppressed(rank, step)
+
+    def _tick(self, s: int) -> Optional[MembershipEvent]:
+        """Process exactly one host step: publish → deliver → deadline."""
+        p, k = self.cfg.lease_period, self.cfg.k_misses
+        if self.fault_plan is not None:
+            self.fault_plan.tick(s)
+
+        # publish: each live, unsuppressed rank sends lease+1; scripted AM
+        # jitter lags the arrival (the detector sees it `delay` steps late)
+        if s % p == 0:
+            delay = self._delay_steps(s)
+            for r in self._ranks:
+                if not self._suppressed(r, s):
+                    self._arrivals.append((s + delay, r,
+                                           self._lease.get(r, 0) + 1))
+
+        # deliver everything due by now (in send order — deterministic)
+        due = [a for a in self._arrivals if a[0] <= s]
+        if due:
+            self._arrivals = [a for a in self._arrivals if a[0] > s]
+            for arrive, r, lease in due:
+                if r in self._ranks:          # non-members' leases ignored
+                    self._last_arrival[r] = max(self._last_arrival[r],
+                                                arrive)
+                    self._lease[r] = max(self._lease[r], lease)
+
+        # deadline: a rank is fresh iff a lease arrived in (s-p, s]
+        if s % p != 0 or s == 0:
+            return None
+        died: List[int] = []
+        for r in self._ranks:
+            if self._last_arrival.get(r, -1) > s - p:
+                self._misses[r] = 0
+            else:
+                self._misses[r] += 1
+                if self._misses[r] >= k:
+                    died.append(r)
+        joined = sorted({r for (r, at) in self._pending_joins
+                         if at <= s and r not in self._ranks
+                         and r not in died})
+        if not died and not joined:
+            return None
+        return self._view_change(s, sorted(died), joined)
+
+    def _view_change(self, s: int, died: List[int],
+                     joined: List[int]) -> MembershipEvent:
+        """One epoch bump for the whole batch of deaths + joins."""
+        self._epoch += 1
+        ranks = [r for r in self._ranks if r not in died]
+        for r in died:
+            self._lease.pop(r, None)
+            self._last_arrival.pop(r, None)
+            self._misses.pop(r, None)
+            # the runtime will exclude the rank; the script has nothing
+            # left to suppress (mirrors the legacy repair-on-recovery)
+            if self.fault_plan is not None:
+                self.fault_plan.repair(r)
+        for r in joined:
+            ranks.append(r)
+            self._lease[r] = 0
+            self._last_arrival[r] = s        # admission grace: fresh now
+            self._misses[r] = 0
+        self._pending_joins = [(r, at) for (r, at) in self._pending_joins
+                               if r not in joined and at > s]
+        self._ranks = tuple(sorted(ranks))
+        ev = MembershipEvent(step=s, epoch=self._epoch,
+                             died=tuple(died), joined=tuple(joined))
+        self.events.append(ev)
+        self.log.append((s, "epoch",
+                         f"{self._epoch}: died={died} joined={joined}"))
+        return ev
+
+    # -- failure declaration for the runtime loops ---------------------------
+
+    def failure_for(self, ev: MembershipEvent) -> RankFailure:
+        """The typed exception a runtime loop raises for ``ev``'s deaths —
+        one :class:`RankFailure` carrying the whole batch in ``.ranks``."""
+        return RankFailure(min(ev.died), "membership",
+                           f"K={self.cfg.k_misses} missed leases, "
+                           f"epoch {ev.epoch}", ranks=ev.died)
+
+    # -- conduit hook + epoch provider ---------------------------------------
+
+    def __call__(self, op: str, axis: str) -> None:
+        """The conduit failure probe: transient faults delegate to the
+        wrapped plan (which, in lease mode, never raises kills — an
+        undetected death stays invisible to the wire until the detector
+        declares it and the epoch check takes over)."""
+        if self.fault_plan is not None:
+            self.fault_plan(op, axis)
+
+    def install(self) -> "MembershipService":
+        """Register as both conduit failure hook and epoch provider."""
+        install_failure_hook(self)
+        install_epoch_provider(lambda: self._epoch)
+        return self
+
+    def uninstall(self) -> None:
+        """Deregister the failure hook and epoch provider."""
+        clear_failure_hook()
+        clear_epoch_provider()
+
+    def __enter__(self) -> "MembershipService":
+        """Context manager: install on entry."""
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        """Context manager: uninstall on exit (exceptions propagate)."""
+        self.uninstall()
+
+
+# ---------------------------------------------------------------------------
+# The AM wire: lease PUTs + join announcements into every peer's segment
+# ---------------------------------------------------------------------------
+
+
+def register_heartbeat_handlers(registry, seg) -> Tuple[int, int]:
+    """Register the HEARTBEAT and JOIN request handlers on ``registry``.
+
+    HEARTBEAT: ``args = (rank, lease)`` — deposit ``lease`` at the
+    sender's lease slot in the local :class:`~repro.core.pgas.HeartbeatSegment`.
+    JOIN: ``args = (rank,)`` — set the sender's join flag.  Returns the
+    two opcodes.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    from repro.core.am import MAX_ARGS
+
+    base = seg.symbol.offset
+    n = seg.n_ranks
+
+    def _heartbeat(heap, args, payload):
+        rank, lease = args[0], args[1]
+        slot = jnp.asarray(base, jnp.int32) + rank
+        heap = lax.dynamic_update_slice(
+            heap, lease.astype(heap.dtype)[None], (slot,))
+        return (heap, jnp.int32(0), jnp.zeros((MAX_ARGS,), jnp.int32),
+                jnp.zeros_like(payload))
+
+    def _join(heap, args, payload):
+        rank = args[0]
+        slot = jnp.asarray(base + n, jnp.int32) + rank
+        heap = lax.dynamic_update_slice(
+            heap, jnp.ones((1,), heap.dtype), (slot,))
+        return (heap, jnp.int32(0), jnp.zeros((MAX_ARGS,), jnp.int32),
+                jnp.zeros_like(payload))
+
+    hb_op = registry.register_request("HEARTBEAT", _heartbeat)
+    join_op = registry.register_request("JOIN", _join)
+    return hb_op, join_op
+
+
+def build_heartbeat_wire(gas, registry=None):
+    """Build the jitted heartbeat publishers over ``gas``'s PGAS axis.
+
+    Returns ``(seg, publish, announce)``:
+
+    * ``seg`` — the :class:`~repro.core.pgas.HeartbeatSegment` (allocated
+      on demand);
+    * ``publish(heap_global, leases)`` — every rank writes its own lease
+      locally and PUTs ``(rank, lease)`` into every peer's lease slot via
+      ``n−1`` ring-shifted short AMs (``leases`` is the per-rank counter
+      vector, sharded over the axis; a suppressed rank simply publishes a
+      stale counter — exactly what the detector's host mirror models);
+    * ``announce(joiner)(heap_global)`` — rank ``joiner`` sets its join
+      flag on every rank's segment (its JOIN announcement).
+
+    The wire is the hardware image of :class:`MembershipService`'s host
+    mirror; ``tests/test_membership.py`` asserts the two agree.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.am import HandlerRegistry, am_request_short, make_args
+
+    if registry is None:
+        registry = HandlerRegistry()
+    seg = gas.heartbeat_segment()
+    hb_op, join_op = register_heartbeat_handlers(registry, seg)
+    axis, n = gas.axis, gas.n_ranks
+    base = seg.symbol.offset
+
+    def _publish(heap, lease):
+        my = lax.axis_index(axis)
+        # own slot: a rank always hears itself
+        heap = lax.dynamic_update_slice(
+            heap, lease.astype(heap.dtype),
+            (jnp.asarray(base, jnp.int32) + my,))
+        args = make_args(my, lease[0])
+        for shift in range(1, n):
+            perm = [(i, (i + shift) % n) for i in range(n)]
+            heap = am_request_short(registry, heap, hb_op, args,
+                                    axis=axis, perm=perm)
+        return heap
+
+    publish = gas.run(_publish, extra_in_specs=(P(axis),))
+
+    def announce(joiner: int):
+        """Jitted JOIN announcement from rank ``joiner`` to every peer."""
+        def _ann(heap):
+            my = lax.axis_index(axis)
+            flag = jnp.asarray(base + n + joiner, jnp.int32)
+            own = lax.dynamic_update_slice(
+                heap, jnp.ones((1,), heap.dtype), (flag,))
+            heap = jnp.where(my == joiner, own, heap)
+            args = make_args(jnp.int32(joiner))
+            for shift in range(1, n):
+                perm = [(joiner, (joiner + shift) % n)]
+                heap = am_request_short(registry, heap, join_op, args,
+                                        axis=axis, perm=perm)
+            return heap
+        return gas.run(_ann)
+
+    return seg, publish, announce
+
+
+__all__ = [
+    "LeaseConfig", "MembershipView", "MembershipEvent", "MembershipService",
+    "StaleEpoch", "register_heartbeat_handlers", "build_heartbeat_wire",
+]

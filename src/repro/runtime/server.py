@@ -133,6 +133,37 @@ class BlockPool:
         """Ids on dead partitions (``fail_partition``), reserved included."""
         return len(self._lost)
 
+    @property
+    def quarantined_blocks(self) -> int:
+        """Lost non-reserved ids swept out of circulation — admission's
+        capacity target shrinks by exactly this many blocks while a
+        partition is quarantined."""
+        return len(self._quarantined)
+
+    def evictable_blocks(self) -> int:
+        """Blocks that evicting *every* idle prefix-cache entry would
+        return to the free list: pinned only by cache entries, on a live
+        partition.  Blocks shared with running requests (COW) stay live
+        after eviction and do not count."""
+        pins: Dict[int, int] = {}
+        for bids in self._entries.values():
+            for b in bids:
+                pins[b] = pins.get(b, 0) + 1
+        return sum(1 for b, p in pins.items()
+                   if self._refs.get(b, 0) == p and b not in self._lost)
+
+    def usable_blocks(self) -> int:
+        """Upper bound on what one ``alloc`` can deliver: free now plus
+        everything cache eviction could recover."""
+        return len(self._free) + self.evictable_blocks()
+
+    def can_cover(self, n: int) -> bool:
+        """True when ``alloc(n)`` would succeed — *without* touching the
+        cache.  Admission consults this so a burst during quarantine
+        defers requests instead of wiping the prefix cache on a doomed
+        claim."""
+        return int(n) <= self.usable_blocks()
+
     def check_conservation(self):
         """Every non-reserved block is free xor referenced xor quarantined
         — no leaks, no aliasing between the free list and live tables, and
@@ -171,7 +202,16 @@ class BlockPool:
         refs dropped — surviving entries keep serving COW hits).  Returns
         the lost id set so the server can find the victim slots.
         """
-        lost = frozenset(self.partition(rank, n_ranks))
+        return self.fail_partitions([rank], n_ranks)
+
+    def fail_partitions(self, ranks, n_ranks: int) -> frozenset:
+        """Batch form of :meth:`fail_partition`: quarantine the union of
+        several ranks' id spans in **one** sweep — the multi-rank-loss
+        path, where every rank missing the same lease deadline is
+        excluded atomically (one free-list rebuild, one cache purge,
+        conservation held throughout)."""
+        lost = frozenset(b for r in ranks
+                         for b in self.partition(r, n_ranks))
         self._lost |= lost
         self._free = [b for b in self._free if b not in lost]
         self._quarantined |= {b for b in lost
@@ -181,12 +221,40 @@ class BlockPool:
             self.release(self._entries.pop(key))
         return lost
 
+    def restore_partition(self, rank: int, n_ranks: int) -> frozenset:
+        """Re-admit rank ``rank``'s id span — the scale-out/rejoin path.
+
+        Quarantined ids in the span return to the free list (descending
+        order, so low ids still pop first); reserved parking ids are
+        simply un-lost.  Ids still referenced (a straggler holding a lost
+        block that never drained) stay out until their refs drop — they
+        are un-lost here, so ``release`` will free them normally.
+        Returns the restored id set.
+        """
+        span = frozenset(self.partition(rank, n_ranks)) & self._lost
+        back = sorted((b for b in span & self._quarantined), reverse=True)
+        self._quarantined -= span
+        self._lost -= span
+        self._free.extend(back)
+        return span
+
     # -- alloc / refcount ----------------------------------------------------
 
     def alloc(self, n: int) -> List[int]:
         """Take ``n`` blocks off the free list (one ref each), LRU-evicting
         idle prefix-cache entries under pressure; raises ``MemoryError``
-        when the pool genuinely cannot cover the request."""
+        when the pool genuinely cannot cover the request.
+
+        The feasibility check runs *first*: a doomed claim (``n`` beyond
+        free + evictable, e.g. an alloc burst while a partition is
+        quarantined) raises without evicting anything, so the prefix
+        cache survives the failure instead of being wiped for nothing.
+        """
+        if not self.can_cover(n):
+            raise MemoryError(
+                f"block pool exhausted: want {n}, free {len(self._free)}, "
+                f"evictable {self.evictable_blocks()}, "
+                f"quarantined {len(self._quarantined)}")
         while len(self._free) < n and self._entries:
             self._evict_lru()
         if len(self._free) < n:
@@ -295,11 +363,15 @@ class Server:
     """Fixed-slot continuous-batching server over the serve step bundles."""
 
     def __init__(self, cfg: ModelConfig, params, mesh, scfg=None,
-                 srv: ServerConfig = ServerConfig(), fault_plan=None):
+                 srv: ServerConfig = ServerConfig(), fault_plan=None,
+                 membership=None):
         self.cfg, self.params, self.srv = cfg, params, srv
         self.mesh = mesh
         self.scfg = scfg or StepConfig()
         self.fault_plan = fault_plan
+        # live detector path: a MembershipService polled every tick; its
+        # view changes (not the scripted plan) drive fail/admit below
+        self.membership = membership
         assert srv.greedy, "only greedy sampling is implemented"
         ok, why = chunk_support(cfg)
         if srv.prefill_chunk and not ok:
@@ -505,8 +577,18 @@ class Server:
                 self.prefix_hits += 1
             else:
                 self.prefix_misses += 1
+        need = self._npb - len(shared)
+        if not self.pool.can_cover(need):
+            # quarantine backpressure: the capacity target shrank, so a
+            # burst defers (stays queued) instead of wiping the prefix
+            # cache on a claim that cannot succeed anyway
+            if shared:
+                self.pool.release(shared)
+                self.prefix_hits -= 1
+                self.prefix_misses += 1
+            return False
         try:
-            private = self.pool.alloc(self._npb - len(shared))
+            private = self.pool.alloc(need)
         except MemoryError:
             if shared:
                 self.pool.release(shared)
@@ -749,7 +831,11 @@ class Server:
     # -- decode loop ----------------------------------------------------------
 
     def fail_decode_rank(self, rank: int, n_ranks: Optional[int] = None):
-        """Survive the loss of decode rank ``rank``: drain and re-admit.
+        """Single-rank form of :meth:`fail_decode_ranks`."""
+        return self.fail_decode_ranks([rank], n_ranks)
+
+    def fail_decode_ranks(self, ranks, n_ranks: Optional[int] = None):
+        """Survive the loss of decode ranks ``ranks``: drain and re-admit.
 
         The pool's block ids are partitioned contiguously across
         ``n_ranks`` decode ranks (default: the mesh's data extent — the
@@ -771,13 +857,18 @@ class Server:
         physically intact — what the failure costs is re-prefill work and
         pool capacity, which is exactly what ``netmodel`` prices
         (``recovery_time``) and ``stats()`` reports.
+
+        Several ranks lost in the same lease window are excluded in
+        **one** sweep (:meth:`BlockPool.fail_partitions`): one free-list
+        rebuild, one victim drain, one conservation check — never N
+        sequential recoveries.
         """
         assert self._paged, \
             "decode-rank loss recovery needs the paged pool (paged=True)"
         if n_ranks is None:
             n_ranks = max(1, int(self.mesh.shape.get("data", 1)))
-        rank = min(int(rank), n_ranks - 1)
-        lost = self.pool.fail_partition(rank, n_ranks)
+        dead = sorted({min(int(r), n_ranks - 1) for r in ranks})
+        lost = self.pool.fail_partitions(dead, n_ranks)
         self._dead_slots |= {i for i in range(self.srv.max_batch)
                              if i in lost and i < self.pool.reserved}
         victims = [(req.rid, i, req) for i, req in enumerate(self.slots)
@@ -807,6 +898,31 @@ class Server:
         self.pool.check_conservation()
         return len(drained)
 
+    def admit_decode_rank(self, rank: int, n_ranks: Optional[int] = None):
+        """Scale the pool back out: re-admit decode rank ``rank``'s span.
+
+        The membership detector drives this at an epoch boundary when a
+        joiner (a recovered victim, or fresh capacity) announces itself.
+        Quarantined ids in the span return to the free list
+        (:meth:`BlockPool.restore_partition` — admission capacity grows
+        back by exactly that many blocks), and batch rows whose parking
+        block was in the span rejoin capacity: they are re-parked (their
+        tables point at their own parking block again) and removed from
+        ``_dead_slots``.  Returns the number of block ids restored.
+        """
+        assert self._paged, \
+            "decode-rank admission needs the paged pool (paged=True)"
+        if n_ranks is None:
+            n_ranks = max(1, int(self.mesh.shape.get("data", 1)))
+        span = self.pool.restore_partition(min(int(rank), n_ranks - 1),
+                                           n_ranks)
+        revived = {i for i in self._dead_slots if i in span}
+        for i in sorted(revived):
+            self.cache = self._park_fn(self.cache, jnp.int32(i))
+        self._dead_slots -= revived
+        self.pool.check_conservation()
+        return len(span)
+
     def step(self):
         """One scheduler tick: admit, run one prefill chunk, decode.
 
@@ -814,9 +930,23 @@ class Server:
         kills are delivered here at host level (compiled steps never
         re-enter the conduit) and handled in place via
         :meth:`fail_decode_rank` — serving absorbs the loss instead of
-        propagating it."""
+        propagating it.  With a
+        :class:`~repro.runtime.membership.MembershipService` attached,
+        the *detector* decides instead: the plan only suppresses victims'
+        leases, the service declares at a lease deadline, and its
+        :class:`~repro.runtime.membership.MembershipEvent` drives
+        :meth:`fail_decode_ranks` (one call per epoch bump, however many
+        ranks died) and :meth:`admit_decode_rank` (scale-out joins)."""
         self._ticks += 1
-        if self.fault_plan is not None:
+        if self.membership is not None:
+            ev = self.membership.on_step(self._ticks)
+            if ev is not None:
+                n = self.membership.n_ranks
+                if ev.died:
+                    self.fail_decode_ranks(ev.died, n_ranks=n)
+                for r in ev.joined:
+                    self.admit_decode_rank(r, n_ranks=n)
+        elif self.fault_plan is not None:
             from repro.core.conduit import RankFailure
             try:
                 self.fault_plan.on_step(self._ticks, "serve_step")
@@ -885,6 +1015,7 @@ class Server:
                 "recoveries": float(self.recoveries),
                 "reprefilled_tokens": float(self.reprefilled_tokens),
                 "lost_blocks": float(self.pool.lost_blocks),
+                "quarantined_blocks": float(self.pool.quarantined_blocks),
                 "dead_slots": float(len(self._dead_slots)),
             })
         return out

@@ -58,12 +58,15 @@ class Trainer:
     def __init__(self, cfg: ModelConfig, scfg: StepConfig, tcfg: TrainerConfig,
                  data: SyntheticLM, mesh=None,
                  log_fn: Callable[[str], None] = print,
-                 fault_plan=None):
+                 fault_plan=None, membership=None):
         self.cfg, self.scfg, self.tcfg = cfg, scfg, tcfg
         self.data = data
         self.log = log_fn
         self.mesh = mesh
         self.fault_plan = fault_plan
+        # live detector path: a MembershipService polled at every host
+        # step — its declarations (not scripted raises) drive recovery
+        self.membership = membership
         self.elastic: Optional[ElasticRuntime] = None
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, tcfg.ckpt_interval,
                                       tcfg.keep_last)
@@ -137,6 +140,24 @@ class Trainer:
         n_failures = 0
 
         while step < self.tcfg.total_steps:
+            if self.membership is not None:
+                ev = self.membership.on_step(step)
+                if ev is not None and ev.died:
+                    n_failures += 1
+                    failure = self.membership.failure_for(ev)
+                    self.log(f"[trainer] step {step}: membership epoch "
+                             f"{ev.epoch} declared ranks {list(ev.died)} "
+                             f"dead; elastic recovery #{n_failures}")
+                    mesh = self._recover_mesh(mesh, failure)
+                    params, opt, step = self._restore_or_init(mesh)
+                    continue
+                if ev is not None and ev.joined:
+                    self.log(f"[trainer] step {step}: membership epoch "
+                             f"{ev.epoch} admitted ranks "
+                             f"{list(ev.joined)}; scaling out")
+                    mesh = self._scale_out(mesh)
+                    params, opt, step = self._restore_or_init(mesh)
+                    continue
             batch = self.data.global_batch(step)
             t0 = time.perf_counter()
             try:
@@ -217,4 +238,38 @@ class Trainer:
                          f"to hold the global batch")
                 self.scfg = refit_step_config(self.scfg, old_data, new_data)
             return self.elastic.mesh()
+        return self.elastic.mesh()
+
+    def _scale_out(self, mesh, device=None):
+        """Admit a joining device and re-expand the data axis.
+
+        The inverse of :meth:`_recover_mesh`: the
+        :class:`~repro.runtime.elastic.ElasticRuntime` joins the device
+        (the first spare when ``None``), re-forms conduits over the grown
+        axis, and grad accumulation *divides* so the global batch stays
+        constant.  When no spare device exists (a logical membership
+        wider than the host's device pool), the mesh is left unchanged —
+        the join is a pool-level event only.
+        """
+        model = mesh.shape.get("model", 1)
+        if self.elastic is None:
+            self.elastic = ElasticRuntime(
+                model=model, axis_names=tuple(mesh.axis_names),
+                devices=list(mesh.devices.flat),
+                fault_plan=self.fault_plan)
+        try:
+            report = self.elastic.on_join(
+                device, microbatches=self.scfg.microbatches,
+                grad_bucket_bytes=self.scfg.grad_bucket_bytes
+                or DEFAULT_BUCKET_BYTES)
+        except RuntimeError as e:
+            self.log(f"[trainer] scale-out skipped: {e}")
+            return self.elastic.mesh()
+        old_data = dict(report.old_shape).get("data", 1)
+        new_data = dict(report.new_shape).get("data", 1)
+        if new_data != old_data:
+            self.log(f"[trainer] data axis {old_data} -> {new_data}: "
+                     f"grad accumulation /{new_data // old_data} "
+                     f"to hold the global batch")
+            self.scfg = refit_step_config(self.scfg, old_data, new_data)
         return self.elastic.mesh()

@@ -361,3 +361,206 @@ class TestTrainRecovery:
         got = {h["step"]: round(h["loss"], 5) for h in t.history}
         for step in range(5, 7):                # post-recovery steps
             assert got[step] == clean[step], (step, got[step], clean[step])
+
+
+# ---------------------------------------------------------------------------
+# retry budget + wrapped schedules (satellite: RetryingConduit gaps)
+# ---------------------------------------------------------------------------
+
+
+class TestRetryBudget:
+    def test_max_elapsed_validated(self):
+        with pytest.raises(ValueError):
+            conduit.Conduit("x").with_retry(max_elapsed_s=-1.0)
+
+    def test_backoff_schedule_deterministic(self, monkeypatch):
+        """Backoff doubles per attempt: backoff, 2*backoff, 4*backoff..."""
+        slept = []
+        monkeypatch.setattr(conduit.time, "sleep", slept.append)
+        rc = conduit.Conduit("x").with_retry(attempts=4, backoff=0.1)
+        plan = FaultPlan().kill_rank(1, at_step=0)
+        with plan:
+            with pytest.raises(RankFailure):
+                rc._attempt(conduit.check_failure, "all_reduce", "x")
+        assert slept == [0.1, 0.2, 0.4]        # no sleep after last attempt
+
+    def test_total_deadline_budget_caps_attempts(self, monkeypatch):
+        """max_elapsed_s bounds the summed backoff: an attempt whose
+        preceding sleep would blow the budget is never made."""
+        slept = []
+        monkeypatch.setattr(conduit.time, "sleep", slept.append)
+        rc = conduit.Conduit("x").with_retry(attempts=10, backoff=1.0,
+                                             max_elapsed_s=4.0)
+        plan = FaultPlan().kill_rank(1, at_step=0)
+        with plan:
+            with pytest.raises(RankFailure):
+                rc._attempt(conduit.check_failure, "all_reduce", "x")
+        # delays 1, 2 fit (3 <= 4); the next delay 4 would reach 7 > 4
+        assert slept == [1.0, 2.0]
+
+    def test_streamed_retries_per_chunk(self):
+        n = min(4, len(jax.devices()))
+        mesh = _mesh1d(n)
+        cd = conduit.Conduit("x", "xla")
+        rc = cd.with_retry(attempts=3)
+        x = jax.random.normal(jax.random.PRNGKey(1), (n * 4, 6))
+
+        def run(c):
+            def f(v):
+                chunks = jnp.split(v, 2)
+                return jnp.concatenate(c.streamed("all_gather", chunks))
+            return np.asarray(jax.shard_map(
+                f, mesh=mesh, in_specs=P("x"), out_specs=P("x"))(x))
+
+        want = run(cd)
+        plan = FaultPlan().drop_op(op="all_gather", count=2)
+        with plan:
+            got = run(rc)                      # each chunk retries its drop
+        np.testing.assert_array_equal(got, want)
+
+    def test_matmul_schedule_retries(self):
+        rc = conduit.Conduit("x", "ring").with_retry(attempts=2)
+        plan = FaultPlan().drop_op(op="matmul_schedule", count=1)
+        with plan:
+            assert rc.matmul_schedule("matmul_ag", 1 << 20) == "ring"
+        # budget exhausted mid-way re-raises
+        plan = FaultPlan().drop_op(op="matmul_schedule", count=5)
+        with plan:
+            with pytest.raises(RankFailure):
+                rc.matmul_schedule("matmul_ag", 1 << 20)
+
+
+# ---------------------------------------------------------------------------
+# quarantine backpressure (satellite: no cache wipe on doomed allocs)
+# ---------------------------------------------------------------------------
+
+
+class TestQuarantineBackpressure:
+    def test_doomed_alloc_preserves_prefix_cache(self):
+        """Regression: an alloc the pool can never cover must raise
+        WITHOUT first evicting the whole prefix cache."""
+        pool = BlockPool(12, reserved=0)
+        bids = pool.alloc(4)
+        pool.cache_insert(b"hot", bids)
+        pool.release(bids)                     # entry pin is the only ref
+        assert pool.cached_entries == 1
+        with pytest.raises(MemoryError):
+            pool.alloc(13)                     # beyond free + evictable
+        assert pool.cached_entries == 1        # cache SURVIVED the failure
+        assert pool.evictions == 0
+        pool.check_conservation()
+
+    def test_feasible_alloc_still_evicts(self):
+        pool = BlockPool(8, reserved=0)
+        bids = pool.alloc(4)
+        pool.cache_insert(b"hot", bids)
+        pool.release(bids)
+        got = pool.alloc(6)                    # needs the entry's blocks
+        assert len(got) == 6 and pool.evictions == 1
+        pool.check_conservation()
+
+    def test_capacity_shrinks_under_quarantine(self):
+        pool = BlockPool(16, reserved=0)
+        pool.fail_partitions([0, 1], 4)        # half the pool goes dark
+        assert pool.quarantined_blocks == 8
+        assert pool.usable_blocks() == 8
+        assert pool.can_cover(8) and not pool.can_cover(9)
+        with pytest.raises(MemoryError):
+            pool.alloc(9)
+        pool.check_conservation()
+        # restore one span: capacity grows back by exactly its size
+        pool.restore_partition(0, 4)
+        assert pool.quarantined_blocks == 4 and pool.can_cover(12)
+        pool.check_conservation()
+
+    def test_restore_waits_for_straggler_refs(self):
+        pool = BlockPool(8, reserved=0)
+        held = pool.alloc(8)                   # every block live
+        pool.fail_partition(0, 2)              # span [0, 4) lost, still held
+        assert pool.quarantined_blocks == 0    # nothing drained yet
+        pool.restore_partition(0, 2)           # un-lose the span
+        pool.release(held)
+        pool.check_conservation()
+        assert pool.free_blocks == 8           # held blocks freed normally
+
+    def test_server_burst_defers_instead_of_oom(self, mesh22):
+        """An admission burst while a partition is quarantined must defer
+        (requests stay queued) rather than MemoryError — and complete
+        once capacity allows."""
+        cfg = get_config("smollm-360m").reduced()
+        params, _, _ = _params_on(cfg, mesh22)
+        srv = Server(cfg, params, mesh22, srv=ServerConfig(
+            max_batch=2, max_seq=64, max_new_tokens=4, prefill_chunk=4,
+            paged=True, block_size=4))
+        srv.fail_decode_rank(1, n_ranks=2)     # half the pool quarantined
+        assert srv.pool.quarantined_blocks > 0
+        rng = np.random.default_rng(2)
+        for s in (8, 9, 7, 10):                # burst past the shrunk target
+            srv.submit(rng.integers(0, cfg.vocab_size, size=s))
+        srv.run()                              # must not raise MemoryError
+        assert len(srv.done) == 4              # everyone completed
+        assert srv.stats()["quarantined_blocks"] > 0
+        srv.pool.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# scale-out growth (satellite: join path arithmetic + runtime)
+# ---------------------------------------------------------------------------
+
+
+class TestScaleOut:
+    def test_scaled_microbatches_growth(self):
+        assert scaled_microbatches(4, 1, 2) == 2    # joiner takes shards back
+        assert scaled_microbatches(6, 2, 6) == 2
+        with pytest.raises(RuntimeError):
+            scaled_microbatches(3, 2, 4)            # does not split evenly
+        with pytest.raises(RuntimeError):
+            scaled_microbatches(4, 2, 3)            # not clean either way
+
+    def test_refit_step_config_growth(self):
+        s = StepConfig(microbatches=4, grad_bucket_bytes=2 << 20)
+        r = refit_step_config(s, 2, 4)
+        assert r.microbatches == 2                  # global batch held
+        assert r.grad_bucket_bytes == 4 << 20       # per-hop msg held
+        with pytest.raises(RuntimeError):
+            refit_step_config(StepConfig(microbatches=3), 2, 4)
+
+    def test_elastic_mesh_join_and_spares(self):
+        from repro.runtime.elastic import ElasticMesh
+        devs = jax.devices()
+        if len(devs) < 4:
+            pytest.skip("needs >= 4 host devices")
+        em = ElasticMesh(model=1, devices=list(devs[:3]))
+        em.fail(2)
+        assert [d.id for d in em.spares()] == [d.id for d in devs[2:]]
+        mesh = em.join(devs[2])
+        assert mesh.shape["data"] == 3
+        assert [d.id for d in em.spares()] == [d.id for d in devs[3:]]
+        em.join(devs[2])                            # idempotent re-join
+        assert len(em.devices) == 3
+
+    def test_multi_rank_failure_one_report(self):
+        from repro.runtime.elastic import ElasticRuntime
+        devs = jax.devices()
+        if len(devs) < 3:
+            pytest.skip("needs >= 3 host devices")
+        rt = ElasticRuntime(model=1, devices=list(devs[:3]))
+        failure = RankFailure(1, "membership", "batch", ranks=(1, 2))
+        report = rt.on_failure(failure, microbatches=1)
+        assert len(rt.reports) == 1                 # ONE recovery, not two
+        assert report.dead_ranks == (1, 2)
+        assert dict(report.new_shape)["data"] == 1
+        assert report.microbatches == 3             # global batch held
+
+    def test_on_join_expands_and_refits(self):
+        from repro.runtime.elastic import ElasticRuntime
+        devs = jax.devices()
+        if len(devs) < 2:
+            pytest.skip("needs >= 2 host devices")
+        rt = ElasticRuntime(model=1, devices=list(devs[:1]))
+        report = rt.on_join(microbatches=2)         # picks the first spare
+        assert report.joined_rank == 1
+        assert report.dead_ranks == () and report.dead_rank is None
+        assert dict(report.new_shape)["data"] == 2
+        assert report.microbatches == 1             # divided by the growth
+        assert set(report.conduits) == {"data"}

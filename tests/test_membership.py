@@ -1,0 +1,415 @@
+"""Live failure detection and membership epochs.
+
+The detector (``runtime/membership.MembershipService``) declares rank
+death from missed heartbeat leases — ``FaultPlan`` only *suppresses*
+victims' leases (``deliver="lease"``), it never raises the kill itself —
+and every membership change is a versioned epoch that conduit/AM handles
+carry and check.  The suite covers the detector's deterministic
+arithmetic, the epoch plumbing (``StaleEpoch`` on every collective and
+AM delivery built against a stale view), the hypothesis invariants over
+random churn interleavings, the on-wire heartbeat segment against the
+host mirror, and the end-to-end acceptance churn: a paged serve run that
+loses two decode ranks in one lease window (exactly one epoch bump) and
+later re-admits a joiner — token-identical to an unfailed run.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.core import conduit, pgas
+from repro.core.conduit import StaleEpoch
+from repro.dist.sharding import param_pspecs, to_shardings
+from repro.models.model import init_params
+from repro.runtime.faults import FaultPlan, RankFailure
+from repro.runtime.membership import (LeaseConfig, MembershipService,
+                                      build_heartbeat_wire)
+from repro.runtime.server import Server, ServerConfig
+
+
+def _run_to(svc, last_step):
+    """Drive the detector to ``last_step``; returns every event raised."""
+    evs = []
+    for s in range(last_step + 1):
+        ev = svc.on_step(s)
+        if ev is not None:
+            evs.append(ev)
+    return evs
+
+
+# ---------------------------------------------------------------------------
+# detector semantics
+# ---------------------------------------------------------------------------
+
+
+class TestLeaseConfig:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            LeaseConfig(lease_period=0)
+        with pytest.raises(ValueError):
+            LeaseConfig(k_misses=0)
+        with pytest.raises(ValueError):
+            LeaseConfig(step_time_s=0.0)
+
+    def test_raise_mode_plan_rejected(self):
+        # a raise-mode plan would deliver kills itself — the detector
+        # must be the only declaring authority
+        with pytest.raises(ValueError):
+            MembershipService(4, fault_plan=FaultPlan())
+
+
+class TestDetector:
+    def test_healthy_ranks_never_declared(self):
+        svc = MembershipService(4, LeaseConfig(lease_period=2, k_misses=3))
+        assert _run_to(svc, 40) == []
+        assert svc.epoch == 0 and svc.view().ranks == (0, 1, 2, 3)
+
+    def test_kill_detected_within_bound(self):
+        p, k, kill_at = 2, 3, 5
+        plan = FaultPlan(deliver="lease").kill_rank(1, at_step=kill_at)
+        svc = MembershipService(4, LeaseConfig(lease_period=p, k_misses=k),
+                                fault_plan=plan)
+        evs = _run_to(svc, 40)
+        assert len(evs) == 1 and evs[0].died == (1,)
+        # detection strictly inside the lease_period x (K+1) bound
+        assert evs[0].step - kill_at < p * (k + 1)
+        assert svc.epoch == 1 and not svc.alive(1)
+
+    def test_double_loss_one_epoch_bump(self):
+        plan = (FaultPlan(deliver="lease")
+                .kill_rank(1, at_step=5).kill_rank(3, at_step=5))
+        svc = MembershipService(4, LeaseConfig(lease_period=1, k_misses=2),
+                                fault_plan=plan)
+        evs = _run_to(svc, 30)
+        assert len(evs) == 1                   # ONE view change, not two
+        assert evs[0].died == (1, 3) and svc.epoch == 1
+        assert svc.view().ranks == (0, 2)
+
+    def test_pacing_independence(self):
+        """Jumping the clock in one call equals stepping one-by-one."""
+        def mk():
+            plan = (FaultPlan(deliver="lease")
+                    .kill_rank(2, at_step=4).miss_lease(0, at_step=9,
+                                                        count=1))
+            return MembershipService(4, LeaseConfig(lease_period=2,
+                                                    k_misses=2),
+                                     fault_plan=plan)
+        paced = mk()
+        evs_paced = _run_to(paced, 25)
+        jumped = mk()
+        ev = jumped.on_step(25)               # one call, same clock
+        assert ev == evs_paced[-1]
+        assert jumped.epoch == paced.epoch
+        assert jumped.view() == paced.view()
+
+    def test_transient_misses_below_k_tolerated(self):
+        plan = FaultPlan(deliver="lease").miss_lease(1, at_step=6, count=2)
+        svc = MembershipService(4, LeaseConfig(lease_period=1, k_misses=3),
+                                fault_plan=plan)
+        assert _run_to(svc, 30) == []          # 2 misses < K=3: no declare
+        assert svc.alive(1)
+
+    def test_am_delay_burst_no_false_positive(self):
+        # a 2-period delay burst lags every arrival; misses stay < K
+        cfg = LeaseConfig(lease_period=1, k_misses=3, step_time_s=1e-3)
+        plan = FaultPlan(deliver="lease").delay_am(2e-3, at_step=4)
+        svc = MembershipService(4, cfg, fault_plan=plan)
+        assert _run_to(svc, 40) == []
+        assert svc.epoch == 0
+
+    def test_join_admitted_at_boundary(self):
+        svc = MembershipService(3, LeaseConfig(lease_period=2, k_misses=2))
+        svc.schedule_join(3, at_step=7)
+        evs = _run_to(svc, 20)
+        assert len(evs) == 1 and evs[0].joined == (3,)
+        assert evs[0].step >= 7               # never before the announce
+        assert svc.view().ranks == (0, 1, 2, 3) and svc.alive(3)
+
+    def test_victim_rejoins_after_repair(self):
+        plan = FaultPlan(deliver="lease").kill_rank(2, at_step=3)
+        svc = MembershipService(3, LeaseConfig(lease_period=1, k_misses=2),
+                                fault_plan=plan)
+        evs = _run_to(svc, 10)
+        assert evs[-1].died == (2,)
+        svc.schedule_join(2, at_step=12)
+        evs = _run_to(svc, 30)
+        assert evs[-1].joined == (2,)
+        # declaration repaired the plan, so the rejoined rank's leases
+        # publish again and it stays a member
+        assert svc.alive(2) and svc.epoch == 2
+
+    def test_failure_for_carries_batch(self):
+        plan = (FaultPlan(deliver="lease")
+                .kill_rank(1, at_step=2).kill_rank(2, at_step=2))
+        svc = MembershipService(4, LeaseConfig(lease_period=1, k_misses=2),
+                                fault_plan=plan)
+        ev = _run_to(svc, 10)[0]
+        failure = svc.failure_for(ev)
+        assert isinstance(failure, RankFailure)
+        assert failure.ranks == (1, 2) and failure.rank == 1
+
+
+# ---------------------------------------------------------------------------
+# epoch plumbing (StaleEpoch on stale handles)
+# ---------------------------------------------------------------------------
+
+
+class TestEpochs:
+    def test_check_epoch_without_provider_is_noop(self):
+        conduit.clear_epoch_provider()
+        conduit.check_epoch("all_reduce", 7)   # no provider: opt-out
+        assert conduit.current_epoch() is None
+
+    def test_stale_epoch_typed(self):
+        conduit.install_epoch_provider(lambda: 3)
+        try:
+            conduit.check_epoch("all_reduce", 3)   # current: fine
+            with pytest.raises(StaleEpoch) as ei:
+                conduit.check_epoch("all_reduce", 2)
+            assert ei.value.built == 2 and ei.value.current == 3
+            assert isinstance(ei.value, RankFailure)
+        finally:
+            conduit.clear_epoch_provider()
+
+    def test_bound_conduit_raises_after_bump(self, mesh4):
+        plan = FaultPlan(deliver="lease").kill_rank(1, at_step=3)
+        svc = MembershipService(4, LeaseConfig(lease_period=1, k_misses=2),
+                                fault_plan=plan)
+        x = np.ones((8, 4), np.float32)
+        with svc:
+            cd = svc.bind(conduit.Conduit("x", "xla"))
+            assert cd.epoch == 0
+            jax.shard_map(lambda v: cd.all_gather(v), mesh=mesh4,
+                          in_specs=P("x"), out_specs=P("x"))(x)
+            _run_to(svc, 12)
+            assert svc.epoch == 1
+            with pytest.raises(StaleEpoch):
+                jax.shard_map(lambda v: cd.all_gather(v), mesh=mesh4,
+                              in_specs=P("x"), out_specs=P("x"))(x)
+            # a re-bound handle is current again
+            cd2 = svc.bind(conduit.Conduit("x", "xla"))
+            jax.shard_map(lambda v: cd2.all_gather(v), mesh=mesh4,
+                          in_specs=P("x"), out_specs=P("x"))(x)
+
+    def test_retrying_conduit_never_retries_stale(self):
+        """StaleEpoch passes straight through the retry loop: retrying a
+        collective built against a dead view can never succeed."""
+        calls = []
+        conduit.install_epoch_provider(lambda: 1)
+        try:
+            rc = conduit.Conduit("x", "xla", epoch=0).with_retry(attempts=5)
+
+            def op(*a, **k):
+                calls.append(1)
+                conduit.check_epoch("all_gather", 0)
+            with pytest.raises(StaleEpoch):
+                rc._attempt(op)
+            assert len(calls) == 1             # no second attempt
+        finally:
+            conduit.clear_epoch_provider()
+
+    def test_am_delivery_checks_epoch(self, mesh4):
+        import jax.numpy as jnp
+
+        from repro.core.am import (MAX_ARGS, HandlerRegistry,
+                                   am_request_short, make_args)
+
+        heap = pgas.SymmetricHeap(16)
+        gas = pgas.GlobalAddressSpace(mesh4, "x", heap)
+        seg = heap.alloc("slot", 1)
+        reg = HandlerRegistry()
+
+        def _h(heap_local, args, payload):
+            return (heap_local, jnp.int32(0),
+                    jnp.zeros((MAX_ARGS,), jnp.int32),
+                    jnp.zeros_like(payload))
+
+        opcode = reg.register_request("poke", _h)
+        conduit.install_epoch_provider(lambda: 2)
+        try:
+            def _send(epoch):
+                def _f(h):
+                    return am_request_short(
+                        reg, h, opcode, make_args(np.int32(seg.offset)),
+                        axis="x", perm=[(i, (i + 1) % 4) for i in range(4)],
+                        epoch=epoch)
+                return gas.run(_f)(gas.zeros_global())
+            _send(2)                           # current epoch: delivers
+            with pytest.raises(StaleEpoch):
+                _send(1)                       # stale epoch: refused
+        finally:
+            conduit.clear_epoch_provider()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: churn interleavings preserve the epoch invariants
+# ---------------------------------------------------------------------------
+
+
+class TestChurnProperties:
+    @settings(max_examples=20, deadline=None)
+    @given(events=st.lists(
+        st.tuples(st.sampled_from(["kill", "join", "miss"]),
+                  st.integers(0, 5), st.integers(1, 30)),
+        min_size=0, max_size=6),
+        p=st.integers(1, 3), k=st.integers(2, 3))
+    def test_epoch_monotone_one_bump_per_deadline(self, events, p, k):
+        """Random kill/join/miss interleavings: epochs bump by exactly one
+        per view change, every change lands on a lease deadline, and all
+        ranks declared at the same deadline share one bump."""
+        plan = FaultPlan(deliver="lease")
+        svc = MembershipService(4, LeaseConfig(lease_period=p, k_misses=k),
+                                fault_plan=plan)
+        joined = set()
+        for kind, rank, step in events:
+            if kind == "kill" and rank < 4:
+                plan.kill_rank(rank, at_step=step)
+            elif kind == "miss" and rank < 4:
+                plan.miss_lease(rank, at_step=step, count=1)
+            elif kind == "join" and rank >= 4 and rank not in joined:
+                joined.add(rank)
+                svc.schedule_join(rank, at_step=step)
+        evs = _run_to(svc, 40 + p * (k + 2))
+        # (a) epochs are contiguous and strictly monotone
+        assert [ev.epoch for ev in evs] == list(range(1, len(evs) + 1))
+        assert svc.epoch == len(evs)
+        for ev in evs:
+            # (b) every view change lands on a lease deadline; a stale
+            # handle from before it can never complete a collective
+            assert ev.step % p == 0
+            assert ev.died or ev.joined
+            with pytest.raises(StaleEpoch):
+                conduit.install_epoch_provider(lambda: svc.epoch)
+                try:
+                    conduit.check_epoch("all_reduce", ev.epoch - 1)
+                finally:
+                    conduit.clear_epoch_provider()
+        # (c) no step carries two view changes — simultaneous losses and
+        # joins batch into one bump
+        steps = [ev.step for ev in evs]
+        assert len(steps) == len(set(steps))
+        # every scripted kill was eventually declared (dead stays dead)
+        killed = {e.rank for e in plan.events if e.kind == "kill_rank"}
+        declared = {r for ev in evs for r in ev.died}
+        rejoined = {r for ev in evs for r in ev.joined}
+        assert killed <= declared | rejoined
+        for r in killed - rejoined:
+            assert not svc.alive(r)
+
+
+# ---------------------------------------------------------------------------
+# the on-wire heartbeat segment vs the host mirror
+# ---------------------------------------------------------------------------
+
+
+class TestHeartbeatWire:
+    def test_publish_fans_leases_out(self, mesh4):
+        heap = pgas.SymmetricHeap(32)
+        gas = pgas.GlobalAddressSpace(mesh4, "x", heap)
+        seg, publish, announce = build_heartbeat_wire(gas)
+        leases = np.arange(10, 14, dtype=np.float32)   # rank r -> 10 + r
+        g = publish(gas.zeros_global(), leases)
+        view = np.asarray(g).reshape(4, heap.size)
+        base = seg.symbol.offset
+        for rank in range(4):
+            # every rank's segment holds every peer's freshest lease
+            np.testing.assert_array_equal(
+                view[rank, base:base + 4], leases)
+            # and no join flags yet
+            assert not view[rank, base + 4:base + 8].any()
+
+    def test_announce_sets_flag_everywhere(self, mesh4):
+        heap = pgas.SymmetricHeap(32)
+        gas = pgas.GlobalAddressSpace(mesh4, "x", heap)
+        seg, publish, announce = build_heartbeat_wire(gas)
+        g = announce(2)(gas.zeros_global())
+        view = np.asarray(g).reshape(4, heap.size)
+        for rank in range(4):
+            flags = view[rank, seg.join_offset(0):seg.join_offset(0) + 4]
+            np.testing.assert_array_equal(flags, [0.0, 0.0, 1.0, 0.0])
+
+    def test_segment_is_idempotent_and_sized(self, mesh4):
+        heap = pgas.SymmetricHeap(32)
+        gas = pgas.GlobalAddressSpace(mesh4, "x", heap)
+        a = gas.heartbeat_segment()
+        b = gas.heartbeat_segment()            # second call reuses the alloc
+        assert a.symbol.offset == b.symbol.offset
+        assert a.words == 8
+        assert a.lease_offset(3) == a.symbol.offset + 3
+        assert a.join_offset(0) == a.symbol.offset + 4
+
+
+# ---------------------------------------------------------------------------
+# acceptance: detector-driven double loss + rejoin, token-identical
+# ---------------------------------------------------------------------------
+
+
+class TestChurnServe:
+    def _serve(self, mesh, prompts, plan=None, membership=None,
+               conserve_every_tick=False):
+        cfg = get_config("smollm-360m").reduced()
+        shape = jax.eval_shape(lambda kk: init_params(cfg, kk),
+                               jax.random.PRNGKey(0))
+        psh = to_shardings(mesh, param_pspecs(cfg, mesh, shape))
+        params = jax.jit(lambda kk: init_params(cfg, kk),
+                         out_shardings=psh)(jax.random.PRNGKey(0))
+        srv = Server(cfg, params, mesh, srv=ServerConfig(
+            max_batch=2, max_seq=64, max_new_tokens=6, prefill_chunk=4,
+            paged=True, block_size=4), fault_plan=plan,
+            membership=membership)
+        for p in prompts:
+            srv.submit(p)
+        steps = 0
+        while ((srv.queue or any(s is not None for s in srv.slots))
+               and steps < 300):
+            srv.step()
+            steps += 1
+            if conserve_every_tick:
+                srv.pool.check_conservation()
+        if membership is not None:
+            while (not any(ev.joined for ev in membership.events)
+                   and steps < 300):
+                srv.step()
+                steps += 1
+                if conserve_every_tick:
+                    srv.pool.check_conservation()
+        return srv
+
+    def test_double_loss_and_rejoin_tokens_identical(self, mesh22):
+        """Two decode ranks lose their lease in the same window; the
+        detector (not the script) declares both in ONE epoch bump, the
+        server drains/re-admits, a victim later rejoins at an epoch
+        boundary — and the tokens match the unfailed run bit for bit,
+        with pool conservation asserted at every tick."""
+        rng = np.random.default_rng(0)
+        cfg = get_config("smollm-360m").reduced()
+        prompts = [rng.integers(0, cfg.vocab_size, size=s)
+                   for s in (8, 11, 7)]
+        clean = self._serve(mesh22, prompts)
+        want = {r.rid: r.out_tokens for r in clean.done}
+
+        plan = (FaultPlan(deliver="lease")
+                .kill_rank(1, at_step=6).kill_rank(2, at_step=6)
+                .delay_am(1e-3, at_step=2))    # jitter burst: no FP
+        svc = MembershipService(4, LeaseConfig(lease_period=1, k_misses=2,
+                                               step_time_s=1e-3),
+                                fault_plan=plan)
+        svc.schedule_join(1, at_step=16)
+        churned = self._serve(mesh22, prompts, plan=plan, membership=svc,
+                              conserve_every_tick=True)
+        got = {r.rid: r.out_tokens for r in churned.done}
+        assert got == want                     # bitwise token identity
+
+        deaths = [ev for ev in svc.events if ev.died]
+        joins = [ev for ev in svc.events if ev.joined]
+        assert len(deaths) == 1 and deaths[0].died == (1, 2)
+        assert len(joins) == 1 and joins[0].joined == (1,)
+        assert svc.epoch == 2                  # one bump per view change
+        s = churned.stats()
+        assert s["recoveries"] >= 1
+        # the rejoin restored rank 1's span: rank 2's stays quarantined
+        assert s["quarantined_blocks"] > 0
+        churned.pool.check_conservation()

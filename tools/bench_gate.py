@@ -171,7 +171,10 @@ def check_elastic(path: str) -> int:
     the best-link train recovery vs the longest swept interval (shorter
     intervals can never cost more); per (arch, prompt, surviving
     fraction), the best-link tail-only re-admission vs full re-prefill
-    (prefix COW reuse can never lose)."""
+    (prefix COW reuse can never lose).  Plus the detector gates: measured
+    detection latency within the ``lease_period x (K+1)`` closed-form
+    bound, and a zero false-positive rate under the ``delay_am`` jitter
+    sweep."""
     with open(path) as f:
         payload = json.load(f)
     failures = []
@@ -210,6 +213,25 @@ def check_elastic(path: str) -> int:
               f"{best['link']} [{status}]")
         if best["speedup"] < FLOOR:
             failures.append((arch, s, f_, best["speedup"]))
+
+    detect = [r for r in payload.get("rows", [])
+              if r.get("suite") == "detection"]
+    if not detect:
+        print(f"bench_gate: no detection rows in {path}")
+        return 1
+    for r in detect:
+        if r["link"] != "qsfp":
+            continue
+        lat, bound, fp = (r["detection_latency_s"], r["bound_s"],
+                          r["fp_rate"])
+        ok = lat <= bound and fp == 0.0
+        status = "ok" if ok else "FAIL"
+        print(f"bench_gate: detector p={r['lease_period_s']*1e3:.0f}ms "
+              f"K={r['k_misses']}: latency {lat*1e3:.1f}ms "
+              f"(bound {bound*1e3:.1f}ms), fp {fp:.0%} [{status}]")
+        if not ok:
+            failures.append(("detection", r["lease_period_s"],
+                             r["k_misses"], lat, fp))
 
     claim = payload.get("claims", {}).get("serve_recovery_max_speedup_qsfp")
     print(f"bench_gate: best qsfp re-admission speedup: {claim}")
